@@ -1,0 +1,151 @@
+"""Benchmarks for the paper's architectural claims (one per claim).
+
+The paper has no task-accuracy tables; its claims are arithmetic-
+architectural.  Each bench below quantifies one claim; wall times are CPU
+proxies (the TPU numbers are structural: op counts / slice counts).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fractional as fr
+from repro.core import mrc, rns
+from repro.core.moduli import PROFILES, get_profile, required_digits
+from repro.core.rns_matmul import RnsDotConfig, rns_dot, rns_matmul_res
+
+
+def _t(f, *args, n=5):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def bench_pac_ops(report):
+    """Claim 2+6: PAC ops cost O(K) (linear in precision); binary multiply
+    partial products are quadratic."""
+    rng = np.random.default_rng(0)
+    x = rng.integers(-2**20, 2**20, 4096).astype(np.int32)
+    for name in ("rns5", "rns9", "rns12", "rns18"):
+        p = get_profile(name)
+        rx = rns.encode_int32(p, x)
+        mul = jax.jit(lambda a, b: rns.rns_mul(p, a, b))
+        us = _t(mul, rx, rx)
+        q = int(p.range_bits)
+        binary_pp = (q // 8 + 1) ** 2
+        report(f"pac_mul_{name}", us,
+               f"digits={p.n_digits} bits={p.range_bits:.0f} "
+               f"binary_8x8_partial_products={binary_pp}")
+
+
+def bench_deferred_norm(report):
+    """Claim 4: one slow normalization per product summation, not per MAC."""
+    p = get_profile("rns9")
+    n = 256
+    rng = np.random.default_rng(1)
+    xs = jnp.stack([fr.fr_encode(p, rng.uniform(-1, 1, 64).astype(np.float32))
+                    for _ in range(n)])
+
+    def deferred(xs):
+        return fr.fr_dot_deferred(p, xs, xs)
+
+    def per_mac(xs):
+        acc = None
+        for i in range(n):
+            prod = fr.fr_mul(p, xs[i], xs[i])
+            acc = prod if acc is None else fr.fr_add(p, acc, prod)
+        return acc
+
+    t_def = _t(jax.jit(deferred), xs, n=3)
+    t_mac = _t(jax.jit(per_mac), xs, n=3)
+    report("deferred_norm_dot256", t_def,
+           f"per_mac_normalize={t_mac:.0f}us speedup={t_mac/t_def:.1f}x "
+           f"slow_ops: 1 vs {n}")
+
+
+def bench_exactness(report):
+    """Claim 1: wide product summations are bit-exact in RNS; float accum
+    drifts."""
+    p = get_profile("rns9")
+    rng = np.random.default_rng(2)
+    for D in (4096, 65536):
+        a = rng.integers(-32767, 32768, (1, D)).astype(np.int64)
+        b = rng.integers(-32767, 32768, (D, 1)).astype(np.int64)
+        want = int((a.astype(object) @ b.astype(object))[0, 0])
+        rc = rns_matmul_res(
+            "rns9", rns.encode_int32(p, a.astype(np.int32)),
+            rns.encode_int32(p, b.astype(np.int32)))
+        got = int(rns.decode_exact(p, np.asarray(rc))[0, 0])
+        f32 = int(float((a.astype(np.float32) @ b.astype(np.float32))[0, 0]))
+        bf16 = int(float(
+            (a.astype(jnp.bfloat16) @ b.astype(jnp.bfloat16)).astype(
+                jnp.float32)[0, 0]))
+        report(f"exact_dot_n{D}", 0.0,
+               f"rns_err={abs(got-want)} f32_err={abs(f32-want)} "
+               f"bf16_err={abs(bf16-want)}")
+
+
+def bench_conversion_overhead(report):
+    """Claim 5: conversion pipelines amortize to negligible vs the matmul."""
+    p = get_profile("rns9")
+    rng = np.random.default_rng(3)
+    for MKN in (64, 256, 1024):
+        x = jnp.asarray(rng.standard_normal((MKN, MKN)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((MKN, MKN)), jnp.float32)
+        cfg = RnsDotConfig(profile="rns9", qx=14, qw=14)
+        t_full = _t(jax.jit(lambda x, w: rns_dot(x, w, cfg)), x, w, n=3)
+        # matmul-only on pre-converted residues
+        rx = rns.encode_int32(p, jnp.zeros((MKN, MKN), jnp.int32))
+        t_mm = _t(jax.jit(lambda a, b: rns_matmul_res("rns9", a, b)), rx, rx,
+                  n=3)
+        report(f"conversion_share_{MKN}", t_full,
+               f"matmul_only={t_mm:.0f}us conv+norm_share="
+               f"{max(0.0, 1 - t_mm / t_full):.2f}")
+
+
+def bench_precision_scaling(report):
+    """Claim 6: slices grow linearly with operand bits; binary partial
+    products quadratically (structural counts, hardware-independent)."""
+    rows = []
+    for q in (8, 16, 24, 32, 48):
+        k = required_digits(4096, q, q)
+        pp = max(1, (2 * q) // 8) ** 2 // 4  # 8x8 mults for a qxq multiply
+        rows.append(f"{q}b:rns={k},binary={max(1,(q//8))**2}")
+    report("precision_scaling", 0.0, " ".join(rows))
+
+
+def bench_rns_matmul_wall(report):
+    """CPU-proxy wall time: digit-sliced matmul (jnp + pallas-interpret)."""
+    rng = np.random.default_rng(4)
+    p = get_profile("rns9")
+    M = K = N = 256
+    A = rng.integers(-2000, 2000, (M, K)).astype(np.int32)
+    B = rng.integers(-2000, 2000, (K, N)).astype(np.int32)
+    ra, rb = rns.encode_int32(p, A), rns.encode_int32(p, B)
+    t_jnp = _t(jax.jit(lambda a, b: rns_matmul_res("rns9", a, b)), ra, rb, n=3)
+    from repro.kernels.rns_matmul.ops import rns_matmul
+
+    t_pal = _t(lambda a, b: rns_matmul("rns9", a.astype(jnp.int8),
+                                       b.astype(jnp.int8)), ra, rb, n=3)
+    xf = jnp.asarray(A, jnp.float32)
+    wf = jnp.asarray(B, jnp.float32)
+    t_f32 = _t(jax.jit(lambda a, b: a @ b), xf, wf, n=3)
+    report("rns_matmul_256", t_jnp,
+           f"pallas_interpret={t_pal:.0f}us f32_dense={t_f32:.0f}us "
+           f"slices={p.n_digits} (TPU target: int8 MXU @2x bf16 rate)")
+
+
+def run_all(report):
+    bench_pac_ops(report)
+    bench_deferred_norm(report)
+    bench_exactness(report)
+    bench_conversion_overhead(report)
+    bench_precision_scaling(report)
+    bench_rns_matmul_wall(report)

@@ -1,0 +1,146 @@
+"""Three-term roofline from the dry-run artifacts (TPU v5e constants).
+
+  compute    = HLO_dot_FLOPs / peak_bf16            (197 TFLOP/s per chip)
+  memory     = HLO write-traffic bytes / HBM bw     (819 GB/s per chip)
+  collective = collective wire bytes / ICI link bw  (50 GB/s per chip)
+
+All numerators are PER-DEVICE, extracted trip-count-aware from the
+post-SPMD compiled module (launch/hlo_cost.py).  The memory numerator is
+the post-fusion write-traffic model (every fusion result written once);
+read traffic roughly doubles it — both are recorded in the artifacts, we
+report the write model and flag memory-bound cells conservatively.
+
+MODEL_FLOPS = 6*N_active*tokens (train) or 2*N_active*tokens (inference),
+per device; the ratio MODEL_FLOPS/HLO_FLOPs exposes remat/attention/
+padding overheads (how much compiled compute is "useful").
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+PEAK_INT8 = 394e12           # int8 MXU rate (RNS digit slices)
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def shape_token_info(rec):
+    shape = rec["shape"]
+    n = rec["n_devices"]
+    table = {
+        "train_4k": (4096 * 256, 6),
+        "prefill_32k": (32768 * 32, 2),
+        "decode_32k": (128, 2),
+        "long_500k": (1, 2),
+    }
+    tokens, mult = table[shape]
+    return tokens, mult
+
+
+def analyze_record(rec):
+    if "skipped" in rec or "error" in rec:
+        return None
+    tokens, mult = shape_token_info(rec)
+    n_dev = rec["n_devices"]
+    model_flops = mult * rec["params_active"] * tokens / n_dev
+    t_compute = rec["flops_per_device"] / (
+        PEAK_INT8 if rec.get("rns") else PEAK_FLOPS)
+    # vector-unit floor (elementwise work: recurrences, norms, softmax)
+    t_vpu = rec.get("vflops_per_device", 0.0) / (PEAK_FLOPS / 8)
+    hbm = rec.get("hbm_write_bytes") or rec["bytes_per_device"]
+    t_memory = rec["memory"].get("hbm_write_bytes", hbm) / HBM_BW
+    t_memory = hbm / HBM_BW
+    t_coll = rec["collectives"]["total_wire_bytes"] / LINK_BW
+    terms = {"compute": max(t_compute, t_vpu), "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    total = max(terms.values())
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "rns": rec.get("rns", False),
+        "t_compute_s": t_compute,
+        "t_vpu_s": t_vpu,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_ratio": model_flops / max(rec["flops_per_device"], 1.0),
+        # roofline fraction: useful work at peak vs the bounding term
+        "roofline_frac": (model_flops / PEAK_FLOPS) / max(total, 1e-12),
+        "step_bound_s": total,
+    }
+
+
+def load_all(art_dir="artifacts/dryrun"):
+    out = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        rec = json.load(open(f))
+        r = analyze_record(rec)
+        if r is not None:
+            r["file"] = os.path.basename(f)
+            out.append(r)
+        elif "skipped" in rec:
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec["mesh"], "skipped": rec["skipped"]})
+    return out
+
+
+def markdown_table(rows, mesh="single", rns=False):
+    hdr = ("| arch | shape | compute s | vpu s | memory s | collective s | "
+           "dominant | useful (6ND/HLO) | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        if "skipped" in r:
+            if not rns:
+                lines.append(
+                    f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                    f"skipped (sub-quadratic rule) | — | — |")
+            continue
+        if r.get("rns", False) != rns:
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_vpu_s']:.3f} | {r['t_memory_s']:.3f} | "
+            f"{r['t_collective_s']:.3f} | **{r['dominant']}** | "
+            f"{r['useful_ratio']:.3f} | {r['roofline_frac']:.4f} |")
+    return "\n".join(lines)
+
+
+def main():
+    import os
+
+    sections = [("BASELINE (pre-§Perf, scatter dispatch / stepwise WKV / "
+                 "no microbatching)", "artifacts/dryrun", False)]
+    if os.path.isdir("artifacts/dryrun_opt"):
+        sections.append(("OPTIMIZED DEFAULTS (post-§Perf)",
+                         "artifacts/dryrun_opt", False))
+        sections.append(("RNS DATAPATH (paper technique, rns9 on MLPs)",
+                         "artifacts/dryrun_opt", True))
+    with open("artifacts/roofline.md", "w") as f:
+        for title, d, rns in sections:
+            rows = load_all(d)
+            if rns and not any(r.get("rns") for r in rows):
+                continue
+            f.write(f"\n# {title}\n")
+            for mesh in ("single", "multi"):
+                table = markdown_table(rows, mesh, rns=rns)
+                if table.count("\n") < 2:
+                    continue
+                f.write(f"\n## Roofline — {mesh} pod "
+                        f"({256 if mesh=='single' else 512} chips)\n\n")
+                f.write(table)
+                f.write("\n")
+    print(open("artifacts/roofline.md").read())
+    print("\nwrote artifacts/roofline.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+# One function per paper claim. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import os
+import sys
+
+
+def main() -> None:
+    rows = []
+
+    def report(name: str, us: float, derived: str = ""):
+        rows.append((name, us, derived))
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    print("name,us_per_call,derived")
+    from benchmarks import bench_core
+
+    bench_core.run_all(report)
+
+    # roofline summary from the newest dry-run artifacts
+    for tag, d in (("baseline", "artifacts/dryrun"),
+                   ("optimized", "artifacts/dryrun_opt")):
+        if not os.path.isdir(d):
+            continue
+        from benchmarks import roofline
+
+        recs = roofline.load_all(d)
+        done = [r for r in recs if "skipped" not in r and not r.get("rns")]
+        if done:
+            worst = min(done, key=lambda r: r["roofline_frac"])
+            best = max(done, key=lambda r: r["roofline_frac"])
+            report(f"roofline_cells_{tag}", float(len(done)),
+                   f"worst={worst['arch']}/{worst['shape']}/{worst['mesh']}"
+                   f"@{worst['roofline_frac']:.4f} "
+                   f"best={best['arch']}/{best['shape']}/{best['mesh']}"
+                   f"@{best['roofline_frac']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""The paper's own demo (Fig. 3): Mandelbrot via fractional RNS.
+
+"Complex number calculations are performed entirely in residue format
+using the newly developed fractional residue arithmetic.  The threshold
+comparison is also in residue." — and with the rns18 profile the fixed
+point carries ~55 fractional bits, exceeding float64's 53-bit mantissa
+(the paper: "exceeds the range of extended precision floating point").
+
+    PYTHONPATH=src python examples/mandelbrot_rns.py [--deep]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fractional as fr
+from repro.core.moduli import get_profile
+
+CHARS = " .:-=+*#%@"
+
+
+def mandelbrot_rns(profile, cr, ci, iters):
+    p = get_profile(profile)
+    shape = cr.shape
+    zr = fr.fr_encode(p, np.zeros(shape, np.float32))
+    zi = fr.fr_encode(p, np.zeros(shape, np.float32))
+    fcr = fr.fr_encode(p, cr.astype(np.float32))
+    fci = fr.fr_encode(p, ci.astype(np.float32))
+    esc = jnp.full(shape, iters, jnp.int32)
+
+    @jax.jit
+    def step(state, it):
+        zr, zi, esc = state
+        rr = fr.fr_mul_raw(p, zr, zr)      # PAC products at scale M_f^2
+        ii = fr.fr_mul_raw(p, zi, zi)
+        ri = fr.fr_mul_raw(p, zr, zi)
+        # |z|^2 >= 4 tested IN RESIDUE on the raw (deferred) value
+        escaped = fr.fr_ge_const(p, fr.fr_add(p, rr, ii), 4.0, raw=True)
+        esc = jnp.where((esc == iters) & escaped, it, esc)
+        # one slow normalization per term (deferred normalization)
+        zr2 = fr.fr_add(p, fr.fr_normalize(p, fr.fr_sub(p, rr, ii)), fcr)
+        zi2 = fr.fr_add(p, fr.fr_normalize(p, fr.fr_add(p, ri, ri)), fci)
+        return (zr2, zi2, esc), None
+
+    state = (zr, zi, esc)
+    for it in range(iters):
+        state, _ = step(state, it)
+    return np.asarray(state[2])
+
+
+def deep_precision_proof():
+    """Beyond-float64: two c values 1e-19 apart are THE SAME float64 number
+    but distinct RNS fixed-point values with visibly different orbits."""
+    from fractions import Fraction
+
+    import jax.numpy as jnp
+
+    from repro.core import fractional as fr
+    from repro.core.moduli import RnsProfile, greedy_coprime_moduli
+
+    deep = RnsProfile("rns24_deep", greedy_coprime_moduli(128, 24), 10)
+    print(f"profile rns24_deep: {deep.n_digits} digit slices, "
+          f"{deep.range_bits:.1f}-bit register, "
+          f"{np.log2(float(deep.M_f)):.1f} fractional bits "
+          "(float64 mantissa: 53)")
+    c0 = Fraction(-743643887037151, 10**15)   # a deep-zoom neighbourhood
+    eps = Fraction(1, 10**19)
+    cs = [c0, c0 + eps]
+    as_f64 = [float(c) for c in cs]
+    print(f"  c1 - c0 = 1e-19;  float64(c1) == float64(c0): "
+          f"{as_f64[0] == as_f64[1]}")
+    enc = jnp.asarray(fr.fr_encode_exact(deep, np.asarray(cs, dtype=object)))
+    # M_f ~ 2**69 exceeds device-float encode range: use the exact host path
+    zeros = np.asarray([Fraction(0), Fraction(0)], dtype=object)
+    zr = jnp.asarray(fr.fr_encode_exact(deep, zeros))
+    zi = jnp.asarray(fr.fr_encode_exact(deep, zeros))
+    ci_frac = Fraction(1318259042053300, 10**16)
+    ci = jnp.asarray(fr.fr_encode_exact(
+        deep, np.asarray([ci_frac, ci_frac], dtype=object)))
+    for it in range(30):
+        rr = fr.fr_mul_raw(deep, zr, zr)
+        ii = fr.fr_mul_raw(deep, zi, zi)
+        ri = fr.fr_mul_raw(deep, zr, zi)
+        zr = fr.fr_add(deep, fr.fr_normalize(deep, fr.fr_sub(deep, rr, ii)), enc)
+        zi = fr.fr_add(deep, fr.fr_normalize(deep, fr.fr_add(deep, ri, ri)), ci)
+    diff = fr.fr_decode_exact(deep, np.asarray(fr.fr_sub(deep, zr[:, 0:1],
+                                                         zr[:, 1:2])))
+    print(f"  after 30 RNS iterations the two orbits differ by "
+          f"{float(diff[0]):.3e} (exact residue arithmetic); float64 cannot "
+          "distinguish the two c values at all")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--width", type=int, default=100)
+    ap.add_argument("--height", type=int, default=32)
+    ap.add_argument("--iters", type=int, default=48)
+    ap.add_argument("--deep", action="store_true",
+                    help="rns18 render + a 69-fractional-bit precision "
+                         "proof beyond float64")
+    args = ap.parse_args()
+
+    if args.deep:
+        deep_precision_proof()
+        print()
+    profile = "rns12"  # render profile (device-encodable M_f)
+    p = get_profile(profile)
+    print(f"profile {profile}: {p.n_digits} digit slices, "
+          f"M_f = {p.M_f} (~{np.log2(float(p.M_f)):.1f} fractional bits)")
+
+    xs = np.linspace(-2.2, 0.8, args.width)
+    ys = np.linspace(-1.2, 1.2, args.height)
+    cr = np.repeat(xs[None, :], args.height, 0)
+    ci = np.repeat(ys[:, None], args.width, 1)
+
+    t0 = time.perf_counter()
+    esc = mandelbrot_rns(profile, cr, ci, args.iters)
+    dt = time.perf_counter() - t0
+    for row in esc:
+        print("".join(CHARS[min(int(v) * len(CHARS) // args.iters,
+                                len(CHARS) - 1)] for v in row))
+    print(f"\n{args.width*args.height} pixels x {args.iters} iters of "
+          f"sustained fractional RNS in {dt:.1f}s "
+          f"({args.width*args.height*args.iters/dt:.0f} RNS complex "
+          "iterations/s on CPU)")
+
+    # cross-check against float64 on a shallow region
+    zr = np.zeros_like(cr)
+    zi = np.zeros_like(ci)
+    esc64 = np.full(cr.shape, args.iters, np.int64)
+    with np.errstate(over="ignore", invalid="ignore"):
+        for it in range(args.iters):
+            mag = zr * zr + zi * zi
+            esc64 = np.where((esc64 == args.iters) & (mag >= 4.0), it, esc64)
+            zr, zi = zr * zr - zi * zi + cr, 2 * zr * zi + ci
+    agree = float(np.mean(esc64 == esc))
+    print(f"escape-iteration agreement with float64: {agree:.3f} "
+          "(boundary pixels differ by quantization)")
+
+
+if __name__ == "__main__":
+    main()

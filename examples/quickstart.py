@@ -1,0 +1,49 @@
+"""Quickstart: the RNS-TPU datapath in five minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mrc, rns
+from repro.core.moduli import get_profile
+from repro.core.rns_matmul import RnsDotConfig, rns_dot, rns_matmul_res
+
+# 1. A working register: 9 pairwise-coprime moduli <= 128 (8-bit words),
+#    ~62 bits of dynamic range — the Rez-9/18-class register of the paper.
+p = get_profile("rns9")
+print(f"moduli = {p.moduli}")
+print(f"range  = {p.range_bits:.1f} bits; M = {p.M}")
+
+# 2. Carry-free PAC arithmetic: every digit operates independently.
+a, b = np.int32(123456789), np.int32(-987654)
+ra, rb = rns.encode_int32(p, a), rns.encode_int32(p, b)
+prod = rns.rns_mul(p, ra, rb)
+print(f"{a} * {b} = {int(rns.decode_exact(p, np.asarray(prod)))} (exact, "
+      "computed in 9 parallel 8-bit lanes, no carries)")
+
+# 3. The paper's core claim: an entire product summation is PAC; the one
+#    "slow" normalization (mixed-radix conversion) happens once at the end.
+rng = np.random.default_rng(0)
+D = 65536
+x = rng.integers(-32767, 32768, (1, D)).astype(np.int32)
+w = rng.integers(-32767, 32768, (D, 1)).astype(np.int32)
+res = rns_matmul_res("rns9", rns.encode_int32(p, x), rns.encode_int32(p, w))
+exact = int(rns.decode_exact(p, np.asarray(res))[0, 0])
+want = int((x.astype(object) @ w.astype(object))[0, 0])
+f32 = int(float((x.astype(np.float32) @ w.astype(np.float32))[0, 0]))
+print(f"\n65536-term dot of int16 operands:")
+print(f"  python-int oracle : {want}")
+print(f"  RNS digit slices  : {exact}   (error {exact - want})")
+print(f"  float32 MAC       : {f32}   (error {f32 - want})")
+
+# 4. Drop-in float matmul through the digit-sliced datapath (custom_vjp
+#    makes it trainable; backward matmuls run in RNS too).
+xf = jnp.asarray(rng.standard_normal((4, 256)), jnp.float32)
+wf = jnp.asarray(rng.standard_normal((256, 8)), jnp.float32)
+y = rns_dot(xf, wf, RnsDotConfig(profile="rns9", qx=16, qw=16))
+ref = xf @ wf
+print(f"\nrns_dot vs float matmul: max rel err = "
+      f"{float(jnp.max(jnp.abs(y - ref)) / jnp.max(jnp.abs(ref))):.2e} "
+      "(16-bit quantization, exact accumulation)")

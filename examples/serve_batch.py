@@ -1,0 +1,48 @@
+"""Batched serving: prefill + greedy decode with per-row stopping.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch tinyllama-1.1b
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    eng = Engine(params, cfg, ServeConfig(
+        max_cache=args.prompt_len + args.new + 8, max_new_tokens=args.new))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
+    frontend = None
+    if cfg.frontend:
+        frontend = rng.standard_normal(
+            (args.batch, cfg.n_frontend_tokens, cfg.d_model)).astype(np.float32)
+
+    out = eng.generate(prompts.astype(np.int32), frontend=frontend)  # compile
+    t0 = time.perf_counter()
+    out = eng.generate(prompts.astype(np.int32), frontend=frontend)
+    dt = time.perf_counter() - t0
+    print(f"arch={args.arch} batch={args.batch} prompt={args.prompt_len} "
+          f"new={out.shape[1]}")
+    print(f"warm throughput: {out.size/dt:.1f} tok/s (CPU, smoke config)")
+    print("first row:", out[0][:16], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""Model / shape configuration dataclasses + the architecture registry."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+from repro.core.rns_matmul import RnsDotConfig
+from repro.models.moe import MoEConfig
+from repro.models.ssm import SSMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    family: str                       # dense|moe|ssm|hybrid|encdec|vlm|audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # per-layer programs (len == n_layers)
+    layer_types: tuple[str, ...] = ()      # attn|mla|mamba|rwkv
+    mlp_types: tuple[str, ...] = ()        # dense|moe|channelmix|none
+    # options
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    pos_emb: str = "rope"                  # rope|sinusoidal|none
+    norm: str = "rmsnorm"
+    act: str = "silu"
+    gated_mlp: bool = True
+    causal: bool = True
+    tie_embeddings: bool = False
+    emb_scale: bool = False                # gemma: embeddings * sqrt(d)
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    # encoder-decoder
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    enc_causal: bool = False
+    # modality frontend stub (precomputed embeddings fed via input_specs)
+    frontend: str | None = None            # audio|vision|None
+    n_frontend_tokens: int = 0
+    # numerics / paper technique
+    rns: RnsDotConfig | None = None
+    rns_targets: str = "mlp"               # mlp|attn|all
+    param_dtype: str = "float32"
+    remat: str = "full"                    # none|full
+    grad_accum: int = 1                    # microbatches per optimizer step
+    # attention execution
+    attn_dense_max: int = 1024             # dense/one-shot path below this Tq
+    attn_q_chunk: int = 512
+    attn_kv_chunk: int = 1024
+    # sharding hints
+    attn_shard_heads: bool = True          # heads -> model axis (GSPMD pads)
+    attn_batch_shard: bool = False         # attention DP over the full mesh
+    sub_quadratic: bool = False            # eligible for long_500k
+
+    def __post_init__(self):
+        if not self.layer_types:
+            object.__setattr__(self, "layer_types", ("attn",) * self.n_layers)
+        if not self.mlp_types:
+            object.__setattr__(self, "mlp_types", ("dense",) * self.n_layers)
+        assert len(self.layer_types) == self.n_layers
+        assert len(self.mlp_types) == self.n_layers
+
+    @property
+    def period(self) -> int:
+        """Smallest p with a periodic (layer, mlp) program; scan length = L/p."""
+        L = self.n_layers
+        prog = list(zip(self.layer_types, self.mlp_types))
+        for p in range(1, L + 1):
+            if L % p == 0 and all(
+                prog[i] == prog[i % p] for i in range(L)
+            ):
+                return p
+        return L
+
+    def params_count(self) -> int:
+        """Total parameters (exact from shapes; used for MODEL_FLOPS)."""
+        from repro.models.model import count_params_analytic
+
+        return count_params_analytic(self)
+
+    def active_params_count(self) -> int:
+        from repro.models.model import count_params_analytic
+
+        return count_params_analytic(self, active_only=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train|prefill|decode
+    sub_quadratic_only: bool = False
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode", True),
+    # reduced shapes for smoke tests / CI
+    "train_tiny": ShapeConfig("train_tiny", 128, 4, "train"),
+    "prefill_tiny": ShapeConfig("prefill_tiny", 128, 2, "prefill"),
+    "decode_tiny": ShapeConfig("decode_tiny", 128, 4, "decode"),
+}
+
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+_SMOKE: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(arch_id: str, full: Callable[[], ModelConfig],
+             smoke: Callable[[], ModelConfig]):
+    _REGISTRY[arch_id] = full
+    _SMOKE[arch_id] = smoke
+
+
+def get_config(arch_id: str, *, smoke: bool = False) -> ModelConfig:
+    import repro.configs.all_archs  # noqa: F401  (populates registry)
+
+    reg = _SMOKE if smoke else _REGISTRY
+    if arch_id not in reg:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_REGISTRY)}")
+    return reg[arch_id]()
+
+
+def list_archs() -> list[str]:
+    import repro.configs.all_archs  # noqa: F401
+
+    return sorted(_REGISTRY)
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether (arch, shape) is a valid dry-run cell, else the skip reason."""
+    if shape.sub_quadratic_only and not cfg.sub_quadratic:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.arch_id} is full-attention (see DESIGN.md §6)"
+        )
+    return True, ""

@@ -1,0 +1,14 @@
+"""Core RNS arithmetic — the paper's contribution as a composable JAX module."""
+
+from repro.core.moduli import RnsProfile, get_profile, PROFILES, required_digits
+from repro.core.rns_matmul import RnsDotConfig, rns_dot, rns_dot_fwd_only
+
+__all__ = [
+    "RnsProfile",
+    "get_profile",
+    "PROFILES",
+    "required_digits",
+    "RnsDotConfig",
+    "rns_dot",
+    "rns_dot_fwd_only",
+]

@@ -1,0 +1,149 @@
+"""Olsen fractional RNS (US20130311532): v is carried as X = round(v * M_f).
+
+* add/sub: PAC (single digit-parallel op).
+* multiply: PAC digit product (scale M_f^2) + "slow" normalization
+  (scale_signed divides by M_f with rounding).
+* product summation: all multiplies/accumulates are PAC at scale M_f^2;
+  ONE normalization at the end — the deferred-normalization claim.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import mrc
+from repro.core.moduli import get_profile, RnsProfile
+from repro.core.rns import (
+    encode_int32,
+    encode_exact,
+    decode_exact,
+    rns_add,
+    rns_sub,
+    rns_neg,
+    rns_mul,
+    rns_scale_const,
+    tables,
+)
+
+__all__ = [
+    "fr_encode",
+    "fr_encode_exact",
+    "fr_decode",
+    "fr_decode_exact",
+    "fr_add",
+    "fr_sub",
+    "fr_neg",
+    "fr_mul",
+    "fr_mul_raw",
+    "fr_normalize",
+    "fr_from_int",
+    "fr_ge_const",
+    "fr_dot_deferred",
+]
+
+
+def _p(profile) -> RnsProfile:
+    return get_profile(profile) if isinstance(profile, str) else profile
+
+
+def fr_encode(profile, x):
+    """Encode float tensor as fractional RNS (device path, |x|*M_f < 2**31)."""
+    p = _p(profile)
+    if p.M_f >= 2**31:
+        raise ValueError("M_f too large for device float encode; use fr_encode_exact")
+    import jax.numpy as jnp
+
+    v = jnp.round(jnp.asarray(x, jnp.float32) * np.float32(p.M_f)).astype(jnp.int32)
+    return encode_int32(p, v)
+
+
+def fr_encode_exact(profile, values) -> np.ndarray:
+    """Host-side exact encode from floats/Fractions via python ints."""
+    from fractions import Fraction
+
+    p = _p(profile)
+    vals = np.asarray(values, dtype=object).reshape(-1)
+    ints = [
+        int(round(Fraction(v) * p.M_f)) if not isinstance(v, int) else v * p.M_f
+        for v in vals
+    ]
+    out = encode_exact(p, np.asarray(ints, dtype=object))
+    return out.reshape((p.n_digits,) + np.asarray(values, dtype=object).shape)
+
+
+def fr_decode(profile, res, dtype=None):
+    import jax.numpy as jnp
+
+    p = _p(profile)
+    return mrc.decode_float(p, res, inv_scale=1.0 / p.M_f, dtype=dtype or jnp.float32)
+
+
+def fr_decode_exact(profile, res):
+    """Host-side exact decode to Fractions."""
+    from fractions import Fraction
+
+    p = _p(profile)
+    ints = decode_exact(p, res, signed=True)
+    flat = np.asarray(ints, dtype=object).reshape(-1)
+    out = np.asarray([Fraction(int(v), p.M_f) for v in flat], dtype=object)
+    return out.reshape(np.asarray(ints, dtype=object).shape)
+
+
+def fr_add(profile, x, y):
+    return rns_add(_p(profile), x, y)
+
+
+def fr_sub(profile, x, y):
+    return rns_sub(_p(profile), x, y)
+
+
+def fr_neg(profile, x):
+    return rns_neg(_p(profile), x)
+
+
+def fr_mul_raw(profile, x, y):
+    """PAC product at scale M_f^2 (deferred normalization)."""
+    return rns_mul(_p(profile), x, y)
+
+
+def fr_normalize(profile, raw):
+    """Divide a raw (M_f^2-scaled) value by M_f with rounding — the slow op."""
+    return mrc.scale_signed(_p(profile), raw, rounded=True)
+
+
+def fr_mul(profile, x, y):
+    return fr_normalize(profile, fr_mul_raw(profile, x, y))
+
+
+def fr_from_int(profile, n):
+    """Exact fractional encode of an integer tensor (PAC scale by M_f)."""
+    p = _p(profile)
+    return rns_scale_const(p, encode_int32(p, n), p.M_f)
+
+
+def fr_ge_const(profile, res, c: float, *, raw: bool = False):
+    """value >= c.  ``raw=True`` compares an M_f^2-scaled (unnormalized) value."""
+    from fractions import Fraction
+
+    p = _p(profile)
+    scale = p.M_f * p.M_f if raw else p.M_f
+    cint = int(round(Fraction(c) * scale))
+    return mrc.compare_ge_const(p, res, cint)
+
+
+def fr_dot_deferred(profile, xs, ys):
+    """Product summation: PAC MACs at scale M_f^2, ONE final normalization.
+
+    xs, ys: (n, K, ...) stacked fractional residues.  Returns fractional
+    residues of sum_i xs[i]*ys[i].  Exactness requires n * max|x*y| * M_f^2
+    < M/2.
+    """
+    import jax.numpy as jnp
+
+    p = _p(profile)
+    t = tables(p)
+    m = jnp.asarray(t.moduli).reshape((-1,) + (1,) * (xs.ndim - 2))
+    acc = jnp.zeros(xs.shape[1:], jnp.int32)
+    for i in range(xs.shape[0]):
+        acc = jnp.remainder(acc + xs[i] * ys[i], m)  # PAC MAC, carry-free
+    return fr_normalize(p, acc)

@@ -1,0 +1,171 @@
+"""Moduli selection for the RNS datapath.
+
+The paper encodes each RNS digit in an 8-bit word so that the digit-slice
+matmul array can reuse the TPU's 8x8-bit multipliers (Fig. 5).  On TPU the
+8-bit datapath is the signed-int8 MXU, so the default moduli are chosen
+<= 128: residues lie in [0, 127] and fit int8 exactly, with products
+<= 127**2 < 2**14, allowing ~2**17 int32 accumulations between modular
+reductions ("lazy reduction").  A <=256 ("u8") family is also provided for
+the pure-jnp path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import numpy as np
+
+__all__ = [
+    "greedy_coprime_moduli",
+    "RnsProfile",
+    "get_profile",
+    "PROFILES",
+    "required_digits",
+]
+
+
+def greedy_coprime_moduli(limit: int, count: int) -> tuple[int, ...]:
+    """Largest-first greedy pairwise-coprime moduli <= ``limit``."""
+    chosen: list[int] = []
+    cand = limit
+    while len(chosen) < count and cand >= 2:
+        if all(math.gcd(cand, m) == 1 for m in chosen):
+            chosen.append(cand)
+        cand -= 1
+    if len(chosen) < count:
+        raise ValueError(f"cannot find {count} coprime moduli <= {limit}")
+    return tuple(chosen)
+
+
+@dataclasses.dataclass(frozen=True)
+class RnsProfile:
+    """A static description of an RNS working register.
+
+    Attributes:
+      name: profile id.
+      moduli: pairwise-coprime digit moduli (descending).
+      frac_digits: how many leading moduli form the fractional base M_f
+        (Olsen's fractional RNS: value v is represented as round(v * M_f)).
+    """
+
+    name: str
+    moduli: tuple[int, ...]
+    frac_digits: int = 2
+
+    def __post_init__(self):
+        ms = self.moduli
+        for i in range(len(ms)):
+            for j in range(i + 1, len(ms)):
+                if math.gcd(ms[i], ms[j]) != 1:
+                    raise ValueError(f"moduli not coprime: {ms[i]}, {ms[j]}")
+        if not (0 < self.frac_digits < len(ms)):
+            raise ValueError("frac_digits must be in (0, n_digits)")
+
+    # ---- exact (python-int) derived quantities -------------------------
+    @property
+    def n_digits(self) -> int:
+        return len(self.moduli)
+
+    @functools.cached_property
+    def M(self) -> int:
+        """Full dynamic range (product of all moduli)."""
+        out = 1
+        for m in self.moduli:
+            out *= m
+        return out
+
+    @functools.cached_property
+    def M_f(self) -> int:
+        """Fractional base: product of the first ``frac_digits`` moduli."""
+        out = 1
+        for m in self.moduli[: self.frac_digits]:
+            out *= m
+        return out
+
+    @property
+    def range_bits(self) -> float:
+        return math.log2(self.M)
+
+    @property
+    def signed_bits(self) -> int:
+        """Guaranteed exact signed-magnitude bits (|X| < M/2)."""
+        return int(math.floor(self.range_bits)) - 1
+
+    @property
+    def max_digit(self) -> int:
+        return max(self.moduli)
+
+    @property
+    def lazy_chunk(self) -> int:
+        """Max #terms accumulable in int32 between modular reductions."""
+        return (2**31 - 1) // (self.max_digit - 1) ** 2
+
+    @property
+    def int8_safe(self) -> bool:
+        """Residues fit signed int8 (required by the Pallas MXU kernel)."""
+        return self.max_digit <= 128
+
+    def dot_capacity(self, qa: int, qw: int) -> int:
+        """Max #terms n of an exact signed dot product of qa x qw-bit operands.
+
+        Operands are signed fixed point: |a| <= 2**(qa-1), |w| <= 2**(qw-1),
+        so |sum| <= n * 2**(qa+qw-2); exactness needs that < M/2.
+        """
+        return self.M // (2 ** (qa + qw - 1))
+
+
+def _mk(name: str, n: int, frac: int, limit: int = 128) -> RnsProfile:
+    return RnsProfile(name, greedy_coprime_moduli(limit, n), frac)
+
+
+# Default family: <=128 moduli (int8 MXU-safe, the TPU adaptation of the
+# paper's "8-bit word per digit").  Bit widths are log2(M).
+PROFILES: dict[str, RnsProfile] = {
+    # ~34.8 bits: the "Google-TPU-equivalent-plus" register (int8 operand dots)
+    "rns5": _mk("rns5", 5, 1),
+    # ~41.9 bits: right-sized for 16x16-bit dots up to ~2k terms
+    "rns6": _mk("rns6", 6, 1),
+    # ~48.9 bits: 16x16-bit dots up to ~245k terms (every assigned arch's
+    # contraction fits — the "precision scales by slices" knob, downward)
+    "rns7": _mk("rns7", 7, 1),
+    # ~55.3 bits: 16x16-bit dots up to ~2**24 terms — covers the 1M-token
+    # weight-gradient contraction of train_4k (the capacity guard rejects
+    # rns7 for exactly that matmul)
+    "rns8": _mk("rns8", 8, 1),
+    # ~62.0 bits: Rez-9/18-class working register (default for model matmuls)
+    "rns9": _mk("rns9", 9, 2),
+    # ~108.9 bits, 16 digits: matches a 16-wide model axis exactly — the
+    # paper's digit-slice-per-unit layout as a sharding strategy (each chip
+    # owns one slice; digits meet only at normalization)
+    "rns16": _mk("rns16", 16, 4),
+    # ~82.0 bits
+    "rns12": _mk("rns12", 12, 3),
+    # ~124.4 bits: deep-precision register (Mandelbrot beyond-float64 demo)
+    "rns18": _mk("rns18", 18, 8),
+    # ~142.8 bits
+    "rns21": _mk("rns21", 21, 8),
+    # u8 family (moduli <= 256): jnp-path only, matches the paper's byte-wide
+    # digits most literally; residues do NOT fit signed int8.
+    "rns8_u8": RnsProfile("rns8_u8", greedy_coprime_moduli(256, 8), 2),
+}
+
+
+def get_profile(name: str) -> RnsProfile:
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise KeyError(f"unknown RNS profile {name!r}; have {sorted(PROFILES)}")
+
+
+def required_digits(n_terms: int, qa: int, qw: int, limit: int = 128) -> int:
+    """Napkin-math helper: #digit slices for an exact n-term qa x qw dot."""
+    need_bits = (qa + qw - 1) + math.log2(max(n_terms, 1))
+    moduli = greedy_coprime_moduli(limit, 24)
+    bits = 0.0
+    for k, m in enumerate(moduli, start=1):
+        bits += math.log2(m)
+        if bits > need_bits:
+            return k
+    raise ValueError("need more than 32 digits")

@@ -1,0 +1,151 @@
+"""Mixed-radix conversion (MRC), base extension, sign/compare, scaling.
+
+These are the paper's "slow" operations: O(K) sequential digit steps,
+O(K^2) digit ops total (the Rez-9's "18 clocks").  In the RNS-TPU design
+they run ONCE per product summation (deferred normalization) instead of
+once per multiply — the paper's central claim.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rns import tables, rns_neg, rns_add_const
+
+__all__ = [
+    "mrc_digits",
+    "is_negative",
+    "is_negative_digits",
+    "compare_ge_const",
+    "rns_sign",
+    "base_extend",
+    "scale_signed",
+    "decode_float",
+    "decode_int32",
+]
+
+
+def mrc_digits(profile, res):
+    """Mixed-radix digits d with X = sum_j d_j * prod_{i<j} m_i.
+
+    Sequential in K (unrolled; K <= ~21), vectorized over trailing dims.
+    """
+    t = tables(profile)
+    K = t.profile.n_digits
+    m = jnp.asarray(t.moduli).reshape((-1,) + (1,) * (res.ndim - 1))
+    r = res
+    digits = []
+    for i in range(K):
+        d = r[i]
+        digits.append(d)
+        if i + 1 < K:
+            inv = jnp.asarray(t.mrc_inv[i]).reshape(
+                (-1,) + (1,) * (res.ndim - 1)
+            )
+            # (r - d) may be negative: remainder() keeps it in [0, m)
+            r = jnp.remainder((r - d[None]) * inv, m)
+    return jnp.stack(digits, axis=0)
+
+
+def _lex_ge(digits, ref):
+    """Vectorized lexicographic (most-significant-last) digits >= ref."""
+    K = digits.shape[0]
+    ge = jnp.zeros(digits.shape[1:], bool)
+    eq = jnp.ones(digits.shape[1:], bool)
+    for j in range(K - 1, -1, -1):
+        ge = ge | (eq & (digits[j] > ref[j]))
+        eq = eq & (digits[j] == ref[j])
+    return ge | eq
+
+
+def is_negative_digits(profile, digits):
+    t = tables(profile)
+    ref = [jnp.int32(int(h)) for h in t.half_digits]
+    return _lex_ge(digits, ref)
+
+
+def is_negative(profile, res):
+    return is_negative_digits(profile, mrc_digits(profile, res))
+
+
+def compare_ge_const(profile, res, c: int):
+    """X_signed >= c, for |X|,|c| < M/2.  One MRC pass."""
+    t = tables(profile)
+    p = t.profile
+    # shift both by +c so the comparison becomes a sign test of X - c
+    shifted = rns_add_const(profile, res, (-int(c)) % p.M)
+    return ~is_negative(profile, shifted) if c != 0 else ~is_negative(profile, res)
+
+
+def rns_sign(profile, res):
+    """-1 / 0 / +1 of the signed value."""
+    digits = mrc_digits(profile, res)
+    neg = is_negative_digits(profile, digits)
+    zero = jnp.all(digits == 0, axis=0)
+    return jnp.where(zero, 0, jnp.where(neg, -1, 1)).astype(jnp.int32)
+
+
+def base_extend(profile, digits, n_src: int):
+    """Residues (all K moduli) of X = sum_{j<n_src} d_j W_j from MRC digits."""
+    t = tables(profile)
+    m = jnp.asarray(t.moduli).reshape((-1,) + (1,) * (digits.ndim - 1))
+    acc = jnp.zeros((t.profile.n_digits,) + digits.shape[1:], jnp.int32)
+    for j in range(n_src):
+        wj = jnp.asarray(t.ext[j]).reshape((-1,) + (1,) * (digits.ndim - 1))
+        acc = jnp.remainder(acc + digits[j][None] * wj, m)
+    return acc
+
+
+def scale_signed(profile, res, rounded: bool = True):
+    """round(X_signed / M_f) as residues — Olsen's fractional normalization.
+
+    Two MRC passes: one for sign detection, one on the magnitude (with a
+    +M_f/2 rounding bias).  The scaled magnitude is re-extended to the full
+    base via the precomputed (W_j / M_f mod m_k) table.
+    """
+    t = tables(profile)
+    p = t.profile
+    f = p.frac_digits
+    neg = is_negative(profile, res)
+    mag = jnp.where(neg[None], rns_neg(profile, res), res)
+    if rounded:
+        mag = rns_add_const(profile, mag, p.M_f // 2)
+    d = mrc_digits(profile, mag)
+    m = jnp.asarray(t.moduli).reshape((-1,) + (1,) * (res.ndim - 1))
+    acc = jnp.zeros_like(res)
+    for j in range(f, p.n_digits):
+        wj = jnp.asarray(t.ext_scaled[j - f]).reshape(
+            (-1,) + (1,) * (res.ndim - 1)
+        )
+        acc = jnp.remainder(acc + d[j][None] * wj, m)
+    return jnp.where(neg[None], rns_neg(profile, acc), acc)
+
+
+def decode_float(profile, res, inv_scale: float = 1.0, dtype=jnp.float32):
+    """Signed float reconstruction: value * inv_scale.
+
+    Negative values are negated to their magnitude BEFORE reconstruction
+    (decoding M - |X| and subtracting M would cancel catastrophically in
+    f32 since M is huge).  Constants are prepared in float64 on host.
+    """
+    t = tables(profile)
+    neg = is_negative(profile, res)
+    mag = jnp.where(neg[None], rns_neg(profile, res), res)
+    d = mrc_digits(profile, mag)
+    w = (t.W_f64 * float(inv_scale)).astype(np.float64)
+    acc = jnp.zeros(res.shape[1:], dtype)
+    for j in range(t.profile.n_digits):
+        acc = acc + d[j].astype(dtype) * jnp.asarray(w[j], dtype)
+    return jnp.where(neg, -acc, acc)
+
+
+def decode_int32(profile, res):
+    """Exact int32 decode for values with |X| < 2**31 (wrap arithmetic)."""
+    t = tables(profile)
+    d = mrc_digits(profile, res)
+    neg = is_negative_digits(profile, d)
+    acc = jnp.zeros(res.shape[1:], jnp.int32)
+    for j in range(t.profile.n_digits):
+        acc = acc + d[j] * jnp.int32(t.W_mod32[j])  # int32 wrap == mod 2**32
+    return acc - neg.astype(jnp.int32) * jnp.int32(t.M_mod32)

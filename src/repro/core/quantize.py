@@ -1,0 +1,34 @@
+"""Symmetric fixed-point quantization feeding the RNS conversion pipeline."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["absmax_scale", "quantize", "dequantize"]
+
+
+def absmax_scale(x, bits: int, axis=None, eps: float = 1e-12):
+    """Scale s such that round(x*s) uses <= ``bits`` signed bits.
+
+    axis=None -> per-tensor scalar; otherwise the scale is reduced over
+    ``axis`` (per-channel).  The scale is stop-gradient'ed (STE).
+    """
+    qmax = float(2 ** (bits - 1) - 1)
+    amax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(
+        jnp.abs(x), axis=axis, keepdims=True
+    )
+    s = qmax / jnp.maximum(amax, eps)
+    return jax.lax.stop_gradient(s)
+
+
+def quantize(x, bits: int, axis=None):
+    """Returns (int32 values, scale).  v = clip(round(x*s))."""
+    s = absmax_scale(x, bits, axis=axis)
+    qmax = 2 ** (bits - 1) - 1
+    v = jnp.clip(jnp.round(x * s), -qmax, qmax).astype(jnp.int32)
+    return v, s
+
+
+def dequantize(v, s):
+    return v.astype(jnp.float32) / s

@@ -1,0 +1,202 @@
+"""RNS codec and PAC (parallel-array-computation) ops.
+
+Residue layout convention: a value tensor of shape ``(...,)`` is represented
+by a residue tensor of shape ``(K, ...)`` with int32 digits, where K is the
+number of moduli of the profile.  Every PAC op is one elementwise modular op
+per digit, all digits independent — the paper's carry-free property.
+
+Exact (python-int) encode/decode helpers live here too; they are the test
+oracles for everything downstream.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.moduli import RnsProfile, get_profile
+
+__all__ = [
+    "Tables",
+    "tables",
+    "encode_int32",
+    "encode_float",
+    "encode_exact",
+    "decode_exact",
+    "rns_add",
+    "rns_sub",
+    "rns_neg",
+    "rns_mul",
+    "rns_scale_const",
+    "rns_add_const",
+    "to_int8",
+    "from_int8",
+]
+
+
+class Tables:
+    """Precomputed constant tables for a profile (host numpy; jit constants)."""
+
+    def __init__(self, p: RnsProfile):
+        self.profile = p
+        K = p.n_digits
+        ms = p.moduli
+        self.moduli = np.asarray(ms, np.int32)
+        # mrc_inv[i, j] = (m_i)^-1 mod m_j   (only used for j > i)
+        inv = np.ones((K, K), np.int64)
+        for i in range(K):
+            for j in range(K):
+                if j > i:
+                    inv[i, j] = pow(ms[i], -1, ms[j])
+        self.mrc_inv = inv.astype(np.int32)
+        # W_j = prod_{i<j} m_i (python ints, exact)
+        self.W: list[int] = [1] * K
+        for j in range(1, K):
+            self.W[j] = self.W[j - 1] * ms[j - 1]
+        # base-extension table: ext[j, k] = W_j mod m_k
+        self.ext = np.asarray(
+            [[w % m for m in ms] for w in self.W], np.int32
+        )
+        # scaled-weight table for scale-by-M_f: Wf_j = W_j // M_f for j >= f
+        f = p.frac_digits
+        self.Wf: list[int] = [self.W[j] // p.M_f for j in range(f, K)]
+        self.ext_scaled = np.asarray(
+            [[w % m for m in ms] for w in self.Wf], np.int32
+        )
+        # W_j mod 2**32 for exact int32 reconstruction (wrap arithmetic)
+        def _wrap32(x: int) -> int:
+            x %= 1 << 32
+            return x - (1 << 32) if x >= (1 << 31) else x
+
+        self.W_mod32 = np.asarray([_wrap32(w) for w in self.W], np.int32)
+        self.M_mod32 = np.int32(_wrap32(p.M))
+        # MRC digits of M//2 (for sign detection: X negative iff X >= M/2)
+        self.half_digits = np.asarray(_int_to_mrc(p.M // 2, ms), np.int32)
+        # float reconstruction weights (float64, divided at use-site by scale)
+        self.W_f64 = np.asarray([float(w) for w in self.W], np.float64)
+        self.M_f64 = float(p.M)
+
+
+def _int_to_mrc(x: int, ms: tuple[int, ...]) -> list[int]:
+    """Exact mixed-radix digits of x (python ints)."""
+    out = []
+    for m in ms:
+        out.append(x % m)
+        x //= m
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def tables(profile: RnsProfile | str) -> Tables:
+    if isinstance(profile, str):
+        profile = get_profile(profile)
+    return Tables(profile)
+
+
+def _mvec(t: Tables, ndim: int):
+    """Moduli broadcast to (K, 1, 1, ...) for a (K, ...) residue tensor."""
+    return jnp.asarray(t.moduli).reshape((-1,) + (1,) * (ndim - 1))
+
+
+# ----------------------------------------------------------------- codec ---
+def encode_int32(profile: RnsProfile | str, v):
+    """Residues of an int32 tensor (negatives map to M - |v|)."""
+    t = tables(profile)
+    v = jnp.asarray(v, jnp.int32)
+    m = jnp.asarray(t.moduli).reshape((-1,) + (1,) * v.ndim)
+    return jnp.remainder(v[None], m).astype(jnp.int32)
+
+
+def encode_float(profile: RnsProfile | str, x, scale: float):
+    """Quantize float tensor to round(x*scale) and encode. |x*scale|<2**31."""
+    v = jnp.round(jnp.asarray(x, jnp.float32) * jnp.float32(scale))
+    v = jnp.clip(v, -(2.0**31 - 1), 2.0**31 - 1).astype(jnp.int32)
+    return encode_int32(profile, v)
+
+
+def encode_exact(profile: RnsProfile | str, values) -> np.ndarray:
+    """Host-side exact encode of arbitrary-size python ints (test oracle)."""
+    t = tables(profile)
+    vals = np.asarray(values, dtype=object)
+    flat = vals.reshape(-1)
+    K = t.profile.n_digits
+    out = np.empty((K, flat.size), np.int32)
+    for j, m in enumerate(t.profile.moduli):
+        out[j] = [int(int(v) % m) for v in flat]
+    return out.reshape((K,) + vals.shape)
+
+
+def decode_exact(profile: RnsProfile | str, res, signed: bool = True):
+    """Host-side exact CRT decode to python ints (test oracle)."""
+    t = tables(profile)
+    p = t.profile
+    res = np.asarray(res)
+    K = p.n_digits
+    flat = res.reshape(K, -1)
+    # Garner / MRC with python ints
+    out = []
+    for col in range(flat.shape[1]):
+        r = [int(flat[j, col]) for j in range(K)]
+        x = 0
+        for j in range(K):
+            d = (r[j] - x) * pow(t.W[j] % p.moduli[j], -1, p.moduli[j]) % p.moduli[j]
+            x += d * t.W[j]
+        if signed and x >= p.M // 2:
+            x -= p.M
+        out.append(x)
+    arr = np.asarray(out, dtype=object).reshape(res.shape[1:])
+    return arr
+
+
+# -------------------------------------------------------------- PAC ops ---
+def rns_add(profile, x, y):
+    t = tables(profile)
+    return jnp.remainder(x + y, _mvec(t, x.ndim))
+
+
+def rns_sub(profile, x, y):
+    t = tables(profile)
+    m = _mvec(t, x.ndim)
+    return jnp.remainder(x - y + m, m)
+
+
+def rns_neg(profile, x):
+    t = tables(profile)
+    m = _mvec(t, x.ndim)
+    return jnp.remainder(m - x, m)
+
+
+def rns_mul(profile, x, y):
+    t = tables(profile)
+    return jnp.remainder(x * y, _mvec(t, x.ndim))
+
+
+def rns_scale_const(profile, x, c: int):
+    """PAC scaling: multiply by a (possibly huge) integer constant, exactly."""
+    t = tables(profile)
+    cres = jnp.asarray(
+        np.asarray([int(c) % m for m in t.profile.moduli], np.int32)
+    ).reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.remainder(x * cres, _mvec(t, x.ndim))
+
+
+def rns_add_const(profile, x, c: int):
+    t = tables(profile)
+    cres = jnp.asarray(
+        np.asarray([int(c) % m for m in t.profile.moduli], np.int32)
+    ).reshape((-1,) + (1,) * (x.ndim - 1))
+    return jnp.remainder(x + cres, _mvec(t, x.ndim))
+
+
+# ------------------------------------------------------------- storage ----
+def to_int8(profile, res):
+    t = tables(profile)
+    if not t.profile.int8_safe:
+        raise ValueError(f"profile {t.profile.name} residues exceed int8")
+    return res.astype(jnp.int8)
+
+
+def from_int8(res8):
+    return res8.astype(jnp.int32)

@@ -1,0 +1,56 @@
+"""Gradient compression for the slow cross-pod hop: int8 + error feedback.
+
+At 512+ chips the intra-pod ICI all-reduce is cheap; the pod-to-pod (DCI)
+hop dominates.  Quantizing that hop 4x (f32->int8) with error-feedback
+keeps convergence (the residual is re-injected next step, so the scheme is
+unbiased in the long run — standard EF-SGD result).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x):
+    """x f32 -> (int8 values, scale).  Symmetric per-tensor."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, error_state):
+    """Error-feedback compression over a gradient pytree.
+
+    Returns (quantized tree as (q, scale) pairs, new error_state).  The
+    caller all-reduces the int8 payload across pods, then decompresses.
+    """
+    if error_state is None:
+        error_state = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                   grads)
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress_int8(corrected)
+        new_e = corrected - decompress_int8(q, s)
+        return (q, s), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error_state)
+    pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    qtree = tdef.unflatten([p[0] for p in pairs])
+    etree = tdef.unflatten([p[1] for p in pairs])
+    return qtree, etree
+
+
+def decompress_tree(qtree):
+    return jax.tree.map(
+        lambda pair: decompress_int8(*pair), qtree,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and not isinstance(x[0], dict),
+    )

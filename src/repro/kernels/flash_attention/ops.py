@@ -1,0 +1,37 @@
+"""jit'd wrapper: model-layout GQA attention through the Pallas kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhtd
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool | None = None):
+    """q [B,Tq,H,D], k/v [B,Tk,Hk,D(v)] (GQA) -> [B,Tq,H,Dv]."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    B, Tq, H, D = q.shape
+    _, Tk, Hk, Dv = v.shape
+    G = H // Hk
+    # expand KV heads to match q heads (GQA)
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, D)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * H, Tk, D)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * H, Tk, Dv)
+    bq_eff = min(bq, Tq)
+    bk_eff = min(bk, Tk)
+    pq = (-Tq) % bq_eff
+    pk = (-Tk) % bk_eff
+    if pq:
+        qb = jnp.pad(qb, ((0, 0), (0, pq), (0, 0)))
+    if pk:
+        kb = jnp.pad(kb, ((0, 0), (0, pk), (0, 0)))
+        vb = jnp.pad(vb, ((0, 0), (0, pk), (0, 0)))
+    out = flash_attention_bhtd(qb, kb, vb, causal=causal, tk_valid=Tk,
+                               bq=bq_eff, bk=bk_eff, interpret=interpret)
+    out = out[:, :Tq].reshape(B, H, Tq, Dv).transpose(0, 2, 1, 3)
+    return out

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool, tk_valid: int):
+    """q [BH,Tq,D], k/v [BH,Tk,Dv] -> [BH,Tq,Dv]; masked softmax attention."""
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(q.shape[-1])
+    Tq, Tk = s.shape[-2], s.shape[-1]
+    valid = (jnp.arange(Tk) < tk_valid)[None, :]
+    if causal:
+        valid = valid & (jnp.arange(Tq)[:, None] >= jnp.arange(Tk)[None, :])
+    s = jnp.where(valid[None], s, -1e30)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, -1, keepdims=True), 1e-30)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,29 @@
+"""jit'd wrapper: fused quantize + forward conversion, arbitrary shapes."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rns_convert.kernel import rns_convert_tiles
+
+
+def rns_convert(
+    profile, x, scale, *, bits: int = 16, bt: int = 1024,
+    interpret: bool | None = None, out_dtype=jnp.int8,
+):
+    """x [...] float32, scale scalar -> [K, ...] residues."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    T = flat.shape[0]
+    bt_eff = min(bt, T) if T % min(bt, T) == 0 else T
+    pad = (-T) % bt_eff
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    out = rns_convert_tiles(
+        flat, jnp.asarray(scale, jnp.float32), profile=profile, bits=bits,
+        bt=bt_eff, interpret=interpret, out_dtype=out_dtype,
+    )
+    return out[:, :T].reshape((out.shape[0],) + shape)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the forward-conversion kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.rns import encode_int32
+
+
+def rns_convert_ref(x, scale, *, profile, bits: int = 16, out_dtype=jnp.int8):
+    """x [T] float32 -> [K, T] residues of clip(round(x*scale))."""
+    qmax = 2 ** (bits - 1) - 1
+    v = jnp.clip(jnp.round(x * scale), -qmax, qmax).astype(jnp.int32)
+    return encode_int32(profile, v).astype(out_dtype)

@@ -1,0 +1,49 @@
+"""jit'd public wrapper for the RNS matmul kernel (padding + batching)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rns import tables
+from repro.kernels.rns_matmul.kernel import rns_matmul_tiles
+
+
+def _pad_to(x, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def rns_matmul(
+    profile, a_res, b_res, *, bm: int = 128, bn: int = 128, bk: int = 512,
+    interpret: bool | None = None,
+):
+    """a_res [K, ..., M, D], b_res [K, D, N] residues -> [K, ..., M, N] int32.
+
+    Zero-pads every dim to the BlockSpec tile multiples (exact: zero
+    residues contribute nothing mod m) and flattens leading batch dims.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    t = tables(profile)
+    moduli = jnp.asarray(np.asarray(t.moduli, np.int32))
+    S = a_res.shape[0]
+    D = a_res.shape[-1]
+    N = b_res.shape[-1]
+    lead = a_res.shape[1:-1]
+    a2 = a_res.reshape(S, -1, D)
+    M = a2.shape[1]
+    bm_eff = min(bm, max(8, M))
+    a2 = _pad_to(_pad_to(a2, 1, bm_eff), 2, bk)
+    b2 = _pad_to(_pad_to(b_res, 1, bk), 2, bn)
+    out = rns_matmul_tiles(
+        moduli, a2, b2, bm=bm_eff, bn=bn, bk=bk, interpret=interpret
+    )
+    out = out[:, :M, :N]
+    return out.reshape((S,) + lead + (N,))

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the digit-sliced modular matmul kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rns_matmul_ref(moduli, a_res, b_res):
+    """a_res [S, M, D], b_res [S, D, N] int residues -> [S, M, N] int32.
+
+    Straight modular einsum with int32 accumulation; the chunking concern
+    (int32 overflow past ~131k terms for 7-bit moduli) is the caller's —
+    same contract as the kernel (D <= lazy_chunk per K block is guaranteed
+    by construction because each bk-step is reduced).
+    """
+    m = jnp.asarray(moduli, jnp.int32).reshape(-1, 1, 1)
+    mmax = int(max(int(x) for x in jnp.asarray(moduli)))
+    chunk = (2**31 - 1) // (mmax - 1) ** 2
+    D = a_res.shape[-1]
+    acc = None
+    for c in range(-(-D // chunk)):
+        sl = slice(c * chunk, min((c + 1) * chunk, D))
+        part = jnp.einsum(
+            "smd,sdn->smn",
+            a_res[..., sl].astype(jnp.int32),
+            b_res[:, sl, :].astype(jnp.int32),
+            preferred_element_type=jnp.int32,
+        )
+        part = jnp.remainder(part, m)
+        acc = part if acc is None else jnp.remainder(acc + part, m)
+    return acc

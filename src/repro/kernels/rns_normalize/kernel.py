@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused normalization unit (Fig. 5's purple pipeline).
+
+Takes [K, T] residues, emits [T] float32 values: sign detection + mixed-
+radix conversion + float reconstruction, all in VMEM.  Every modular
+constant (m_j, MRC inverses, M/2 digits, W_j weights) is compiled into the
+kernel — the hardware analogue is the fixed normalization pipeline the
+paper sandwiches after the accumulator array.
+
+The MRC is the paper's "slow" O(K^2) op; it runs ONCE per output element
+(deferred normalization), so its cost is amortized over the whole product
+summation that produced the element.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.rns import tables
+
+
+def _mrc_digits_rows(rows, t):
+    """rows: list of K [1, bt] int32 vectors -> list of K digit vectors."""
+    K = len(rows)
+    ms = [int(m) for m in t.moduli]
+    r = list(rows)
+    digits = []
+    for i in range(K):
+        d = r[i]
+        digits.append(d)
+        for j in range(i + 1, K):
+            inv = int(t.mrc_inv[i, j])
+            r[j] = jnp.remainder((r[j] - d) * inv, ms[j])
+    return digits
+
+
+def _lex_ge(digits, ref_digits):
+    K = len(digits)
+    ge = jnp.zeros_like(digits[0], dtype=jnp.bool_)
+    eq = jnp.ones_like(digits[0], dtype=jnp.bool_)
+    for j in range(K - 1, -1, -1):
+        ref = jnp.int32(int(ref_digits[j]))
+        ge = ge | (eq & (digits[j] > ref))
+        eq = eq & (digits[j] == ref)
+    return ge | eq
+
+
+def _kernel(x_ref, o_ref, *, profile):
+    t = tables(profile)
+    K = t.profile.n_digits
+    ms = [int(m) for m in t.moduli]
+    rows = [x_ref[j][None, :] for j in range(K)]
+    # pass 1: sign
+    digits = _mrc_digits_rows(rows, t)
+    neg = _lex_ge(digits, t.half_digits)
+    # negate to magnitude, pass 2
+    mag = [
+        jnp.where(neg, jnp.remainder(jnp.int32(ms[j]) - rows[j], ms[j]), rows[j])
+        for j in range(K)
+    ]
+    mdig = _mrc_digits_rows(mag, t)
+    acc = jnp.zeros(rows[0].shape, dtype=jnp.float32)
+    for j in range(K):
+        acc = acc + mdig[j].astype(jnp.float32) * jnp.float32(float(t.W_f64[j]))
+    o_ref[...] = jnp.where(neg, -acc, acc)[0]
+
+
+@functools.partial(jax.jit, static_argnames=("profile", "bt", "interpret"))
+def rns_normalize_tiles(x, *, profile, bt: int = 1024, interpret: bool = False):
+    """x [K, T] int32 residues -> [T] float32 signed values (unscaled)."""
+    K, T = x.shape
+    grid = (T // bt,)
+    return pl.pallas_call(
+        functools.partial(_kernel, profile=profile),
+        grid=grid,
+        in_specs=[pl.BlockSpec((K, bt), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((T,), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(x)

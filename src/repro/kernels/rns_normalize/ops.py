@@ -1,0 +1,24 @@
+"""jit'd wrapper: arbitrary-shape residues -> float values via the kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rns_normalize.kernel import rns_normalize_tiles
+
+
+def rns_normalize(profile, res, *, bt: int = 1024, interpret: bool | None = None):
+    """res [K, ...] int32 -> [...] float32 signed values (unscaled)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    K = res.shape[0]
+    shape = res.shape[1:]
+    flat = res.reshape(K, -1)
+    T = flat.shape[1]
+    bt_eff = min(bt, T) if T % min(bt, T) == 0 else T
+    pad = (-T) % bt_eff
+    if pad:
+        flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    out = rns_normalize_tiles(flat, profile=profile, bt=bt_eff, interpret=interpret)
+    return out[:T].reshape(shape)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the normalization kernel: core mrc.decode_float."""
+
+from __future__ import annotations
+
+from repro.core import mrc
+
+
+def rns_normalize_ref(x, *, profile):
+    """x [K, T] int32 -> [T] float32 signed values (unscaled)."""
+    return mrc.decode_float(profile, x, inv_scale=1.0)

@@ -1,0 +1,109 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Hillclimb harness: lower ONE cell with config overrides, print the
+roofline terms.  Each invocation is one hypothesis->measure iteration
+(EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m repro.launch.analyze_cell \
+        --arch deepseek-v2-236b --shape train_4k \
+        --set moe.dispatch=gather --tag moe_gather
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import warnings  # noqa: E402
+
+warnings.filterwarnings("ignore")
+
+from repro.configs.base import SHAPES, get_config  # noqa: E402
+from repro.launch import specs as SP  # noqa: E402
+from repro.launch.dryrun import analyze, lower_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+PEAK = 197e12
+PEAK_INT8 = 394e12
+HBM = 819e9
+LINK = 50e9
+
+
+def apply_overrides(cfg, sets):
+    for kv in sets:
+        key, val = kv.split("=", 1)
+        parts = key.split(".")
+        try:
+            val = json.loads(val)
+        except json.JSONDecodeError:
+            pass
+        if len(parts) == 1:
+            cfg = dataclasses.replace(cfg, **{parts[0]: val})
+        else:
+            sub = getattr(cfg, parts[0])
+            sub = dataclasses.replace(sub, **{parts[1]: val})
+            cfg = dataclasses.replace(cfg, **{parts[0]: sub})
+    return cfg
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--rns", action="store_true")
+    ap.add_argument("--rns-profile", default="rns9")
+    ap.add_argument("--rns-slice-parallel", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override, e.g. moe.dispatch=gather")
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--out", default="artifacts/perf")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = SP.with_shape_overrides(get_config(args.arch), rns=args.rns)
+    if args.rns and (args.rns_profile != "rns9" or args.rns_slice_parallel):
+        from repro.core.rns_matmul import RnsDotConfig
+
+        cfg = dataclasses.replace(
+            cfg, rns=RnsDotConfig(profile=args.rns_profile, qx=16, qw=16,
+                                  slice_parallel=args.rns_slice_parallel))
+    cfg = apply_overrides(cfg, args.set)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    lowered, compiled, meta = lower_cell(cfg, shape, mesh)
+    rec = analyze(cfg, shape, args.mesh, compiled, meta)
+    if args.save_hlo:
+        import gzip
+
+        with gzip.open(args.save_hlo, "wt") as f:
+            f.write(compiled.as_text())
+
+    t_c = rec["flops_per_device"] / (PEAK_INT8 if args.rns else PEAK)
+    t_v = rec["vflops_per_device"] / (PEAK / 8)
+    t_m = rec["hbm_write_bytes"] / HBM
+    t_x = rec["collectives"]["total_wire_bytes"] / LINK
+    terms = {"compute": max(t_c, t_v), "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    print(f"\n=== {args.arch}/{args.shape}/{args.mesh} [{args.tag}] "
+          f"{'RNS' if args.rns else ''} {' '.join(args.set)}")
+    print(f"compute {t_c:10.3f}s  vpu {t_v:8.3f}s  memory {t_m:10.3f}s  "
+          f"collective {t_x:10.3f}s   DOMINANT={dom}")
+    print(f"flops/dev {rec['flops_per_device']:.3e}  "
+          f"hbm_w {rec['hbm_write_bytes']/2**40:.2f} TiB  "
+          f"wire {rec['collectives']['total_wire_bytes']/2**40:.2f} TiB  "
+          f"temp {rec['memory']['temp_bytes']/2**30:.1f} GiB  "
+          f"compile {meta['compile_s']:.0f}s")
+    for k, v in rec["collectives"].items():
+        if isinstance(v, dict):
+            print(f"  {k:20s} n={v['count']:6d} wire={v['wire_bytes']/2**40:.3f} TiB")
+    tagf = f"{args.arch}__{args.shape}__{args.mesh}__{args.tag}.json"
+    json.dump(rec, open(os.path.join(args.out, tagf), "w"), indent=1)
+
+
+if __name__ == "__main__":
+    main()

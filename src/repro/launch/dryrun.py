@@ -1,0 +1,234 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be run as its own process (the XLA_FLAGS line above executes before
+any other import so jax sees 512 placeholder devices).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-32b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+
+Artifacts: one JSON per cell under artifacts/dryrun/ with
+memory_analysis, cost_analysis, and per-collective wire bytes — the
+roofline inputs (EXPERIMENTS.md §Dry-run / §Roofline).
+"""
+
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs.base import (  # noqa: E402
+    SHAPES,
+    cell_is_runnable,
+    get_config,
+    list_archs,
+)
+from repro.launch import specs as SP  # noqa: E402
+from repro.launch.hlo_analysis import collective_stats  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.optim.adamw import AdamWConfig  # noqa: E402
+from repro.train.train_step import make_train_step  # noqa: E402
+
+
+def lower_cell(cfg, shape, mesh):
+    """Returns (lowered, compiled, meta) for one cell.
+
+    All shardings are explicit NamedShardings (they carry the mesh), so no
+    ambient mesh context is required.
+    """
+    from repro.distributed import sharding as shd
+
+    with shd.use_activation_sharding(mesh):
+        return _lower_cell_inner(cfg, shape, mesh, shd)
+
+
+def _lower_cell_inner(cfg, shape, mesh, shd):
+    t0 = time.perf_counter()
+    if shape.kind == "train":
+        state_shapes, state_specs = SP.abstract_train_state(cfg)
+        state_sh = shd.tree_shardings(state_specs, state_shapes, mesh)
+        state_abs = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            state_shapes, state_sh)
+        batch = SP.batch_specs(cfg, shape, mesh)
+        step = make_train_step(cfg, AdamWConfig())
+        lowered = jax.jit(
+            step,
+            in_shardings=(state_sh, jax.tree.map(lambda x: x.sharding, batch)),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        ).lower(state_abs, batch)
+    elif shape.kind == "prefill":
+        params_shapes, pspecs = SP.abstract_params(cfg)
+        psh = shd.tree_shardings(pspecs, params_shapes, mesh)
+        params_abs = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            params_shapes, psh)
+        batch = SP.batch_specs(cfg, shape, mesh)
+
+        # the cache must also hold the frontend prefix (vlm early fusion)
+        s_max = shape.seq_len + (
+            cfg.n_frontend_tokens if (cfg.frontend and not cfg.enc_dec) else 0)
+
+        def prefill_step(params, batch):
+            return M.prefill(params, cfg, batch, S_max=s_max,
+                             cache_dtype=jnp.bfloat16)
+
+        lowered = jax.jit(
+            prefill_step,
+            in_shardings=(psh, jax.tree.map(lambda x: x.sharding, batch)),
+        ).lower(params_abs, batch)
+    else:  # decode
+        params_shapes, pspecs = SP.abstract_params(cfg)
+        psh = shd.tree_shardings(pspecs, params_shapes, mesh)
+        params_abs = jax.tree.map(
+            lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+            params_shapes, psh)
+        token, cache, cache_sh = SP.decode_specs(cfg, shape, mesh)
+
+        def serve_step(params, token, cache):
+            return M.decode_step(params, cfg, token, cache)
+
+        lowered = jax.jit(
+            serve_step,
+            in_shardings=(psh, token.sharding, cache_sh),
+            out_shardings=(None, cache_sh),
+            donate_argnums=(2,),
+        ).lower(params_abs, token, cache)
+    lower_s = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    compile_s = time.perf_counter() - t1
+    return lowered, compiled, {"lower_s": lower_s, "compile_s": compile_s}
+
+
+def analyze(cfg, shape, mesh_name, compiled, meta):
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, list) else cost
+    hlo_text = compiled.as_text()
+    # trip-count-aware per-device costs (XLA's cost_analysis counts while
+    # bodies once; see launch/hlo_cost.py)
+    from repro.launch.hlo_cost import analyze_hlo
+
+    deep = analyze_hlo(hlo_text)
+    coll = collective_stats(hlo_text)  # entry-graph view (kept for reference)
+    total, active = M.count_params(cfg)
+    n_dev = {"single": 256, "multi": 512}[mesh_name]
+    rec = {
+        "arch": cfg.arch_id,
+        "shape": shape.name,
+        "mesh": mesh_name,
+        "n_devices": n_dev,
+        "rns": cfg.rns is not None,
+        "params_total": total,
+        "params_active": active,
+        "flops_per_device": float(deep["flops"]),
+        "vflops_per_device": float(deep["vflops"]),
+        "bytes_per_device": float(deep["hbm_bytes"]),
+        "hbm_write_bytes": float(deep["hbm_write_bytes"]),
+        "collectives": {
+            **deep["collectives"],
+            "total_wire_bytes": deep["total_wire_bytes"],
+        },
+        "xla_entry_flops": float(cost.get("flops", 0.0)),
+        "entry_collectives": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(
+                mem, "generated_code_size_in_bytes", 0),
+        },
+        **meta,
+    }
+    return rec
+
+
+def run_cell(arch, shape_name, mesh_name, outdir, *, rns=False, force=False):
+    tag = f"{arch}__{shape_name}__{mesh_name}" + ("__rns" if rns else "")
+    path = os.path.join(outdir, tag + ".json")
+    if os.path.exists(path) and not force:
+        print(f"[skip-cached] {tag}")
+        return json.load(open(path))
+    cfg = SP.with_shape_overrides(get_config(arch), rns=rns)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "skipped": why}
+        json.dump(rec, open(path, "w"), indent=1)
+        print(f"[skip] {tag}: {why}")
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    print(f"[lower+compile] {tag} ...", flush=True)
+    try:
+        lowered, compiled, meta = lower_cell(cfg, shape, mesh)
+        rec = analyze(cfg, shape, mesh_name, compiled, meta)
+        # keep the per-device HLO for recompile-free re-analysis (§Perf)
+        import gzip
+
+        with gzip.open(os.path.join(outdir, tag + ".hlo.gz"), "wt") as f:
+            f.write(compiled.as_text())
+        mem = rec["memory"]
+        print(
+            f"  ok: {meta['lower_s']:.1f}s lower, {meta['compile_s']:.1f}s "
+            f"compile; args {mem['argument_bytes']/2**30:.2f} GiB/dev, "
+            f"temp {mem['temp_bytes']/2**30:.2f} GiB/dev, "
+            f"flops/dev {rec['flops_per_device']:.3e}, "
+            f"wire {rec['collectives'].get('total_wire_bytes', 0)/2**30:.3f} GiB/dev",
+            flush=True)
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()}
+        print(f"  FAIL: {type(e).__name__}: {e}", flush=True)
+    json.dump(rec, open(path, "w"), indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--rns", action="store_true",
+                    help="enable the RNS matmul datapath (paper technique)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = (
+        ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+        if (args.all or args.shape is None) else [args.shape]
+    )
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_fail = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                rec = run_cell(arch, shape_name, mesh_name, args.out,
+                               rns=args.rns, force=args.force)
+                if "error" in rec:
+                    n_fail += 1
+    print(f"done; failures: {n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Collective-traffic extraction from post-SPMD HLO text.
+
+``compiled.as_text()`` shapes are PER-DEVICE (post-partitioning), which is
+exactly the per-chip wire traffic basis the roofline needs.  cost_analysis
+does not report collective bytes, so we parse the ops ourselves.
+
+Wire-byte model per op (ring algorithms, n-1/n ~ 1):
+  all-reduce          2x bytes (reduce-scatter + all-gather phases)
+  all-gather          1x result bytes
+  reduce-scatter      1x operand bytes
+  all-to-all          1x bytes
+  collective-permute  1x bytes
+"""
+
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+_MULT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-op-type counts and wire bytes (per device) from HLO text."""
+    out: dict[str, dict] = {}
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op, _start = m.group(1), m.group(2), m.group(3)
+        raw = _shape_bytes(shape_str)
+        rec = out.setdefault(op, {"count": 0, "bytes": 0, "wire_bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += raw
+        rec["wire_bytes"] += raw * _MULT[op]
+    out["total_wire_bytes"] = sum(
+        v["wire_bytes"] for k, v in out.items() if isinstance(v, dict))
+    return out

@@ -1,0 +1,239 @@
+"""Trip-count-aware cost model over post-optimization HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which
+undercounts scan-over-layers / scan-over-chunks graphs by the trip count
+(verified in tests/test_hlo_cost.py).  This walker parses the HLO module,
+builds the call graph (while/fusion/call/conditional), extracts static trip
+counts from loop conditions, and accumulates:
+
+  * flops       — 2 * prod(result) * K for every dot (MXU work)
+  * vflops      — 1 per output element of non-dot compute ops (VPU floor)
+  * hbm_bytes   — sum of (operand + result) bytes of top-level ops in each
+                  computation: the post-fusion HBM traffic model (each
+                  fusion reads its operands once, writes its result once)
+  * collectives — wire bytes per op type (all-reduce 2x, others 1x),
+                  multiplied through enclosing loops
+
+Shapes in ``compiled.as_text()`` are post-SPMD per-device shapes, so all
+numbers are per-device — exactly the roofline basis.
+"""
+
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_COLL_MULT = {
+    "all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+    "all-to-all": 1.0, "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# an op line: %name = TYPE opcode(args...), attrs.  Tuple types may contain
+# /*index=N*/ comments (hence no [^=] tricks) but never nested parens.
+_OP_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s+=\s+(\(.*?\)|\S+)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*->")
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = bytes_ = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dtype]
+    return elems, bytes_
+
+
+class _Op:
+    __slots__ = ("name", "shape", "opcode", "rest", "line")
+
+    def __init__(self, name, shape, opcode, rest, line):
+        self.name, self.shape, self.opcode = name, shape, opcode
+        self.rest, self.line = rest, line
+
+
+def _parse_computations(text: str) -> tuple[dict[str, list[_Op]], str | None]:
+    comps: dict[str, list[_Op]] = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and ("->" in line) and line.rstrip().endswith("{"):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            comps[cur].append(_Op(m.group(1), m.group(2), m.group(3),
+                                  m.group(4), line))
+    return comps, entry
+
+
+def _operand_names(rest: str) -> list[str]:
+    # take args up to matching close paren of the op's '('
+    depth, out, i = 1, [], 0
+    while i < len(rest) and depth > 0:
+        c = rest[i]
+        if c == "(":
+            depth += 1
+        elif c == ")":
+            depth -= 1
+        i += 1
+    arglist = rest[: i - 1]
+    return re.findall(r"%?([\w.\-]+)", arglist)
+
+
+def _dot_flops(op: _Op, shapes: dict[str, str]) -> float:
+    # contraction size K from lhs shape + lhs_contracting_dims
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    ops = _operand_names(op.rest)
+    if not m or not ops:
+        return 0.0
+    lhs_shape = shapes.get(ops[0], "")
+    dims_m = _SHAPE_RE.search(lhs_shape)
+    if not dims_m:
+        return 0.0
+    dims = [int(d) for d in dims_m.group(2).split(",") if d]
+    K = 1
+    for i in (int(x) for x in m.group(1).split(",") if x):
+        if i < len(dims):
+            K *= dims[i]
+    out_elems, _ = _shape_elems_bytes(op.shape)
+    return 2.0 * out_elems * K
+
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "copy-start", "copy-done", "after-all", "partition-id", "replica-id",
+}
+
+
+def _trip_count(cond_ops: list[_Op]) -> int:
+    """Static trip count from a scan-style while condition.
+
+    Scan lowers to ``while (iv < constant(N))``; the compare may be inside a
+    wrapped fusion, so we take the largest integer constant in the condition
+    computation (the loop bound dominates any other constant there).
+    """
+    best = 1
+    for op in cond_ops:
+        if op.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", op.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def analyze_hlo(text: str) -> dict:
+    comps, entry_name = _parse_computations(text)
+    shapes: dict[str, str] = {}
+    for ops in comps.values():
+        for op in ops:
+            shapes[op.name] = op.shape
+
+    import functools
+
+    @functools.lru_cache(maxsize=None)
+    def comp_cost(comp_name: str) -> tuple:
+        flops = vflops = hbm = hbm_w = 0.0
+        coll: dict[str, float] = {}
+        coll_counts: dict[str, int] = {}
+        for op in comps.get(comp_name, []):
+            oc = op.opcode
+            out_elems, out_bytes = _shape_elems_bytes(op.shape)
+            # ---- nested computations
+            if oc == "while":
+                body = re.search(r"body=%?([\w.\-]+)", op.line)
+                cond = re.search(r"condition=%?([\w.\-]+)", op.line)
+                n = _trip_count(comps.get(cond.group(1), [])) if cond else 1
+                bf, bv, bh, bw, bc, bcc = comp_cost(body.group(1)) if body else (
+                    0, 0, 0, 0, {}, {})
+                flops += n * bf
+                vflops += n * bv
+                hbm += n * bh
+                hbm_w += n * bw
+                for k, v in bc.items():
+                    coll[k] = coll.get(k, 0.0) + n * v
+                for k, v in bcc.items():
+                    coll_counts[k] = coll_counts.get(k, 0) + n * v
+                continue
+            if oc in ("fusion", "call", "conditional", "async-start"):
+                for callee in re.findall(
+                        r"(?:calls|body|branch_computations=\{)[=%]?([\w.\-]+)",
+                        op.line):
+                    cf, cv, ch, cw, cc, ccc = comp_cost(callee)
+                    flops += cf
+                    vflops += cv
+                    hbm += ch
+                    hbm_w += cw
+                    for k, v in cc.items():
+                        coll[k] = coll.get(k, 0.0) + v
+                    for k, v in ccc.items():
+                        coll_counts[k] = coll_counts.get(k, 0) + v
+                # fusion op itself: HBM traffic = operands + result
+                if oc == "fusion":
+                    hbm += out_bytes
+                    hbm_w += out_bytes
+                    for name in _operand_names(op.rest):
+                        _, b = _shape_elems_bytes(shapes.get(name, ""))
+                        hbm += b
+                continue
+            # ---- collectives (count -start, skip -done)
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in _COLL_MULT and not oc.endswith("-done"):
+                coll[base] = coll.get(base, 0.0) + out_bytes * _COLL_MULT[base]
+                coll_counts[base] = coll_counts.get(base, 0) + 1
+                hbm += 2 * out_bytes
+                hbm_w += out_bytes
+                continue
+            if oc in _SKIP_BYTES or oc.endswith("-done"):
+                continue
+            # ---- compute ops
+            if oc == "dot":
+                flops += _dot_flops(op, shapes)
+            elif oc == "convolution":
+                # rare here (mamba depthwise conv); floor: 2*out*K_window
+                m = re.search(r"size=([\dx]+)", op.line)
+                k = 1
+                if m:
+                    for d in m.group(1).split("x"):
+                        k *= int(d)
+                flops += 2.0 * out_elems * k
+            else:
+                vflops += out_elems
+            hbm += out_bytes
+            hbm_w += out_bytes
+            for name in _operand_names(op.rest):
+                _, b = _shape_elems_bytes(shapes.get(name, ""))
+                hbm += b
+        return flops, vflops, hbm, hbm_w, coll, coll_counts
+
+    entry = entry_name or next(iter(comps))
+    f, v, h, hw, c, cc = comp_cost(entry)
+    return {
+        "entry": entry,
+        "flops": f,
+        "vflops": v,
+        "hbm_bytes": h,
+        "hbm_write_bytes": hw,
+        "collectives": {k: {"wire_bytes": vv, "count": cc.get(k, 0)}
+                        for k, vv in c.items()},
+        "total_wire_bytes": sum(c.values()),
+    }

@@ -1,0 +1,19 @@
+"""Production mesh factory.
+
+A FUNCTION (not a module constant) so importing never touches jax device
+state — the dry-run sets XLA_FLAGS before any jax init, tests keep 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    return jax.make_mesh(shape, axes)

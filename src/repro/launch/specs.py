@@ -1,0 +1,168 @@
+"""Abstract input specs + shardings for every (arch x shape x mesh) cell.
+
+ShapeDtypeStruct stand-ins only — nothing is allocated; ``jit(...).lower``
+consumes these directly (the shannon/kernels pattern).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed import sharding as shd
+from repro.models import model as M
+from repro.train.train_step import init_train_state
+
+
+def abstract_train_state(cfg: ModelConfig):
+    """(state ShapeDtypeStructs, state logical-axis specs) — no allocation."""
+    box = {}
+
+    def f(key):
+        state, specs = init_train_state(key, cfg)
+        box["specs"] = specs
+        return state
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["specs"]
+
+
+def abstract_params(cfg: ModelConfig):
+    box = {}
+
+    def f(key):
+        p, s = M.init_model(key, cfg)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    return shapes, box["specs"]
+
+
+def state_shardings(cfg, mesh):
+    shapes, specs = abstract_train_state(cfg)
+    return shd.tree_shardings(specs, shapes, mesh)
+
+
+def param_shardings(cfg, mesh):
+    shapes, specs = abstract_params(cfg)
+    return shd.tree_shardings(specs, shapes, mesh)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Training/prefill batch ShapeDtypeStructs with shardings."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = shd.dp_axes(mesh)
+    bspec = shd.first_valid_spec((B, S), [P(dp, None)], mesh)
+    out = {
+        "tokens": jax.ShapeDtypeStruct(
+            (B, S), jnp.int32, sharding=NamedSharding(mesh, bspec)),
+    }
+    if cfg.frontend is not None:
+        fspec = shd.first_valid_spec(
+            (B, cfg.n_frontend_tokens, cfg.d_model),
+            [P(dp, None, None)], mesh)
+        out["frontend"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16,
+            sharding=NamedSharding(mesh, fspec))
+    return out
+
+
+def _cache_sharding_tree(cfg, shape, mesh, cache_shapes):
+    """Walk the abstract cache; candidate specs per leaf role.
+
+    Order of preference encodes the parallelism policy:
+      1. batch -> DP axes (+ heads/latent-seq -> model)
+      2. batch too small: sequence -> DP axes (flash-decoding), heads -> model
+      3. sequence -> (DP+model) jointly when heads can't split
+    """
+    dp = shd.dp_axes(mesh)
+
+    def pick(leaf_shape, name):
+        nd = len(leaf_shape)
+        if name in ("k", "v"):          # [np?, B, S, Hk, D] (cross: no np)
+            lead = (None,) * (nd - 4)
+            cands = [
+                P(*lead, dp, None, "model", None),
+                P(*lead, dp, "model", None, None),
+                P(*lead, None, dp, "model", None),
+                P(*lead, None, dp + ("model",), None, None),
+                P(*lead, None, dp, None, None),
+            ]
+        elif name in ("c_kv", "k_rope"):  # [np, B, S, r]
+            cands = [
+                P(None, dp, "model", None),
+                P(None, None, dp + ("model",), None),
+                P(None, None, dp, None),
+            ]
+        elif name == "lengths":           # [np, B] or [B]
+            lead = (None,) * (nd - 1)
+            cands = [P(*lead, dp), P(*lead, None)]
+        elif name == "S":                 # rwkv [np, B, H, D, D]
+            cands = [
+                P(None, dp, "model", None, None),
+                P(None, None, "model", None, None),
+            ]
+        elif name == "h":                 # mamba [np, B, d_in, N]
+            cands = [
+                P(None, dp, "model", None),
+                P(None, None, "model", None),
+            ]
+        elif name == "conv":              # [np, B, K-1, d_in]
+            cands = [
+                P(None, dp, None, "model"),
+                P(None, None, None, "model"),
+            ]
+        elif name in ("x_tm", "x_cm"):    # [np, B, 1, d]
+            cands = [P(None, dp, None, None)]
+        else:
+            cands = []
+        return NamedSharding(mesh, shd.first_valid_spec(leaf_shape, cands, mesh))
+
+    def walk(tree, path):
+        if isinstance(tree, dict):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return pick(tree.shape, path[-1])
+
+    return walk(cache_shapes, ())
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """(token, cache) ShapeDtypeStructs + shardings for serve_step lowering.
+
+    Cache is sized at shape.seq_len with lengths = seq_len - 1: "one new
+    token against a KV cache of seq_len".
+    """
+    B, S = shape.global_batch, shape.seq_len
+    cache_shapes = jax.eval_shape(
+        functools.partial(M.make_cache, cfg, B, S, dtype=jnp.bfloat16),
+        lengths=jax.ShapeDtypeStruct((B,), jnp.int32))
+    cache_sh = _cache_sharding_tree(cfg, shape, mesh, cache_shapes)
+    cache = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        cache_shapes, cache_sh)
+    tok_spec = shd.first_valid_spec((B, 1), [P(shd.dp_axes(mesh), None)], mesh)
+    token = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32, sharding=NamedSharding(mesh, tok_spec))
+    return token, cache, cache_sh
+
+
+def with_shape_overrides(cfg: ModelConfig, *, dryrun: bool = True,
+                         rns: bool = False) -> ModelConfig:
+    """Full-config execution settings: bf16 params, full remat (+RNS path)."""
+    over = {}
+    if dryrun:
+        over["param_dtype"] = "bfloat16"
+        over["remat"] = "full"
+    if rns:
+        from repro.core.rns_matmul import RnsDotConfig
+
+        over["rns"] = RnsDotConfig(profile="rns9", qx=16, qw=16,
+                                   backward_rns=True)
+        over["rns_targets"] = "mlp"
+    return dataclasses.replace(cfg, **over)

@@ -1,0 +1,413 @@
+"""Attention: GQA/MQA/MHA + RoPE, MLA (DeepSeek-V2), KV caches.
+
+Three execution modes:
+  * ``dense``   — training; einsum scores with causal/padding mask.
+  * ``chunked`` — long prefill (inference); online-softmax scan over KV
+                  blocks so [Tq, Tk] scores never materialize.
+  * ``decode``  — one query token against a cache; supports a
+                  sequence-sharded cache via LSE-combinable partials
+                  (flash-decoding across chips, see distributed/sharding).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import init_linear, linear
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- rope ----
+def rope(x, positions, theta: float = 10000.0):
+    """x [B, T, H, D], positions [B, T] -> rotated x (half-split convention)."""
+    d2 = x.shape[-1] // 2
+    freqs = 1.0 / (theta ** (np.arange(d2, dtype=np.float32) / d2))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, T, d2]
+    sin, cos = jnp.sin(ang)[:, :, None, :], jnp.cos(ang)[:, :, None, :]
+    x1, x2 = x[..., :d2], x[..., d2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------- core maths ----
+def _gqa_scores(q, k):
+    """q [B,Tq,H,D], k [B,Tk,Hk,D] -> scores [B,Hk,G,Tq,Tk] (G=H/Hk)."""
+    B, Tq, H, D = q.shape
+    Hk = k.shape[2]
+    qg = q.reshape(B, Tq, Hk, H // Hk, D)
+    return jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / np.sqrt(D).astype(np.float32)
+
+
+def _gqa_out(probs, v):
+    """probs [B,Hk,G,Tq,Tk], v [B,Tk,Hk,D] -> [B,Tq,H,D]."""
+    B, Hk, G, Tq, _ = probs.shape
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Tq, Hk * G, v.shape[-1])
+
+
+def dense_attention(q, k, v, *, causal: bool, kv_mask=None, q_offset=0):
+    """Training-mode attention.  kv_mask [B, Tk] optional padding mask."""
+    scores = _gqa_scores(q.astype(jnp.float32), k.astype(jnp.float32))
+    Tq, Tk = scores.shape[-2], scores.shape[-1]
+    if causal:
+        qpos = jnp.arange(Tq) + q_offset
+        mask = qpos[:, None] >= jnp.arange(Tk)[None, :]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_mask is not None:
+        scores = jnp.where(kv_mask[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int = 1024,
+                      kv_mask=None, q_offset=0):
+    """Online-softmax scan over KV chunks (inference prefill; no O(T^2) buf)."""
+    B, Tq, H, D = q.shape
+    Tk = k.shape[1]
+    Hk = k.shape[2]
+    Dv = v.shape[-1]
+    G = H // Hk
+    nchunk = -(-Tk // chunk)
+    pad = nchunk * chunk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_mask = jnp.pad(
+            kv_mask if kv_mask is not None else jnp.ones((B, Tk), bool),
+            ((0, 0), (0, pad)),
+        )
+    kc = k.reshape(B, nchunk, chunk, Hk, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunk, chunk, Hk, Dv).transpose(1, 0, 2, 3, 4)
+    maskc = (
+        kv_mask.reshape(B, nchunk, chunk).transpose(1, 0, 2)
+        if kv_mask is not None
+        else jnp.ones((nchunk, B, chunk), bool)
+    )
+    qf = q.astype(jnp.float32).reshape(B, Tq, Hk, G, D)
+    qpos = jnp.arange(Tq) + q_offset
+
+    @jax.checkpoint
+    def body(carry, inp):
+        m, l, acc = carry  # [B,Hk,G,Tq], [B,Hk,G,Tq], [B,Hk,G,Tq,D]
+        kb, vb, mb, c = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb.astype(jnp.float32))
+        s = s / np.sqrt(D).astype(np.float32)
+        kpos = c * chunk + jnp.arange(chunk)
+        valid = mb[:, None, None, None, :]
+        if causal:
+            valid = valid & (qpos[:, None] >= kpos[None, :])[None, None, None]
+        s = jnp.where(valid, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hk, G, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hk, G, Tq), jnp.float32)
+    a0 = jnp.zeros((B, Hk, G, Tq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, maskc, jnp.arange(nchunk))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, H, Dv)
+    return out.astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool, kv_mask=None,
+                    q_chunk: int = 512, kv_chunk: int = 1024):
+    """2-level tiled attention: scan over q tiles, online-softmax over KV
+    tiles with a rematerialized inner body — O(T) live memory forward AND
+    backward (the inner scores/probs are recomputed in the bwd pass), at
+    the standard flash-attention 2x-recompute cost.
+    """
+    B, Tq, H, D = q.shape
+    nq = -(-Tq // q_chunk)
+    pad = nq * q_chunk - Tq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0))) if pad else q
+    qc = qp.reshape(B, nq, q_chunk, H, D).transpose(1, 0, 2, 3, 4)
+
+    def qbody(_, inp):
+        qi, i = inp
+        out = chunked_attention(
+            qi, k, v, causal=causal, kv_mask=kv_mask, chunk=kv_chunk,
+            q_offset=i * q_chunk)
+        return None, out
+
+    _, outs = jax.lax.scan(qbody, None, (qc, jnp.arange(nq)))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, H, -1)
+    return out[:, :Tq]
+
+
+def decode_attention(q, k_cache, v_cache, lengths):
+    """q [B,1,H,D] against cache [B,S,Hk,D]; lengths [B] valid prefix sizes.
+
+    Returns (out [B,1,H,D], lse [B,Hk,G,1]) — the LSE makes partial results
+    combinable across a sequence-sharded cache (flash-decoding).
+    """
+    B, S = k_cache.shape[:2]
+    kv_mask = jnp.arange(S)[None, :] < lengths[:, None]
+    s = _gqa_scores(q.astype(jnp.float32), k_cache.astype(jnp.float32))
+    s = jnp.where(kv_mask[:, None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_cache.astype(jnp.float32))
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    B, Hk, G, Tq, D = out.shape
+    return (
+        out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, Hk * G, D).astype(q.dtype),
+        lse,
+    )
+
+
+# --------------------------------------------------------- GQA module -----
+def init_gqa(key, cfg, dtype=jnp.float32):
+    """cfg needs: d_model, n_heads, n_kv_heads, d_head, qkv_bias."""
+    ks = jax.random.split(key, 4)
+    H, Hk, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    p, s = {}, {}
+    p["wq"], s["wq"] = init_linear(
+        ks[0], cfg.d_model, H * D, axes=("embed", "heads"),
+        bias=cfg.qkv_bias, dtype=dtype)
+    p["wk"], s["wk"] = init_linear(
+        ks[1], cfg.d_model, Hk * D, axes=("embed", "kv_heads"),
+        bias=cfg.qkv_bias, dtype=dtype)
+    p["wv"], s["wv"] = init_linear(
+        ks[2], cfg.d_model, Hk * D, axes=("embed", "kv_heads"),
+        bias=cfg.qkv_bias, dtype=dtype)
+    p["wo"], s["wo"] = init_linear(
+        ks[3], H * D, cfg.d_model, axes=("heads", "embed"), dtype=dtype)
+    return p, s
+
+
+def gqa_qkv(p, x, cfg, positions, rns=None, *, use_rope=True):
+    B, T, _ = x.shape
+    H, Hk, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = linear(p["wq"], x, rns).reshape(B, T, H, D)
+    k = linear(p["wk"], x, rns).reshape(B, T, Hk, D)
+    v = linear(p["wv"], x, rns).reshape(B, T, Hk, D)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_attend(p, x, cfg, *, mode: str, positions=None, kv_mask=None,
+               rns=None, use_rope=True, chunk=1024, xkv=None):
+    """Self- (or cross-, via xkv) attention for train/prefill.
+
+    Returns (y, (k, v)) so prefill can populate a KV cache.
+    """
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    if xkv is None:
+        q, k, v = gqa_qkv(p, x, cfg, positions, rns, use_rope=use_rope)
+        causal = cfg.causal
+        if getattr(cfg, "attn_batch_shard", False):
+            from repro.distributed.sharding import constrain
+
+            q = constrain(q, ("batch_all", None, None, None))
+            k = constrain(k, ("batch_all", None, None, None))
+            v = constrain(v, ("batch_all", None, None, None))
+    else:  # cross-attention: keys/values from the encoder stream
+        Hk, D = cfg.n_kv_heads, cfg.d_head
+        q = linear(p["wq"], x, rns).reshape(B, T, cfg.n_heads, D)
+        Tk = xkv.shape[1]
+        k = linear(p["wk"], xkv, rns).reshape(B, Tk, Hk, D)
+        v = linear(p["wv"], xkv, rns).reshape(B, Tk, Hk, D)
+        causal = False
+    if mode == "dense":
+        out = dense_attention(q, k, v, causal=causal, kv_mask=kv_mask)
+    elif mode == "chunked":
+        out = chunked_attention(q, k, v, causal=causal, kv_mask=kv_mask,
+                                chunk=chunk)
+    elif mode == "flash":
+        out = flash_attention(q, k, v, causal=causal, kv_mask=kv_mask,
+                              kv_chunk=chunk)
+    else:
+        raise ValueError(mode)
+    return linear(p["wo"], out.reshape(B, T, -1), rns), (k, v)
+
+
+def gqa_decode(p, x, cfg, cache, *, rns=None, use_rope=True):
+    """One-token decode.  cache: {"k","v" [B,S,Hk,D], "lengths" [B]}.
+
+    Returns (y [B,1,d], k_cache, v_cache) with the new token's K/V planes
+    scattered in at per-row ``lengths``.
+    """
+    B = x.shape[0]
+    positions = cache["lengths"][:, None]
+    q, k, v = gqa_qkv(p, x, cfg, positions, rns, use_rope=use_rope)
+    idx = jnp.arange(B)
+    k_cache = cache["k"].at[idx, cache["lengths"]].set(
+        k[:, 0].astype(cache["k"].dtype))
+    v_cache = cache["v"].at[idx, cache["lengths"]].set(
+        v[:, 0].astype(cache["v"].dtype))
+    out, _lse = decode_attention(q, k_cache, v_cache, cache["lengths"] + 1)
+    y = linear(p["wo"], out.reshape(B, 1, -1), rns)
+    return y, k_cache, v_cache
+
+
+def cross_decode(p, x, cfg, xkv, *, rns=None):
+    """Decode-time cross-attention over a static encoder KV (enc-dec archs).
+
+    xkv: {"k","v" [B,Te,Hk,D], "lengths" [B]} precomputed at prefill through
+    this layer's wk/wv.
+    """
+    B = x.shape[0]
+    H, D = cfg.n_heads, cfg.d_head
+    q = linear(p["wq"], x, rns).reshape(B, 1, H, D)
+    out, _ = decode_attention(q, xkv["k"], xkv["v"], xkv["lengths"])
+    return linear(p["wo"], out.reshape(B, 1, -1), rns)
+
+
+# ----------------------------------------------------------- MLA (DSv2) ---
+def init_mla(key, cfg, dtype=jnp.float32):
+    """DeepSeek-V2 multi-head latent attention params."""
+    m = cfg.mla
+    ks = jax.random.split(key, 8)
+    H = cfg.n_heads
+    p, s = {}, {}
+    p["wdq"], s["wdq"] = init_linear(
+        ks[0], cfg.d_model, m.q_lora_rank, axes=("embed", "lora"), dtype=dtype)
+    # nope/rope up-projections kept as separate weights: a fused [lora,
+    # H*(dn+dr)] projection shards on the flat dim and the per-head split
+    # then crosses shard boundaries (XLA re-gathers the whole q; see
+    # EXPERIMENTS.md §Perf deepseek iter 3)
+    p["wuqn"], s["wuqn"] = init_linear(
+        ks[1], m.q_lora_rank, H * m.qk_nope_dim, axes=("lora", "heads"),
+        dtype=dtype)
+    p["wuqr"], s["wuqr"] = init_linear(
+        jax.random.fold_in(ks[1], 1), m.q_lora_rank, H * m.qk_rope_dim,
+        axes=("lora", "heads"), dtype=dtype)
+    p["wdkv"], s["wdkv"] = init_linear(
+        ks[2], cfg.d_model, m.kv_lora_rank, axes=("embed", "lora"), dtype=dtype)
+    p["wkr"], s["wkr"] = init_linear(
+        ks[3], cfg.d_model, m.qk_rope_dim, axes=("embed", "lora"), dtype=dtype)
+    p["wuk"], s["wuk"] = init_linear(
+        ks[4], m.kv_lora_rank, H * m.qk_nope_dim, axes=("lora", "heads"), dtype=dtype)
+    p["wuv"], s["wuv"] = init_linear(
+        ks[5], m.kv_lora_rank, H * m.v_dim, axes=("lora", "heads"), dtype=dtype)
+    p["wo"], s["wo"] = init_linear(
+        ks[6], H * m.v_dim, cfg.d_model, axes=("heads", "embed"), dtype=dtype)
+    from repro.models.layers import init_rmsnorm
+
+    p["q_norm"], s["q_norm"] = init_rmsnorm(m.q_lora_rank, dtype)
+    p["kv_norm"], s["kv_norm"] = init_rmsnorm(m.kv_lora_rank, dtype)
+    return p, s
+
+
+def mla_qkv(p, x, cfg, positions, rns=None):
+    """Returns q, k, v expanded per head + the compressed (c_kv, k_rope) pair."""
+    from repro.distributed.sharding import constrain
+    from repro.models.layers import rmsnorm
+
+    m = cfg.mla
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    cq = rmsnorm(p["q_norm"], linear(p["wdq"], x, rns))
+    q_nope = linear(p["wuqn"], cq, rns).reshape(B, T, H, m.qk_nope_dim)
+    q_rope = linear(p["wuqr"], cq, rns).reshape(B, T, H, m.qk_rope_dim)
+    q_nope = constrain(q_nope, ("batch", None, "model", None))
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    c_kv = rmsnorm(p["kv_norm"], linear(p["wdkv"], x, rns))       # [B,T,r]
+    k_rope = rope(
+        linear(p["wkr"], x, rns)[:, :, None, :], positions, cfg.rope_theta
+    )                                                              # [B,T,1,dr]
+    k_nope = linear(p["wuk"], c_kv, rns).reshape(B, T, H, m.qk_nope_dim)
+    k_nope = constrain(k_nope, ("batch", None, "model", None))
+    v = linear(p["wuv"], c_kv, rns).reshape(B, T, H, m.v_dim)
+    v = constrain(v, ("batch", None, "model", None))
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, T, H, m.qk_rope_dim))], axis=-1
+    )
+    return q, k, v, (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_attend(p, x, cfg, *, mode: str, positions=None, kv_mask=None,
+               rns=None, chunk=1024):
+    """Train/prefill MLA.  Returns (y, (c_kv, k_rope)) for the latent cache."""
+    B, T, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
+    q, k, v, latent = mla_qkv(p, x, cfg, positions, rns)
+    if mode == "dense":
+        out = dense_attention(q, k, v, causal=cfg.causal, kv_mask=kv_mask)
+    elif mode == "chunked":
+        out = chunked_attention(q, k, v, causal=cfg.causal, kv_mask=kv_mask,
+                                chunk=chunk)
+    elif mode == "flash":
+        out = flash_attention(q, k, v, causal=cfg.causal, kv_mask=kv_mask,
+                              kv_chunk=chunk)
+    else:
+        raise ValueError(mode)
+    return linear(p["wo"], out.reshape(B, T, -1), rns), latent
+
+
+def mla_decode(p, x, cfg, cache, *, rns=None):
+    """Absorbed-matrix MLA decode (DeepSeek-V2's deployment form).
+
+    cache: {"c_kv" [B,S,r], "k_rope" [B,S,dr], "lengths" [B]} — the latent
+    cache is (r + dr) per token instead of 2*H*D: the paper's compression.
+    W_uk is absorbed into the query and W_uv into the output so attention
+    runs directly in the latent space (MQA-shaped, Hk=1).
+
+    Returns (y [B,1,d], c_kv_cache, k_rope_cache, lse [B,1,1,1?]) — lse has
+    shape [B,1(Hk),H(G),1] for sequence-sharded combination.
+    """
+    from repro.models.layers import rmsnorm
+
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    positions = cache["lengths"][:, None]
+    cq = rmsnorm(p["q_norm"], linear(p["wdq"], x, rns))
+    q_nope = linear(p["wuqn"], cq, rns).reshape(B, 1, H, m.qk_nope_dim)
+    q_rope = linear(p["wuqr"], cq, rns).reshape(B, 1, H, m.qk_rope_dim)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv_t = rmsnorm(p["kv_norm"], linear(p["wdkv"], x, rns))       # [B,1,r]
+    k_rope_t = rope(
+        linear(p["wkr"], x, rns)[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]                                                    # [B,1,dr]
+    idx = jnp.arange(B)
+    c_kv = cache["c_kv"].at[idx, cache["lengths"]].set(
+        c_kv_t[:, 0].astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[idx, cache["lengths"]].set(
+        k_rope_t[:, 0].astype(cache["k_rope"].dtype))
+    lengths = cache["lengths"] + 1
+
+    # absorb W_uk: q_abs [B,1,H,r]
+    wuk = p["wuk"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_dim)
+    q_abs = jnp.einsum("bthd,rhd->bthr", q_nope.astype(jnp.float32),
+                       wuk.astype(jnp.float32))
+    scale = 1.0 / np.sqrt(m.qk_nope_dim + m.qk_rope_dim)
+    s = (
+        jnp.einsum("bthr,bsr->bhts", q_abs, c_kv.astype(jnp.float32))
+        + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
+                     k_rope.astype(jnp.float32))
+    ) * scale                                                        # [B,H,1,S]
+    S = c_kv.shape[1]
+    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    mx = jnp.max(s, axis=-1)
+    pr = jnp.exp(s - mx[..., None])
+    l = jnp.sum(pr, axis=-1)
+    ctx = jnp.einsum("bhts,bsr->bthr", pr / jnp.maximum(l, 1e-30)[..., None],
+                     c_kv.astype(jnp.float32))                       # [B,1,H,r]
+    wuv = p["wuv"]["w"].reshape(m.kv_lora_rank, H, m.v_dim)
+    out = jnp.einsum("bthr,rhd->bthd", ctx, wuv.astype(jnp.float32))
+    y = linear(p["wo"], out.reshape(B, 1, -1).astype(x.dtype), rns)
+    lse = (mx + jnp.log(jnp.maximum(l, 1e-30)))[:, None, :, :]  # [B,1,H,1]
+    return y, c_kv, k_rope, lse

@@ -1,0 +1,161 @@
+"""Mixture-of-Experts: top-k router + capacity dispatch + shared experts.
+
+Dispatch strategy (GSPMD-friendly, no global sort):
+  * top-k and the token->(expert, slot) permutation are computed PER BATCH
+    ROW (vmapped argsort over S*k entries), so the sort is local to the
+    data shard that owns the row — no cross-chip sort.
+  * expert buffers [B, E, C, d] are then contracted against expert weights
+    sharded over the `model` axis on E (expert parallelism); XLA lowers the
+    B-sharded -> E-sharded re-layout to the canonical MoE all-to-all.
+  * tokens beyond capacity C = ceil(S*k/E * capacity_factor) are dropped
+    (GShard semantics); the combine scatter weights by router probs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_mlp, mlp, init_linear, linear
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0           # always-on shared experts (DeepSeek-style)
+    capacity_factor: float = 1.25
+    router_norm_topk: bool = True   # renormalize top-k probs to sum to 1
+    aux_loss_weight: float = 0.01
+    # "scatter": first-cut dispatch — scatter [B,S,k,d] into buffers
+    #            (materializes the k-fold activation broadcast; kept for the
+    #            recorded §Dry-run baseline).
+    # "gather":  slot->token index plumbing, activations move only at
+    #            [B,E,C,d] granularity — 18x less wire on deepseek train
+    #            (EXPERIMENTS.md §Perf); the production default.
+    dispatch: str = "gather"
+
+
+def init_moe(key, d_model, cfg: MoEConfig, *, act="silu", dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    p, s = {}, {}
+    p["router"], s["router"] = init_linear(
+        ks[0], d_model, cfg.n_experts, axes=("embed", "expert_vec"), dtype=dtype)
+    E, F = cfg.n_experts, cfg.d_ff_expert
+    scale = float(1.0 / d_model**0.5)
+    p["wi"] = jax.random.normal(ks[1], (E, d_model, F), dtype) * scale
+    p["wg"] = jax.random.normal(ks[2], (E, d_model, F), dtype) * scale
+    p["wo"] = jax.random.normal(ks[3], (E, F, d_model), dtype) * float(1.0 / F**0.5)
+    s["wi"] = ("expert", "embed", "mlp")
+    s["wg"] = ("expert", "embed", "mlp")
+    s["wo"] = ("expert", "mlp", "embed")
+    if cfg.n_shared:
+        p["shared"], s["shared"] = init_mlp(
+            jax.random.fold_in(key, 7), d_model, F * cfg.n_shared,
+            gated=True, act=act, dtype=dtype)
+    return p, s
+
+
+def _dispatch_one_row(gates_idx, S, E, C, k):
+    """Per-sequence permutation: (expert id, slot) for each of S*k entries.
+
+    gates_idx: [S, k] int32 expert ids.  Returns (expert, slot, keep) each
+    [S, k]: slot is the entry's rank within its expert's arrivals.
+    """
+    flat = gates_idx.reshape(-1)                      # [S*k]
+    order = jnp.argsort(flat, stable=True)            # local sort
+    sorted_e = flat[order]
+    # rank within expert group = position - first position of that expert
+    pos = jnp.arange(S * k, dtype=jnp.int32)
+    seg_start = jnp.full((E,), S * k, jnp.int32).at[sorted_e].min(pos)
+    rank_sorted = pos - seg_start[sorted_e]
+    # unsort back to [S*k]
+    rank = jnp.zeros(S * k, jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < C
+    return flat.reshape(S, k), rank.reshape(S, k), keep.reshape(S, k)
+
+
+def moe_ffn(p, x, cfg: MoEConfig, *, act="silu", rns=None):
+    """x [B, S, d] -> (y [B, S, d], aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(S * k / E * cfg.capacity_factor))
+
+    # router matmul in the activation dtype; only the E-wide LOGITS go f32
+    # (an f32 copy of x makes every backward activation collective f32)
+    logits = linear(p["router"], x).astype(jnp.float32)           # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                        # [B,S,k]
+    if cfg.router_norm_topk:
+        top_p = top_p / jnp.maximum(
+            jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e.
+    # fe via scatter-add counts, NOT one_hot (a [B,S,k,E] f32 one-hot is a
+    # multi-TB tensor at 1M tokens x 160 experts)
+    me = jnp.mean(probs, axis=(0, 1))                             # [E]
+    counts = jnp.zeros((E,), jnp.float32).at[top_i.reshape(-1)].add(1.0)
+    fe = counts / (B * S)
+    aux = cfg.aux_loss_weight * E * jnp.sum(me * fe)
+
+    expert, slot, keep = jax.vmap(
+        lambda gi: _dispatch_one_row(gi, S, E, C, k))(top_i)      # [B,S,k]
+
+    from repro.distributed.sharding import constrain
+
+    if cfg.dispatch == "gather":
+        # ---- index plumbing: slot -> (token, prob), all [B, E*C] int/f32 ---
+        slot_g = expert * C + jnp.minimum(slot, C - 1)            # [B,S,k]
+        slot_g = jnp.where(keep, slot_g, E * C)                   # sentinel
+        tok_ids = jnp.broadcast_to(
+            jnp.arange(S, dtype=jnp.int32)[None, :, None], (B, S, k))
+        # vmap over the batch row => gather/scatter carry explicit batching
+        # dims, which GSPMD partitions batch-parallel (an arange-indexed
+        # gather all-gathers the whole operand instead; see §Perf)
+        token_for_slot = jax.vmap(
+            lambda sg, ti: jnp.full((E * C + 1,), S, jnp.int32).at[sg].set(ti)
+        )(slot_g, tok_ids)
+        prob_for_slot = jax.vmap(
+            lambda sg, tp: jnp.zeros((E * C + 1,), jnp.float32).at[sg].set(tp)
+        )(slot_g, top_p)
+        token_for_slot = token_for_slot[:, :-1].reshape(B, E, C)
+        prob_for_slot = prob_for_slot[:, :-1].reshape(B, E, C)
+        # ---- gather activations straight into [B, E, C, d] ----------------
+        x_pad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+        buf = jax.vmap(lambda xr, t: xr[t])(x_pad, token_for_slot)
+        buf = constrain(buf, ("batch", "model", None, None))
+        h_in = jnp.einsum("becd,edf->becf", buf, p["wi"])
+        h_g = jnp.einsum("becd,edf->becf", buf, p["wg"])
+        h = jax.nn.silu(h_g) * h_in if act == "silu" else jax.nn.gelu(h_g) * h_in
+        out = jnp.einsum("becf,efd->becd", h, p["wo"])            # [B,E,C,d]
+        out = out * prob_for_slot[..., None].astype(out.dtype)
+        # ---- combine: scatter-add per slot (no [B,S,k,d] broadcast) --------
+        y = jax.vmap(
+            lambda o, t: jnp.zeros((S + 1, d), o.dtype).at[t].add(o)
+        )(out, token_for_slot)[:, :S]
+        y = constrain(y, ("batch", None, None))
+    else:
+        # scatter tokens into expert buffers [B, E, C, d]
+        buf = jnp.zeros((B, E, C, d), x.dtype)
+        bidx = jnp.broadcast_to(jnp.arange(B)[:, None, None], (B, S, k))
+        slot_c = jnp.minimum(slot, C - 1)
+        xk = jnp.broadcast_to(x[:, :, None, :], (B, S, k, d))
+        xk = jnp.where(keep[..., None], xk, 0)
+        buf = buf.at[bidx, expert, slot_c].add(xk)
+        # expert parallelism: buffers live expert-sharded (B->dp, E->model);
+        # the reshard from token-sharded x is the canonical MoE all-to-all
+        buf = constrain(buf, ("batch", "model", None, None))
+        h_in = jnp.einsum("becd,edf->becf", buf, p["wi"])
+        h_g = jnp.einsum("becd,edf->becf", buf, p["wg"])
+        h = jax.nn.silu(h_g) * h_in if act == "silu" else jax.nn.gelu(h_g) * h_in
+        out = jnp.einsum("becf,efd->becd", h, p["wo"])            # [B,E,C,d]
+        got = out[bidx, expert, slot_c]                           # [B,S,k,d]
+        got = jnp.where(keep[..., None], got, 0)
+        y = jnp.sum(got * top_p[..., None].astype(got.dtype), axis=2)
+
+    if cfg.n_shared:
+        y = y + mlp(p["shared"], x, gated=True, act=act, rns=rns)
+    return y.astype(x.dtype), aux

@@ -1,0 +1,295 @@
+"""State-space / linear-recurrence layers: Mamba-1 (Jamba) and RWKV-6 (Finch).
+
+Both are implemented as chunked recurrences: ``lax.scan`` over fixed-size
+time chunks with a carried state, ``jax.checkpoint`` per chunk (bounded
+residual memory), and an O(1)-state single-token step for decode — the
+property that makes these archs the ``long_500k`` shapes' designated
+runners.
+
+The projections in/out of the recurrences are matmuls and route through the
+RNS datapath when enabled; the recurrences themselves are elementwise fp
+(outside the paper's product-summation scope; noted in DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import init_linear, linear, init_norm, norm
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    kind: str = "mamba"       # "mamba" | "rwkv6"
+    d_state: int = 16         # mamba N
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int | None = None
+    head_dim: int = 64        # rwkv6 head size
+    chunk: int = 256          # recurrence chunk length
+    impl: str = "scan"        # rwkv6: "scan" (stepwise) | "chunked" (matmul
+    #                            GLA-form: intra-chunk attention-like matmuls
+    #                            + per-chunk state passing; §Perf rwkv iters)
+
+
+# ================================================================ Mamba ====
+def init_mamba(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32):
+    d_in = cfg.expand * d_model
+    dt_rank = cfg.dt_rank or max(1, d_model // 16)
+    ks = jax.random.split(key, 8)
+    p, s = {}, {}
+    p["in_proj"], s["in_proj"] = init_linear(
+        ks[0], d_model, 2 * d_in, axes=("embed", "mlp"), dtype=dtype)
+    p["conv_w"] = jax.random.normal(ks[1], (cfg.d_conv, d_in), dtype) * 0.2
+    s["conv_w"] = (None, "mlp")
+    p["conv_b"] = jnp.zeros((d_in,), dtype)
+    s["conv_b"] = ("mlp",)
+    p["x_proj"], s["x_proj"] = init_linear(
+        ks[2], d_in, dt_rank + 2 * cfg.d_state, axes=("mlp", None), dtype=dtype)
+    p["dt_proj"], s["dt_proj"] = init_linear(
+        ks[3], dt_rank, d_in, axes=(None, "mlp"), bias=True, dtype=dtype)
+    # init dt bias so softplus(dt) ~ [1e-3, 1e-1]
+    p["dt_proj"]["b"] = jnp.asarray(
+        np.log(np.expm1(np.exp(np.random.default_rng(0).uniform(
+            np.log(1e-3), np.log(1e-1), d_in)))), dtype)
+    a = np.tile(np.arange(1, cfg.d_state + 1, dtype=np.float32), (d_in, 1))
+    p["A_log"] = jnp.asarray(np.log(a), dtype)
+    s["A_log"] = ("mlp", None)
+    p["D"] = jnp.ones((d_in,), dtype)
+    s["D"] = ("mlp",)
+    p["out_proj"], s["out_proj"] = init_linear(
+        ks[4], d_in, d_model, axes=("mlp", "embed"), dtype=dtype)
+    return p, s
+
+
+def _mamba_scan_chunk(h0, a, bx):
+    """Associative scan within a chunk.  a,bx: [T,B,d_in,N]; h0 [B,d_in,N]."""
+
+    def comb(l, r):
+        return (r[0] * l[0], r[0] * l[1] + r[1])
+
+    a_all, b_all = jax.lax.associative_scan(comb, (a, bx), axis=0)
+    h = a_all * h0[None] + b_all
+    return h, h[-1]
+
+
+def mamba_seq(p, x, cfg: SSMConfig, *, rns=None, h0=None, conv0=None):
+    """x [B,T,d] -> (y [B,T,d], (h_last, conv_tail)) — chunked selective scan."""
+    B, T, d = x.shape
+    d_in = cfg.expand * d
+    N = cfg.d_state
+    xz = linear(p["in_proj"], x, rns)
+    xs, z = jnp.split(xz, 2, axis=-1)                      # [B,T,d_in]
+    # causal depthwise conv (carry conv tail for decode continuity)
+    K = cfg.d_conv
+    tail = conv0 if conv0 is not None else jnp.zeros((B, K - 1, d_in), xs.dtype)
+    xpad = jnp.concatenate([tail, xs], axis=1)
+    xc = sum(
+        xpad[:, i : i + T] * p["conv_w"][i][None, None] for i in range(K)
+    ) + p["conv_b"][None, None]
+    new_tail = xpad[:, T:]
+    xc = jax.nn.silu(xc)
+
+    dbc = linear(p["x_proj"], xc, rns)
+    dt_rank = dbc.shape[-1] - 2 * N
+    dt, Bc, Cc = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(linear(p["dt_proj"], dt, rns))    # [B,T,d_in]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))           # [d_in,N]
+
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A[None, None])
+    bx = (dt * xc).astype(jnp.float32)[..., None] * Bc.astype(jnp.float32)[:, :, None, :]
+    # chunked scan over time
+    ch = cfg.chunk
+    nch = -(-T // ch)
+    pad = nch * ch - T
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    a = a.reshape(B, nch, ch, d_in, N).transpose(1, 2, 0, 3, 4)
+    bx = bx.reshape(B, nch, ch, d_in, N).transpose(1, 2, 0, 3, 4)
+
+    h_init = h0 if h0 is not None else jnp.zeros((B, d_in, N), jnp.float32)
+
+    @jax.checkpoint
+    def chunk_body(carry, inp):
+        ac, bc = inp                                       # [ch,B,d_in,N]
+        h_all, h_last = _mamba_scan_chunk(carry, ac, bc)
+        return h_last, h_all
+
+    h_last, h_seq = jax.lax.scan(chunk_body, h_init, (a, bx))
+    h_seq = h_seq.reshape(nch * ch, B, d_in, N)[:T].transpose(1, 0, 2, 3)
+    y = jnp.einsum("btdn,btn->btd", h_seq, Cc.astype(jnp.float32))
+    y = (y + xc.astype(jnp.float32) * p["D"][None, None]) * jax.nn.silu(
+        z.astype(jnp.float32))
+    out = linear(p["out_proj"], y.astype(x.dtype), rns)
+    return out, (h_last, new_tail)
+
+
+def mamba_step(p, x, cfg: SSMConfig, state, *, rns=None):
+    """One-token step.  state = (h [B,d_in,N], conv_tail [B,K-1,d_in])."""
+    y, (h, tail) = mamba_seq(p, x, cfg, rns=rns, h0=state[0], conv0=state[1])
+    return y, (h, tail)
+
+
+# ================================================================ RWKV-6 ===
+def init_rwkv6(key, d_model: int, cfg: SSMConfig, d_ff: int, dtype=jnp.float32):
+    H = d_model // cfg.head_dim
+    ks = jax.random.split(key, 12)
+    p, s = {}, {}
+    for i, name in enumerate(["wr", "wk", "wv", "wg"]):
+        p[name], s[name] = init_linear(
+            ks[i], d_model, d_model, axes=("embed", "heads"), dtype=dtype)
+    # o_proj: input lives in (model-sharded) head space -> Megatron pattern
+    p["wout"], s["wout"] = init_linear(
+        ks[4], d_model, d_model, axes=("heads", "embed"), dtype=dtype)
+    # token-shift mix coefficients (static part) for r,k,v,w,g
+    p["mix"] = jax.random.uniform(ks[5], (5, d_model), dtype, 0.0, 1.0)
+    s["mix"] = (None, "embed_vec")
+    # data-dependent decay lora: w = exp(-exp(w0 + tanh(x A) B))
+    lora = 64
+    p["w0"] = jnp.asarray(
+        np.linspace(-6.0, -1.0, d_model, dtype=np.float32), dtype)
+    s["w0"] = ("embed_vec",)
+    p["wA"], s["wA"] = init_linear(ks[6], d_model, lora, axes=("embed", None), dtype=dtype)
+    p["wB"], s["wB"] = init_linear(ks[7], lora, d_model, axes=(None, "embed_vec"), dtype=dtype)
+    p["u"] = jax.random.normal(ks[8], (H, cfg.head_dim), dtype) * 0.1  # bonus
+    s["u"] = ("kv_heads", None)
+    # per-head GroupNorm (RWKV's ln_x): stats are local to each head, so
+    # the normalization never crosses the model-axis shard boundary
+    p["ln_x"], s["ln_x"] = init_norm(d_model, "layernorm", dtype)
+    p["ln_cm"], s["ln_cm"] = init_norm(d_model, "layernorm", dtype)
+    # channel-mix
+    p["ck"], s["ck"] = init_linear(ks[9], d_model, d_ff, axes=("embed", "mlp"), dtype=dtype)
+    p["cv"], s["cv"] = init_linear(ks[10], d_ff, d_model, axes=("mlp", "embed"), dtype=dtype)
+    p["cr"], s["cr"] = init_linear(ks[11], d_model, d_model, axes=("embed", "embed_vec"), dtype=dtype)
+    p["cmix"] = jax.random.uniform(jax.random.fold_in(key, 3), (2, d_model), dtype, 0.0, 1.0)
+    s["cmix"] = (None, "embed_vec")
+    return p, s
+
+
+def _rwkv_chunk_matmul(S0, r, k, v, w, u):
+    """Chunked matmul (GLA) form of the WKV recurrence.
+
+    S0 [B,H,D,D] (k-major), r/k/v/w [L,B,H,D], u [H,D].  Exactly equivalent
+    to the stepwise recurrence up to f32 rounding; per-channel decays are
+    factored as exp(cumsum(log w)) with a +/-30 clamp on the exponent (the
+    clipped cross-chunk terms are < e^-30).
+
+      out_i = (r_i*P_{i-1}) @ S0 + sum_{j<i} <r_i*P_{i-1}, k_j/P_j> v_j
+              + <r_i, u*k_i> v_i
+      S_L   = diag(P_{L-1}) S0 + sum_j diag(P_{L-1}/P_j) k_j v_j^T
+    """
+    lw = jnp.log(jnp.maximum(w, 1e-38))
+    cum = jnp.cumsum(lw, axis=0)                         # [L,B,H,D] inclusive
+    q2 = r * jnp.exp(cum - lw)                           # r_i * P_{i-1}
+    k2 = k * jnp.exp(-jnp.maximum(cum, -30.0))           # k_j / P_j (clamped)
+    scores = jnp.einsum("ibhd,jbhd->bhij", q2, k2)
+    L = r.shape[0]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=-1)        # strictly lower
+    scores = jnp.where(mask[None, None], scores, 0.0)
+    inter = jnp.einsum("bhij,jbhd->ibhd", scores, v)
+    direct = jnp.einsum("ibhd,bhde->ibhe", q2, S0)
+    bonus = jnp.sum(r * u[None, None] * k, axis=-1, keepdims=True) * v
+    outs = inter + direct + bonus
+    p_last = cum[-1]                                     # [B,H,D]
+    kdec = k * jnp.exp(jnp.minimum(p_last[None] - cum, 30.0))
+    S_next = jnp.exp(p_last)[..., None] * S0 + jnp.einsum(
+        "ibhd,ibhe->bhde", kdec, v)
+    return S_next, outs
+
+
+def _rwkv_chunk(carry, inp, H, D):
+    """Sequential wkv recurrence within a chunk (scan over time).
+
+    carry S [B,H,D,D]; inp per-step (r,k,v,w,u) each [ch,B,H,D].
+    """
+    r, k, v, w, u = inp
+
+    def step(S, t):
+        rt, kt, vt, wt = r[t], k[t], v[t], w[t]
+        kv = kt[..., :, None] * vt[..., None, :]            # [B,H,D,D]
+        out = jnp.einsum("bhd,bhde->bhe", rt, S + u[None] [..., None] * kv)
+        S = wt[..., None] * S + kv
+        return S, out
+
+    S, outs = jax.lax.scan(step, carry, jnp.arange(r.shape[0]))
+    return S, outs
+
+
+def rwkv6_timemix(p, x, cfg: SSMConfig, *, rns=None, state=None):
+    """x [B,T,d] -> (y, (S_last, x_last)).  state carries (S, prev token)."""
+    B, T, d = x.shape
+    D = cfg.head_dim
+    H = d // D
+    x_prev_0 = state[1] if state is not None else jnp.zeros((B, 1, d), x.dtype)
+    x_prev = jnp.concatenate([x_prev_0, x[:, :-1]], axis=1)
+
+    # NOTE §Perf rwkv iter 3: fusing the five projections into one matmul
+    # (via [x, xp-x] @ [[W],[diag(m)W]]) REDUCED dx all-reduces 11% but the
+    # on-the-fly weight concat of differently-sharded pieces cost more in
+    # collective-permutes than it saved — refuted, reverted.
+    def mix(i):
+        m = p["mix"][i][None, None]
+        return x + (x_prev - x) * m
+
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = linear(p["wr"], xr, rns).reshape(B, T, H, D)
+    k = linear(p["wk"], xk, rns).reshape(B, T, H, D)
+    v = linear(p["wv"], xv, rns).reshape(B, T, H, D)
+    g = jax.nn.silu(linear(p["wg"], xg, rns))
+    # data-dependent decay (Finch)
+    wlog = p["w0"][None, None] + linear(
+        p["wB"], jnp.tanh(linear(p["wA"], xw, rns)), rns)
+    w = jnp.exp(-jnp.exp(wlog.astype(jnp.float32))).reshape(B, T, H, D)
+
+    ch = cfg.chunk
+    nch = -(-T // ch)
+    pad = nch * ch - T
+    seq = [r, k, v, w]
+    if pad:
+        seq = [jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                       constant_values=(1.0 if t is w else 0.0)) for t in seq]
+    r_, k_, v_, w_ = (
+        t.astype(jnp.float32).reshape(B, nch, ch, H, D).transpose(1, 2, 0, 3, 4)
+        for t in seq
+    )
+    u = p["u"].astype(jnp.float32)
+    S0 = state[0] if state is not None else jnp.zeros((B, H, D, D), jnp.float32)
+
+    chunked = cfg.impl == "chunked"
+
+    @jax.checkpoint
+    def chunk_body(S, inp):
+        rc, kc, vc, wc = inp
+        if chunked:
+            S, outs = _rwkv_chunk_matmul(S, rc, kc, vc, wc, u)
+        else:
+            S, outs = _rwkv_chunk(S, (rc, kc, vc, wc, u), H, D)
+        return S, outs
+
+    S_last, outs = jax.lax.scan(chunk_body, S0, (r_, k_, v_, w_))
+    y = outs.reshape(nch * ch, B, H, D)[:T].transpose(1, 0, 2, 3)  # [B,T,H,D]
+    # GroupNorm over each head's D dims (shard-local on the model axis)
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(y - mu), axis=-1, keepdims=True)
+    y = ((y - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(B, T, d)
+    y = (y * p["ln_x"]["scale"][None, None]
+         + p["ln_x"]["bias"][None, None]).astype(x.dtype) * g
+    out = linear(p["wout"], y, rns)
+    return out, (S_last, x[:, -1:])
+
+
+def rwkv6_channelmix(p, x, *, rns=None, state=None):
+    """RWKV channel-mix (the FFN analogue).  state carries prev token."""
+    B, T, d = x.shape
+    x_prev_0 = state if state is not None else jnp.zeros((B, 1, d), x.dtype)
+    x_prev = jnp.concatenate([x_prev_0, x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * p["cmix"][0][None, None]
+    xr = x + (x_prev - x) * p["cmix"][1][None, None]
+    kk = jnp.square(jax.nn.relu(linear(p["ck"], xk, rns)))
+    out = jax.nn.sigmoid(linear(p["cr"], xr, rns)) * linear(p["cv"], kk, rns)
+    return out, x[:, -1:]

@@ -1,0 +1,99 @@
+"""AdamW + schedules + global-norm clipping (functional, partitionable).
+
+Optimizer state mirrors the param tree (same sharding specs apply), so
+FSDP shards m/v alongside the weights — the ZeRO property.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"       # cosine|linear|constant
+    min_lr_ratio: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    else:
+        t = jnp.clip(
+            (step - cfg.warmup_steps)
+            / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+            0.0, 1.0,
+        )
+        if cfg.schedule == "cosine":
+            decay = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        else:
+            decay = 1.0 - t
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * decay
+    return cfg.lr * warm * decay
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gn
+
+
+def adamw_update(cfg: AdamWConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt_state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m2.astype(m.dtype), v2.astype(v.dtype))
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gn, "lr": lr}

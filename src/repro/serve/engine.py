@@ -1,0 +1,61 @@
+"""Batched serving engine: prefill + greedy decode with per-row stopping.
+
+Batches are grouped by exact prompt length (bucketed batching); decode is a
+jitted step over the shared cache with per-row lengths, so rows that hit
+EOS simply stop contributing (their token is frozen).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_cache: int = 512
+    max_new_tokens: int = 32
+    eos_id: int = -1            # -1: never stops early
+    cache_dtype: str = "float32"
+
+
+class Engine:
+    def __init__(self, params, model_cfg, scfg: ServeConfig):
+        self.params = params
+        self.cfg = model_cfg
+        self.scfg = scfg
+        self._prefill = jax.jit(
+            functools.partial(M.prefill, cfg=model_cfg, S_max=scfg.max_cache,
+                              cache_dtype=jnp.dtype(scfg.cache_dtype)),
+            static_argnames=())
+        self._decode = jax.jit(
+            lambda params, tok, cache: M.decode_step(
+                params, model_cfg, tok, cache))
+
+    def generate(self, prompts: np.ndarray, frontend: np.ndarray | None = None,
+                 max_new: int | None = None):
+        """prompts [B, T] int32 (equal lengths). Returns [B, n_new] tokens."""
+        max_new = max_new or self.scfg.max_new_tokens
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if frontend is not None:
+            batch["frontend"] = jnp.asarray(frontend)
+        logits, cache = self._prefill(self.params, batch=batch)
+        B = prompts.shape[0]
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        done = jnp.zeros((B,), bool)
+        out = [tok]
+        for _ in range(max_new - 1):
+            done = done | (tok[:, 0] == self.scfg.eos_id)
+            logits, cache = self._decode(self.params, tok, cache)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            tok = jnp.where(done[:, None], tok, nxt)
+            out.append(tok)
+            if bool(jnp.all(done)):
+                break
+        return np.asarray(jnp.concatenate(out, axis=1))

@@ -1,0 +1,86 @@
+"""The jitted train step: loss -> grads -> AdamW, donation-friendly."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+def init_train_state(key, cfg):
+    params, specs = M.init_model(key, cfg)
+    state = {"params": params, "opt": init_opt_state(params)}
+    state_specs = {
+        "params": specs,
+        "opt": {"m": specs, "v": specs, "step": ()},
+    }
+    return state, state_specs
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, *, compress_dci: bool = False):
+    """compress_dci: int8+error-feedback quantization of the gradients that
+    cross the slow pod-to-pod hop (distributed/compression.py).  The
+    residual re-enters next step, so the long-run update is unbiased; state
+    gains an "ef" tree when enabled."""
+    accum = max(1, getattr(cfg, "grad_accum", 1))
+
+    def grads_of(params, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch), has_aux=True)(params)
+        return loss, parts, grads
+
+    def train_step(state, batch):
+        if accum == 1:
+            loss, parts, grads = grads_of(state["params"], batch)
+        else:
+            # microbatching: bound activation residency (the per-chip HBM
+            # fit knob); grads accumulate in f32, sharded like the params
+            mb = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum)
+                                    + x.shape[1:]), batch)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+
+            def micro(carry, mbatch):
+                gacc, lacc, aacc = carry
+                loss, parts, g = grads_of(state["params"], mbatch)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + loss, aacc + parts["aux"]), None
+
+            (gsum, lsum, asum), _ = jax.lax.scan(
+                micro, (g0, jnp.zeros((), jnp.float32),
+                        jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(
+                lambda g, p: (g / accum).astype(p.dtype), gsum,
+                state["params"])
+            loss = lsum / accum
+            parts = {"ce": loss - asum / accum, "aux": asum / accum}
+        new_state = {}
+        if compress_dci:
+            from repro.distributed.compression import (
+                decompress_tree,
+                ef_compress_tree,
+            )
+
+            qtree, ef = ef_compress_tree(grads, state.get("ef"))
+            grads = jax.tree.map(
+                lambda g, d: d.astype(g.dtype), grads, decompress_tree(qtree))
+            new_state["ef"] = ef
+        new_params, new_opt, om = adamw_update(
+            opt_cfg, grads, state["opt"], state["params"])
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                   **om}
+        return {"params": new_params, "opt": new_opt, **new_state}, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg):
+    def eval_step(params, batch):
+        loss, parts = M.loss_fn(params, cfg, batch)
+        return {"loss": loss, **parts}
+
+    return eval_step

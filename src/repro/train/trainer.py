@@ -1,0 +1,110 @@
+"""Training loop with checkpoint/restart, stragglers, preemption.
+
+Single-host execution here; the fault-tolerance hooks are the same objects
+a multi-host launcher would drive (see distributed/fault_tolerance.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpointer as ckpt
+from repro.data.pipeline import DataConfig, SyntheticLM, make_frontend_stub
+from repro.distributed.fault_tolerance import (
+    Heartbeat,
+    PreemptionHandler,
+    StragglerMonitor,
+)
+from repro.optim.adamw import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 200
+    ckpt_every: int = 50
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    seed: int = 0
+    async_ckpt: bool = True
+    keep_last: int = 3
+
+
+class Trainer:
+    def __init__(self, model_cfg, opt_cfg: AdamWConfig, tcfg: TrainerConfig,
+                 data_cfg: DataConfig, host: str = "host0"):
+        self.model_cfg = model_cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.data = SyntheticLM(data_cfg)
+        self.step_fn = jax.jit(make_train_step(model_cfg, opt_cfg),
+                               donate_argnums=(0,))
+        self.straggler = StragglerMonitor()
+        self.preempt = PreemptionHandler(install=False)
+        self.heartbeat = Heartbeat(tcfg.ckpt_dir + "/hb", host)
+        self.host = host
+        self._rng = np.random.default_rng(tcfg.seed + 17)
+        self._pending_save = None
+
+    # ------------------------------------------------------------ state ---
+    def init_or_resume(self):
+        latest = ckpt.latest_valid(self.tcfg.ckpt_dir)
+        state, _ = init_train_state(
+            jax.random.PRNGKey(self.tcfg.seed), self.model_cfg)
+        if latest is None:
+            return state, 0
+        state, extra, step = ckpt.restore(latest, state)
+        log.info("resumed from %s (step %d)", latest, step)
+        return state, step
+
+    def _batch(self, step):
+        b = {k: jax.numpy.asarray(v) for k, v in self.data.batch(step).items()}
+        cfg = self.model_cfg
+        if cfg.frontend is not None:
+            rng = np.random.default_rng((self.tcfg.seed, step, 99))
+            b["frontend"] = jax.numpy.asarray(make_frontend_stub(
+                rng, self.data.local_batch, cfg.n_frontend_tokens,
+                cfg.d_model))
+        return b
+
+    def _save(self, state, step):
+        if self._pending_save is not None:
+            self._pending_save.result()  # backpressure: one in flight
+        if self.tcfg.async_ckpt:
+            self._pending_save = ckpt.save_async(
+                self.tcfg.ckpt_dir, step, state, {"host": self.host})
+        else:
+            ckpt.save(self.tcfg.ckpt_dir, step, state, {"host": self.host})
+
+    # ------------------------------------------------------------- loop ---
+    def run(self, max_steps: int | None = None):
+        state, start = self.init_or_resume()
+        history = []
+        end = min(self.tcfg.total_steps,
+                  start + (max_steps or self.tcfg.total_steps))
+        for step in range(start, end):
+            t0 = time.perf_counter()
+            state, metrics = self.step_fn(state, self._batch(step))
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.straggler.report(self.host, dt)
+            self.heartbeat.beat(step)
+            history.append(loss)
+            if step % self.tcfg.log_every == 0:
+                log.info("step %d loss %.4f (%.1f ms)", step, loss, dt * 1e3)
+            if (step + 1) % self.tcfg.ckpt_every == 0 or step + 1 == end:
+                self._save(state, step + 1)
+            if self.preempt.requested:
+                log.warning("preemption requested: checkpointing and exiting")
+                self._save(state, step + 1)
+                break
+        if self._pending_save is not None:
+            self._pending_save.result()
+        return state, history

@@ -1,0 +1,15 @@
+import os
+
+# Tests run on the single real CPU device; the 512-device farm is ONLY for
+# the dry-run process (launch/dryrun.py sets its own XLA_FLAGS).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "ci",
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("ci")

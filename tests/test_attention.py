@@ -1,0 +1,114 @@
+"""Attention equivalences: flash == chunked == dense; decode == full."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.models.attention import (
+    chunked_attention,
+    decode_attention,
+    dense_attention,
+    flash_attention,
+    rope,
+)
+
+
+def _qkv(rng, B=2, T=96, H=8, Hk=2, D=16, Dv=None):
+    q = jnp.asarray(rng.standard_normal((B, T, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, T, Hk, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, T, Hk, Dv or D)), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("Dv", [16, 24])
+def test_chunked_and_flash_match_dense(causal, Dv):
+    rng = np.random.default_rng(0)
+    q, k, v = _qkv(rng, Dv=Dv)
+    # position 0 always valid: a fully-masked row is undefined behaviour in
+    # any softmax-attention implementation
+    mask = jnp.asarray(rng.random((2, 96)) > 0.2).at[:, 0].set(True)
+    d = dense_attention(q, k, v, causal=causal, kv_mask=mask)
+    c = chunked_attention(q, k, v, causal=causal, kv_mask=mask, chunk=17)
+    f = flash_attention(q, k, v, causal=causal, kv_mask=mask, q_chunk=32,
+                        kv_chunk=17)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(c), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(f), atol=2e-5)
+
+
+def test_flash_gradients_match_dense():
+    rng = np.random.default_rng(1)
+    q, k, v = _qkv(rng, T=64)
+
+    def loss(fn, q, k, v):
+        return jnp.sum(fn(q, k, v) ** 2)
+
+    gd = jax.grad(lambda q, k, v: loss(
+        lambda *a: dense_attention(*a, causal=True), q, k, v), (0, 1, 2))(q, k, v)
+    gf = jax.grad(lambda q, k, v: loss(
+        lambda *a: flash_attention(*a, causal=True, q_chunk=16, kv_chunk=16),
+        q, k, v), (0, 1, 2))(q, k, v)
+    for a, b in zip(gd, gf):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-5)
+
+
+def test_decode_matches_dense_last_row():
+    rng = np.random.default_rng(2)
+    B, T, H, Hk, D = 2, 33, 6, 3, 8
+    q, k, v = _qkv(rng, B, T, H, Hk, D)
+    full = dense_attention(q, k, v, causal=True)
+    # decode the last position against a padded cache with ragged lengths
+    S = 48
+    kc = jnp.zeros((B, S, Hk, D)).at[:, :T].set(k)
+    vc = jnp.zeros((B, S, Hk, D)).at[:, :T].set(v)
+    out, lse = decode_attention(q[:, -1:], kc, vc, jnp.full((B,), T))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(full[:, -1:]),
+                               atol=2e-5)
+
+
+def test_decode_lse_combine_over_seq_shards():
+    """Flash-decoding invariant: shard KV on seq, combine partials via LSE."""
+    rng = np.random.default_rng(3)
+    B, T, H, Hk, D = 2, 64, 4, 2, 8
+    q, k, v = _qkv(rng, B, T, H, Hk, D)
+    full, _ = decode_attention(q[:, -1:], k, v, jnp.full((B,), T))
+    o1, l1 = decode_attention(q[:, -1:], k[:, :40], v[:, :40],
+                              jnp.full((B,), 40))
+    # second shard holds positions 40..64 (mask: lengths relative to shard)
+    o2, l2 = decode_attention(q[:, -1:], k[:, 40:], v[:, 40:],
+                              jnp.full((B,), T - 40))
+    w1 = jnp.exp(l1 - jnp.logaddexp(l1, l2))
+    w2 = 1.0 - w1
+    B_, Hk_, G, Tq = w1.shape
+    wf1 = w1.transpose(0, 3, 1, 2).reshape(B_, Tq, Hk_ * G)[..., None]
+    wf2 = w2.transpose(0, 3, 1, 2).reshape(B_, Tq, Hk_ * G)[..., None]
+    comb = o1 * wf1 + o2 * wf2
+    np.testing.assert_allclose(np.asarray(comb), np.asarray(full), atol=2e-5)
+
+
+@given(st.integers(0, 2**20))
+def test_rope_preserves_norm(offset):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((1, 4, 2, 16)), jnp.float32)
+    pos = jnp.full((1, 4), offset)
+    y = rope(x, pos)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i - j."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+
+    def dot_at(i, j):
+        qi = rope(q, jnp.full((1, 1), i))
+        kj = rope(k, jnp.full((1, 1), j))
+        return float(jnp.sum(qi * kj))
+
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-3
+    assert abs(dot_at(7, 7) - dot_at(1000, 1000)) < 1e-3

@@ -1,0 +1,68 @@
+"""Straggler detection, heartbeats, elastic planning, gradient compression."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.compression import (
+    compress_int8,
+    decompress_int8,
+    decompress_tree,
+    ef_compress_tree,
+)
+from repro.distributed.fault_tolerance import (
+    Heartbeat,
+    StragglerMonitor,
+    plan_remesh,
+)
+
+
+def test_straggler_detection():
+    mon = StragglerMonitor(tau=1.5)
+    for step in range(8):
+        for h in range(8):
+            mon.report(f"host{h}", 1.0 if h != 3 else 2.5)
+    assert mon.stragglers() == ["host3"]
+    plan = mon.mitigation_plan()
+    assert plan["action"] == "checkpoint_and_evict"
+    assert "host3" in plan["stragglers"] and "host0" in plan["healthy"]
+
+
+def test_heartbeat_dead_host(tmp_path):
+    hb0 = Heartbeat(str(tmp_path), "h0")
+    hb1 = Heartbeat(str(tmp_path), "h1")
+    hb0.beat(1, now=1000.0)
+    hb1.beat(1, now=1060.0)
+    assert Heartbeat.dead_hosts(str(tmp_path), timeout_s=30, now=1065.0) == ["h0"]
+    assert Heartbeat.dead_hosts(str(tmp_path), timeout_s=120, now=1065.0) == []
+
+
+def test_plan_remesh():
+    assert plan_remesh(512) == (32, 16)
+    assert plan_remesh(496) == (31, 16)   # one host of 16 chips lost
+    assert plan_remesh(8, model_parallel=16) == (1, 16)
+
+
+def test_int8_compression_roundtrip_error():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+    q, s = compress_int8(x)
+    err = np.max(np.abs(np.asarray(decompress_int8(q, s) - x)))
+    assert err <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_is_unbiased_over_time():
+    """EF: sum of decompressed grads converges to sum of true grads."""
+    rng = np.random.default_rng(1)
+    grads = [{"w": jnp.asarray(rng.standard_normal(64), jnp.float32)}
+             for _ in range(30)]
+    err_state = None
+    acc_comp = np.zeros(64)
+    acc_true = np.zeros(64)
+    for g in grads:
+        qtree, err_state = ef_compress_tree(g, err_state)
+        dec = decompress_tree(qtree)
+        acc_comp += np.asarray(dec["w"])
+        acc_true += np.asarray(g["w"])
+    # residual is bounded by the final error state, not accumulated
+    resid = np.max(np.abs(acc_comp - acc_true))
+    assert resid <= np.max(np.abs(np.asarray(err_state["w"]))) + 1e-5

@@ -1,0 +1,114 @@
+"""Olsen fractional RNS vs exact Fraction oracle."""
+
+from fractions import Fraction
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import fractional as fr
+from repro.core.moduli import get_profile
+
+P = get_profile("rns9")
+EPS = 1.0 / P.M_f
+
+floats = st.floats(-100, 100, allow_nan=False, width=32)
+
+
+@given(st.lists(floats, min_size=1, max_size=16))
+def test_encode_decode(xs):
+    r = fr.fr_encode(P, np.asarray(xs, np.float32))
+    out = np.asarray(fr.fr_decode(P, r))
+    np.testing.assert_allclose(out, xs, atol=EPS * (1 + np.abs(xs).max()),
+                               rtol=1e-5)
+
+
+@given(st.lists(st.floats(-50, 50, allow_nan=False, width=32), min_size=1,
+                max_size=8),
+       st.lists(st.floats(-50, 50, allow_nan=False, width=32), min_size=1,
+                max_size=8))
+def test_fr_mul_error_bound(xs, ys):
+    n = min(len(xs), len(ys))
+    xs, ys = np.asarray(xs[:n], np.float32), np.asarray(ys[:n], np.float32)
+    fx, fy = fr.fr_encode(P, xs), fr.fr_encode(P, ys)
+    fz = fr.fr_mul(P, fx, fy)
+    # oracle: quantized ints, exact product, round-half-away-from-zero /M_f
+    # (scale_signed rounds the magnitude with a +M_f/2 bias)
+    def rhaz(v):
+        s = -1 if v < 0 else 1
+        return s * ((abs(v) + P.M_f // 2) // P.M_f)
+
+    # mirror fr_encode's float32 arithmetic exactly (f64 rounding can land
+    # on a different integer near ties)
+    def q32(v):
+        return int(np.round(np.float32(v) * np.float32(P.M_f)))
+
+    qx = [q32(v) for v in xs]
+    qy = [q32(v) for v in ys]
+    want = [rhaz(a * b) for a, b in zip(qx, qy)]
+    got = fr.fr_decode_exact(P, np.asarray(fz))
+    for g, w in zip(got, want):
+        assert g == Fraction(int(w), P.M_f)
+
+
+def test_deferred_dot_exact_and_single_normalization():
+    rng = np.random.default_rng(0)
+    n = 64
+    xs = rng.uniform(-1, 1, (n, 8)).astype(np.float32)
+    ys = rng.uniform(-1, 1, (n, 8)).astype(np.float32)
+    fxs = jnp.stack([fr.fr_encode(P, xs[i]) for i in range(n)])
+    fys = jnp.stack([fr.fr_encode(P, ys[i]) for i in range(n)])
+    out = np.asarray(fr.fr_decode(P, fr.fr_dot_deferred(P, fxs, fys)))
+    # oracle on quantized values
+    qx = np.round(xs * P.M_f)
+    qy = np.round(ys * P.M_f)
+    want = (qx.astype(object) * qy.astype(object)).sum(0)
+    want = np.asarray([round(Fraction(int(w), P.M_f * P.M_f) * P.M_f) / P.M_f
+                       for w in want])
+    np.testing.assert_allclose(out, want.astype(np.float64), atol=2 * EPS)
+
+
+@given(st.lists(floats, min_size=1, max_size=8), st.floats(-90, 90, width=32))
+def test_fr_compare(xs, c):
+    r = fr.fr_encode(P, np.asarray(xs, np.float32))
+    got = np.asarray(fr.fr_ge_const(P, r, float(c)))
+    qc = round(Fraction(float(c)) * P.M_f)
+    for g, x in zip(got, xs):
+        qx = int(np.round(np.float32(x) * np.float32(P.M_f)))
+        assert bool(g) == (qx >= qc)
+
+
+def test_mandelbrot_iteration_matches_float64():
+    """The paper's Rez-9 demo: sustained iterative fractional RNS compute."""
+    p = get_profile("rns12")
+    grid = 8
+    xs = np.linspace(-2.0, 0.6, grid)
+    ys = np.linspace(-1.2, 1.2, grid)
+    cr = np.repeat(xs, grid).astype(np.float32)
+    ci = np.tile(ys, grid).astype(np.float32)
+    # RNS iteration
+    zr, zi = fr.fr_encode(p, np.zeros_like(cr)), fr.fr_encode(p, np.zeros_like(ci))
+    fcr, fci = fr.fr_encode(p, cr), fr.fr_encode(p, ci)
+    esc_rns = np.full(cr.shape, 99, np.int32)
+    zr64 = np.zeros_like(cr, np.float64)
+    zi64 = np.zeros_like(ci, np.float64)
+    esc_f64 = np.full(cr.shape, 99, np.int32)
+    for it in range(20):
+        # RNS: z = z^2 + c with deferred normalization per term
+        rr = fr.fr_mul_raw(p, zr, zr)
+        ii = fr.fr_mul_raw(p, zi, zi)
+        ri = fr.fr_mul_raw(p, zr, zi)
+        mag_raw = fr.fr_add(p, rr, ii)
+        escaped = np.asarray(fr.fr_ge_const(p, mag_raw, 4.0, raw=True))
+        esc_rns = np.where((esc_rns == 99) & escaped, it, esc_rns)
+        new_zr = fr.fr_add(p, fr.fr_normalize(p, fr.fr_sub(p, rr, ii)), fcr)
+        two_ri = fr.fr_add(p, ri, ri)
+        new_zi = fr.fr_add(p, fr.fr_normalize(p, two_ri), fci)
+        zr, zi = new_zr, new_zi
+        # float64 reference
+        mag = zr64 * zr64 + zi64 * zi64
+        esc_f64 = np.where((esc_f64 == 99) & (mag >= 4.0), it, esc_f64)
+        zr64, zi64 = zr64 * zr64 - zi64 * zi64 + cr, 2 * zr64 * zi64 + ci
+    # escape iterations agree except at numerical boundaries
+    agree = np.mean(esc_rns == esc_f64)
+    assert agree > 0.9, (esc_rns, esc_f64)

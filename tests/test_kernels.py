@@ -1,0 +1,84 @@
+"""Pallas kernels (interpret mode) vs pure-jnp oracles: shape/dtype sweeps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.rns import encode_exact, encode_int32, tables
+from repro.core.rns_matmul import RnsDotConfig, rns_dot
+from repro.kernels.rns_convert.ops import rns_convert
+from repro.kernels.rns_convert.ref import rns_convert_ref
+from repro.kernels.rns_matmul.ops import rns_matmul
+from repro.kernels.rns_matmul.ref import rns_matmul_ref
+from repro.kernels.rns_normalize.ops import rns_normalize
+from repro.kernels.rns_normalize.ref import rns_normalize_ref
+
+PROFILES = ["rns5", "rns9"]
+
+
+@pytest.mark.parametrize("profile", PROFILES)
+@pytest.mark.parametrize("dtype", [jnp.int8, jnp.int32])
+@pytest.mark.parametrize(
+    "shape", [(4, 32, 8), (128, 512, 128), (17, 100, 9), (130, 700, 150),
+              (1, 1, 1)])
+def test_matmul_kernel_matches_ref(profile, dtype, shape):
+    t = tables(profile)
+    M, D, N = shape
+    rng = np.random.default_rng(hash((profile, shape)) % 2**32)
+    A = rng.integers(-2**11, 2**11, (M, D)).astype(np.int32)
+    B = rng.integers(-2**11, 2**11, (D, N)).astype(np.int32)
+    ra = encode_int32(profile, A).astype(dtype)
+    rb = encode_int32(profile, B).astype(dtype)
+    got = np.asarray(rns_matmul(profile, ra, rb))
+    want = np.asarray(rns_matmul_ref(np.asarray(t.moduli), ra, rb))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("batch", [(), (3,), (2, 3)])
+def test_matmul_kernel_batched(batch):
+    profile = "rns9"
+    t = tables(profile)
+    rng = np.random.default_rng(0)
+    A = rng.integers(-500, 500, batch + (5, 64)).astype(np.int32)
+    B = rng.integers(-500, 500, (64, 7)).astype(np.int32)
+    ra = encode_int32(profile, A).astype(jnp.int8)
+    rb = encode_int32(profile, B).astype(jnp.int8)
+    got = np.asarray(rns_matmul(profile, ra, rb))
+    K = ra.shape[0]
+    want = np.asarray(rns_matmul_ref(
+        np.asarray(t.moduli), ra.reshape(K, -1, 64), rb)).reshape(got.shape)
+    assert np.array_equal(got, want)
+
+
+@given(st.lists(st.integers(-(2**55), 2**55), min_size=1, max_size=40),
+       st.sampled_from(PROFILES))
+def test_normalize_kernel_matches_ref(vals, profile):
+    rv = jnp.asarray(encode_exact(profile, np.asarray(vals, dtype=object)))
+    got = np.asarray(rns_normalize(profile, rv))
+    want = np.asarray(rns_normalize_ref(rv, profile=profile))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("profile", PROFILES)
+@pytest.mark.parametrize("bits", [8, 12, 16])
+@pytest.mark.parametrize("shape", [(7,), (3, 55), (1, 1)])
+def test_convert_kernel_matches_ref(profile, bits, shape):
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal(shape).astype(np.float32) * 10
+    s = np.float32(37.5)
+    got = np.asarray(rns_convert(profile, jnp.asarray(x), s, bits=bits))
+    want = np.asarray(
+        rns_convert_ref(x.reshape(-1), s, profile=profile, bits=bits))
+    assert np.array_equal(got.reshape(got.shape[0], -1), want)
+
+
+def test_end_to_end_pallas_equals_jnp_backend():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((6, 200)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((200, 12)), jnp.float32)
+    y_j = rns_dot(x, w, RnsDotConfig(profile="rns9", qx=14, qw=14))
+    y_p = rns_dot(x, w, RnsDotConfig(profile="rns9", qx=14, qw=14,
+                                     use_pallas=True))
+    assert np.array_equal(np.asarray(y_j), np.asarray(y_p))

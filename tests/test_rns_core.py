@@ -1,0 +1,112 @@
+"""Core RNS arithmetic vs python-int oracles (exact, property-based)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import mrc, rns
+from repro.core.moduli import PROFILES, get_profile, required_digits
+
+P9 = get_profile("rns9")
+HALF = P9.M // 2
+
+
+class TestModuli:
+    def test_profiles_coprime_and_sized(self):
+        import math
+
+        for name, p in PROFILES.items():
+            ms = p.moduli
+            for i in range(len(ms)):
+                for j in range(i + 1, len(ms)):
+                    assert math.gcd(ms[i], ms[j]) == 1
+            assert p.M == int(np.prod([int(m) for m in ms], dtype=object))
+            if p.int8_safe:
+                assert p.max_digit <= 128
+
+    def test_capacity(self):
+        # rns9 must hold an exact 16x16-bit dot of >= 2**29 terms
+        assert P9.dot_capacity(16, 16) >= 2**29
+
+    def test_required_digits_monotone(self):
+        ds = [required_digits(n, 16, 16) for n in (16, 4096, 10**6)]
+        assert ds == sorted(ds)
+        assert required_digits(4096, 8, 8) < required_digits(4096, 24, 24)
+
+
+@given(st.lists(st.integers(-HALF + 1, HALF - 1), min_size=1, max_size=16))
+def test_exact_roundtrip(vals):
+    res = rns.encode_exact(P9, np.asarray(vals, dtype=object))
+    back = rns.decode_exact(P9, res)
+    assert [int(b) for b in back] == vals
+
+
+@given(st.lists(st.integers(-(2**30), 2**30 - 1), min_size=1, max_size=32))
+def test_decode_int32_exact(vals):
+    r = rns.encode_int32(P9, np.asarray(vals, np.int32))
+    out = np.asarray(mrc.decode_int32(P9, r))
+    assert out.tolist() == vals
+
+
+@given(
+    st.lists(st.integers(-(2**25), 2**25), min_size=1, max_size=8),
+    st.lists(st.integers(-(2**25), 2**25), min_size=1, max_size=8),
+)
+def test_pac_ops_match_oracle(a, b):
+    n = min(len(a), len(b))
+    a, b = a[:n], b[:n]
+    ra = rns.encode_int32(P9, np.asarray(a, np.int32))
+    rb = rns.encode_int32(P9, np.asarray(b, np.int32))
+    add = rns.decode_exact(P9, np.asarray(rns.rns_add(P9, ra, rb)))
+    sub = rns.decode_exact(P9, np.asarray(rns.rns_sub(P9, ra, rb)))
+    mul = rns.decode_exact(P9, np.asarray(rns.rns_mul(P9, ra, rb)))
+    for i in range(n):
+        assert int(add[i]) == a[i] + b[i]
+        assert int(sub[i]) == a[i] - b[i]
+        assert int(mul[i]) == a[i] * b[i]
+
+
+@given(st.lists(st.integers(-(2**60), 2**60), min_size=1, max_size=16))
+def test_sign_detection(vals):
+    r = jnp.asarray(rns.encode_exact(P9, np.asarray(vals, dtype=object)))
+    s = np.asarray(mrc.rns_sign(P9, r))
+    assert s.tolist() == [int(np.sign(v)) for v in vals]
+
+
+@given(st.lists(st.integers(-(2**55), 2**55), min_size=1, max_size=16))
+def test_scale_signed_is_round_div(vals):
+    from fractions import Fraction
+
+    r = jnp.asarray(rns.encode_exact(P9, np.asarray(vals, dtype=object)))
+    sc = mrc.scale_signed(P9, r)
+    got = rns.decode_exact(P9, np.asarray(sc))
+    for g, v in zip(got, vals):
+        assert int(g) == round(Fraction(v, P9.M_f))
+
+
+@given(st.lists(st.integers(-(2**40), 2**40), min_size=1, max_size=16),
+       st.integers(-(2**40), 2**40))
+def test_compare_ge_const(vals, c):
+    r = jnp.asarray(rns.encode_exact(P9, np.asarray(vals, dtype=object)))
+    got = np.asarray(mrc.compare_ge_const(P9, r, c))
+    assert got.tolist() == [v >= c for v in vals]
+
+
+def test_decode_float_precision():
+    rng = np.random.default_rng(0)
+    vals = rng.integers(-(2**50), 2**50, 64).astype(object)
+    r = jnp.asarray(rns.encode_exact(P9, vals))
+    out = np.asarray(mrc.decode_float(P9, r, inv_scale=2.0**-20))
+    want = np.asarray([float(v) * 2.0**-20 for v in vals])
+    np.testing.assert_allclose(out, want, rtol=2e-6)
+
+
+def test_base_extend_consistent():
+    rng = np.random.default_rng(1)
+    f = P9.frac_digits
+    small = rng.integers(0, P9.M_f, 32).astype(object)
+    r = jnp.asarray(rns.encode_exact(P9, small))
+    digits = mrc.mrc_digits(P9, r)
+    ext = mrc.base_extend(P9, digits, f)
+    assert np.array_equal(np.asarray(ext), np.asarray(r))

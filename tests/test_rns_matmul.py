@@ -1,0 +1,79 @@
+"""Digit-sliced matmul: exactness, gradients, capacity guard."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rns
+from repro.core.moduli import get_profile
+from repro.core.rns_matmul import RnsDotConfig, rns_dot, rns_matmul_res
+
+
+@pytest.mark.parametrize("profile", ["rns5", "rns9", "rns12", "rns8_u8"])
+@pytest.mark.parametrize("shape", [(1, 8, 1), (4, 64, 8), (17, 333, 5)])
+def test_matmul_exact_vs_python_ints(profile, shape):
+    p = get_profile(profile)
+    M, D, N = shape
+    qmax = min(2 ** 12, int((p.M // 2 // D) ** 0.5))
+    rng = np.random.default_rng(hash((profile, shape)) % 2**32)
+    A = rng.integers(-qmax, qmax + 1, (M, D)).astype(np.int32)
+    B = rng.integers(-qmax, qmax + 1, (D, N)).astype(np.int32)
+    rc = rns_matmul_res(profile, rns.encode_int32(p, A), rns.encode_int32(p, B))
+    got = rns.decode_exact(p, np.asarray(rc))
+    want = A.astype(object) @ B.astype(object)
+    assert np.array_equal(got, want)
+
+
+def test_wide_dot_exact_where_f32_fails():
+    """The paper's motivation: exact wide accumulation, 8-bit hardware."""
+    p = get_profile("rns9")
+    rng = np.random.default_rng(0)
+    D = 8192
+    A = rng.integers(-32767, 32768, (1, D)).astype(np.int64)
+    B = rng.integers(-32767, 32768, (D, 1)).astype(np.int64)
+    rc = rns_matmul_res("rns9", rns.encode_int32(p, A.astype(np.int32)),
+                        rns.encode_int32(p, B.astype(np.int32)))
+    got = int(rns.decode_exact(p, np.asarray(rc))[0, 0])
+    want = int((A.astype(object) @ B.astype(object))[0, 0])
+    assert got == want
+    f32 = float((A.astype(np.float32) @ B.astype(np.float32))[0, 0])
+    # f32 accumulation in this magnitude regime is NOT exact
+    assert abs(want) > 2**33  # f32 ulp here is > 2**9
+    assert int(f32) != want
+
+
+def test_rns_dot_close_and_grads():
+    rng = np.random.default_rng(3)
+    cfg = RnsDotConfig(profile="rns9", qx=14, qw=14)
+    x = jnp.asarray(rng.standard_normal((6, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 16)), jnp.float32)
+    y = rns_dot(x, w, cfg)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w), rtol=0,
+                               atol=3e-3 * float(jnp.abs(x @ w).max()))
+    g = jax.grad(lambda x, w: jnp.sum(rns_dot(x, w, cfg) ** 2), argnums=(0, 1))(x, w)
+    gref = jax.grad(lambda x, w: jnp.sum((x @ w) ** 2), argnums=(0, 1))(x, w)
+    for a, b in zip(g, gref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-2
+                                   * float(jnp.abs(b).max()))
+
+
+def test_capacity_guard_raises():
+    cfg = RnsDotConfig(profile="rns5", qx=16, qw=16)
+    x = jnp.zeros((2, 4096), jnp.float32)
+    w = jnp.zeros((4096, 2), jnp.float32)
+    with pytest.raises(ValueError, match="cannot hold an exact"):
+        rns_dot(x, w, cfg)
+
+
+def test_chunked_lazy_reduction_path():
+    """D > lazy_chunk exercises the chunked modular accumulation."""
+    p = get_profile("rns9")
+    D = p.lazy_chunk + 1000
+    rng = np.random.default_rng(5)
+    A = rng.integers(-3, 4, (1, D)).astype(np.int32)
+    B = rng.integers(-3, 4, (D, 1)).astype(np.int32)
+    rc = rns_matmul_res("rns9", rns.encode_int32(p, A), rns.encode_int32(p, B))
+    got = int(rns.decode_exact(p, np.asarray(rc))[0, 0])
+    want = int((A.astype(object) @ B.astype(object))[0, 0])
+    assert got == want
