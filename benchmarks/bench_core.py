@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
 from repro.core import fractional as fr
 from repro.core import mrc, rns
 from repro.core.moduli import PROFILES, get_profile, required_digits
@@ -121,6 +122,66 @@ def bench_precision_scaling(report):
     report("precision_scaling", 0.0, " ".join(rows))
 
 
+def bench_chain_amortization(report):
+    """Tentpole claim: residue-domain chaining amortizes the slow MRC —
+    normalize-ops-per-matmul is 1.0 per-op but 1/len(chain) deferred
+    (RnsTensor, core/tensor.py).  Counts are structural (trace-time);
+    wall times are the CPU proxy."""
+    from repro.models.layers import rns_linear_chain
+
+    rng = np.random.default_rng(6)
+    cfg = RnsDotConfig(profile="rns9", qx=8, qw=8)
+    x = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+    ws = tuple(jnp.asarray(rng.standard_normal((64, 64)) / 8, jnp.float32)
+               for _ in range(3))
+
+    def per_op(x):
+        y = x
+        for w in ws:
+            y = rns_dot(y, w, cfg)
+        return y
+
+    def deferred(x):
+        return rns_linear_chain(x, ws, cfg)
+
+    c_per = dispatch.trace_op_counts(per_op, x)
+    c_def = dispatch.trace_op_counts(deferred, x)
+    t_per = _t(jax.jit(per_op), x, n=3)
+    t_def = _t(jax.jit(deferred), x, n=3)
+    report("chain3_norm_per_matmul_deferred", t_def,
+           f"norm_per_matmul={c_def.normalizes_per_matmul:.3f} "
+           f"normalizes={c_def.normalizes} matmuls={c_def.matmuls} "
+           f"converts={c_def.converts}")
+    report("chain3_norm_per_matmul_per_op", t_per,
+           f"norm_per_matmul={c_per.normalizes_per_matmul:.3f} "
+           f"normalizes={c_per.normalizes} matmuls={c_per.matmuls} "
+           f"converts={c_per.converts} speedup_deferred={t_per/t_def:.2f}x")
+
+
+def bench_mlp_block_normalizes(report):
+    """Per-residual-block slow-op budget: the deferred MLP datapath runs
+    2 normalizations (gate nonlinearity + main path) vs 3 per-op."""
+    import dataclasses
+
+    from repro.models.layers import init_mlp, mlp
+
+    rng = np.random.default_rng(7)
+    p, _ = init_mlp(jax.random.PRNGKey(0), 64, 128, gated=True)
+    x = jnp.asarray(rng.standard_normal((4, 8, 64)), jnp.float32)
+    per_op = RnsDotConfig(profile="rns9", qx=8, qw=8)
+    deferred = dataclasses.replace(per_op, defer=True)
+    for tag, cfg in (("per_op", per_op), ("deferred", deferred)):
+        c = dispatch.trace_op_counts(
+            lambda x, cfg=cfg: mlp(p, x, gated=True, act="silu", rns=cfg), x)
+        us = _t(jax.jit(
+            lambda x, cfg=cfg: mlp(p, x, gated=True, act="silu", rns=cfg)),
+            x, n=3)
+        report(f"mlp_block_{tag}", us,
+               f"norm_per_matmul={c.normalizes_per_matmul:.3f} "
+               f"normalizes={c.normalizes} matmuls={c.matmuls} "
+               f"converts={c.converts}")
+
+
 def bench_rns_matmul_wall(report):
     """CPU-proxy wall time: digit-sliced matmul (jnp + pallas-interpret)."""
     rng = np.random.default_rng(4)
@@ -148,4 +209,6 @@ def run_all(report):
     bench_exactness(report)
     bench_conversion_overhead(report)
     bench_precision_scaling(report)
+    bench_chain_amortization(report)
+    bench_mlp_block_normalizes(report)
     bench_rns_matmul_wall(report)

@@ -1,15 +1,23 @@
 # One function per paper claim. Print ``name,us_per_call,derived`` CSV.
+# ``--json PATH`` additionally writes the rows as a BENCH_*.json artifact
+# (CI uploads BENCH_core.json so the normalize-ops-per-matmul amortization
+# figures are tracked per commit).
 from __future__ import annotations
 
+import argparse
+import json
 import os
-import sys
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (e.g. BENCH_core.json)")
+    args = ap.parse_args()
     rows = []
 
     def report(name: str, us: float, derived: str = ""):
-        rows.append((name, us, derived))
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
         print(f"{name},{us:.1f},{derived}", flush=True)
 
     print("name,us_per_call,derived")
@@ -34,6 +42,11 @@ def main() -> None:
                    f"@{worst['roofline_frac']:.4f} "
                    f"best={best['arch']}/{best['shape']}/{best['mesh']}"
                    f"@{best['roofline_frac']:.4f}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -6,9 +6,10 @@
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import mrc, rns
+from repro.core import dispatch, mrc, rns
 from repro.core.moduli import get_profile
 from repro.core.rns_matmul import RnsDotConfig, rns_dot, rns_matmul_res
+from repro.core.tensor import rt_decode, rt_encode, rt_matmul
 
 # 1. A working register: 9 pairwise-coprime moduli <= 128 (8-bit words),
 #    ~62 bits of dynamic range — the Rez-9/18-class register of the paper.
@@ -47,3 +48,21 @@ ref = xf @ wf
 print(f"\nrns_dot vs float matmul: max rel err = "
       f"{float(jnp.max(jnp.abs(y - ref)) / jnp.max(jnp.abs(ref))):.2e} "
       "(16-bit quantization, exact accumulation)")
+
+# 5. Cross-op deferral: RnsTensor keeps a CHAIN of linears in residues —
+#    three matmuls, ONE slow normalization (vs one per matmul above).
+ws = [jnp.asarray(rng.standard_normal((64, 64)) / 8, jnp.float32)
+      for _ in range(3)]
+xc = jnp.asarray(rng.standard_normal((4, 64)), jnp.float32)
+with dispatch.count_ops() as ops:
+    ht = rt_encode(xc, "rns9", bits=8)
+    for w in ws:
+        ht = rt_matmul(ht, rt_encode(w, "rns9", bits=8))
+    yc = rt_decode(ht)  # <- the chain's single MRC
+refc = xc
+for w in ws:
+    refc = refc @ w
+print(f"\n3-linear residue chain: {ops.matmuls} matmuls, "
+      f"{ops.normalizes} normalization ({ops.normalizes_per_matmul:.2f} "
+      f"slow ops/matmul); max err vs float chain = "
+      f"{float(jnp.max(jnp.abs(yc - refc))):.3f}")

@@ -1,7 +1,23 @@
 """Core RNS arithmetic — the paper's contribution as a composable JAX module."""
 
+from repro.core import dispatch
 from repro.core.moduli import RnsProfile, get_profile, PROFILES, required_digits
-from repro.core.rns_matmul import RnsDotConfig, rns_dot, rns_dot_fwd_only
+from repro.core.rns_matmul import (
+    RnsDotConfig,
+    rns_dot,
+    rns_dot_fwd_only,
+    rns_multi_dot,
+)
+from repro.core.tensor import (
+    RnsTensor,
+    rt_add,
+    rt_decode,
+    rt_encode,
+    rt_encode_int,
+    rt_matmul,
+    rt_mul,
+    rt_renormalize,
+)
 
 __all__ = [
     "RnsProfile",
@@ -11,4 +27,14 @@ __all__ = [
     "RnsDotConfig",
     "rns_dot",
     "rns_dot_fwd_only",
+    "rns_multi_dot",
+    "RnsTensor",
+    "rt_add",
+    "rt_decode",
+    "rt_encode",
+    "rt_encode_int",
+    "rt_matmul",
+    "rt_mul",
+    "rt_renormalize",
+    "dispatch",
 ]

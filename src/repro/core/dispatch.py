@@ -1,0 +1,202 @@
+"""Backend dispatch for the three RNS execution primitives.
+
+Every residue-domain computation in the repo reduces to three primitives
+(the paper's Fig. 5 blocks):
+
+  * ``convert``   — forward conversion: fixed-point quantize + per-digit
+                    modular reduction (cheap, O(K) PAC work per element).
+  * ``matmul``    — digit-sliced modular matmul (the carry-free PAC array).
+  * ``normalize`` — MRC normalization to signed values (the ONE slow
+                    O(K^2) op; everything above defers to it).
+
+This module is the single place that decides *which implementation* runs:
+the pure-jnp reference, the compiled Pallas TPU kernels, or the Pallas
+interpreter (CPU-testable).  It replaces the ``use_pallas`` / per-wrapper
+``interpret`` flag plumbing that used to be scattered across
+``core/rns_matmul.py`` and the four ``kernels/*/ops.py`` wrappers.
+
+It also owns the op counters behind the deferred-normalization claim:
+``count_ops()`` tallies primitive invocations at trace time, so tests and
+benchmarks can assert "one normalize per chain" structurally instead of
+timing it.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "BACKENDS",
+    "resolve_backend",
+    "set_default_backend",
+    "default_interpret",
+    "OpCounts",
+    "count_ops",
+    "trace_op_counts",
+    "convert",
+    "matmul",
+    "normalize",
+]
+
+#: reference        — pure jnp (works everywhere; exactness oracle)
+#: pallas           — compiled Pallas TPU kernels (interpret auto on CPU)
+#: pallas_interpret — Pallas kernels forced through the interpreter
+BACKENDS = ("reference", "pallas", "pallas_interpret")
+
+_state = threading.local()      # per-thread op-counter stacks
+_default_backend = "auto"       # process-wide (module global)
+
+
+def _default() -> str:
+    return _default_backend
+
+
+def set_default_backend(name: str | None):
+    """Process-wide default for ``backend=None``/"auto" call sites."""
+    global _default_backend
+    if name is not None and name != "auto" and name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; have {BACKENDS}")
+    _default_backend = name or "auto"
+
+
+def resolve_backend(name: str | None = None) -> str:
+    """Map None/"auto" to the hardware-appropriate backend."""
+    name = name or _default()
+    if name == "auto":
+        name = _default()
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; have {BACKENDS}")
+    return name
+
+
+def default_interpret() -> bool:
+    """Whether a Pallas kernel should run in interpret mode by default.
+
+    The single source of truth for the decision the four kernel wrappers
+    used to each make on their own.
+    """
+    return jax.default_backend() == "cpu"
+
+
+def _interpret_for(backend: str) -> bool | None:
+    # "pallas" lets the wrapper consult default_interpret(); the forced
+    # variant pins the interpreter regardless of platform.
+    return True if backend == "pallas_interpret" else None
+
+
+# ------------------------------------------------------------ counters ----
+@dataclasses.dataclass(eq=False)  # identity semantics: counters nest
+class OpCounts:
+    """Primitive tallies (trace-time; one per call site reached)."""
+
+    converts: int = 0
+    matmuls: int = 0
+    normalizes: int = 0
+
+    @property
+    def normalizes_per_matmul(self) -> float:
+        return self.normalizes / max(self.matmuls, 1)
+
+
+def _counters() -> list[OpCounts]:
+    if not hasattr(_state, "counters"):
+        _state.counters = []
+    return _state.counters
+
+
+def _tally(field: str):
+    for c in _counters():
+        setattr(c, field, getattr(c, field) + 1)
+
+
+@contextlib.contextmanager
+def count_ops():
+    """Count primitive invocations (including inside jit *tracing*)."""
+    c = OpCounts()
+    _counters().append(c)
+    try:
+        yield c
+    finally:
+        _counters().remove(c)
+
+
+def trace_op_counts(fn, *args, **kwargs) -> OpCounts:
+    """Counts for one abstract evaluation of ``fn`` (no FLOPs spent)."""
+    with count_ops() as c:
+        jax.eval_shape(fn, *args, **kwargs)
+    return c
+
+
+# ---------------------------------------------------------- primitives ----
+def convert(profile, x, scale, *, bits: int = 16, backend: str | None = None):
+    """Quantize ``x`` by ``scale`` and encode to residues [K, ...].
+
+    Returns int8 digit planes when the profile is int8-safe (the Pallas
+    matmul kernel's operand dtype), else int32.
+    """
+    from repro.core.moduli import get_profile
+
+    _tally("converts")
+    be = resolve_backend(backend)
+    p = get_profile(profile) if isinstance(profile, str) else profile
+    if be == "reference":
+        from repro.core.quantize import quantize_with_scale
+        from repro.core.rns import encode_int32
+
+        res = encode_int32(p, quantize_with_scale(x, scale, bits))
+        return res.astype(jnp.int8) if p.int8_safe else res
+    from repro.kernels.rns_convert.ops import rns_convert
+
+    out_dtype = jnp.int8 if p.int8_safe else jnp.int32
+    return rns_convert(p.name, x, scale, bits=bits,
+                       interpret=_interpret_for(be), out_dtype=out_dtype)
+
+
+def matmul(profile, a_res, b_res, *, backend: str | None = None):
+    """Digit-sliced modular matmul: [K,...,M,D] @ [K,D,N] -> [K,...,M,N]."""
+    _tally("matmuls")
+    be = resolve_backend(backend)
+    if be == "reference":
+        from repro.core.rns_matmul import rns_matmul_res
+
+        return rns_matmul_res(profile, a_res, b_res)
+    from repro.kernels.rns_matmul.ops import rns_matmul
+
+    return rns_matmul(profile, a_res, b_res, interpret=_interpret_for(be))
+
+
+def normalize(profile, res, *, inv_scale: float = 1.0,
+              backend: str | None = None, dtype=jnp.float32):
+    """MRC-normalize residues to signed floats times ``inv_scale``.
+
+    THE slow op (O(K^2) sequential digit steps).  ``inv_scale`` must be a
+    static python float: the reference path folds it into the host-side
+    float64 reconstruction weights, which keeps huge scale factors (e.g.
+    M_f powers beyond float32 range) exact.  Traced scale factors must be
+    multiplied in by the caller afterwards.
+    """
+    _tally("normalizes")
+    be = resolve_backend(backend)
+    # the Pallas kernel reconstructs unscaled values; scales outside the
+    # float32 range (deep M_f^frac_exp deferral) would under/overflow the
+    # post-multiply, so those decodes take the reference path regardless
+    if be != "reference" and inv_scale != 1.0 and not (
+            2.0**-126 <= abs(inv_scale) <= 2.0**127):
+        be = "reference"
+    if be == "reference":
+        from repro.core import mrc
+
+        return mrc.decode_float(profile, res, inv_scale=inv_scale, dtype=dtype)
+    from repro.kernels.rns_normalize.ops import rns_normalize
+
+    out = rns_normalize(profile, res, interpret=_interpret_for(be))
+    if inv_scale != 1.0:
+        out = out * jnp.asarray(inv_scale, out.dtype)
+    return out.astype(dtype)

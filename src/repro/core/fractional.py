@@ -137,13 +137,23 @@ def fr_dot_deferred(profile, xs, ys):
     xs, ys: (n, K, ...) stacked fractional residues.  Returns fractional
     residues of sum_i xs[i]*ys[i].  Exactness requires n * max|x*y| * M_f^2
     < M/2.
+
+    The accumulation is a vectorized lazy-reduction fold: per-element
+    products are < max_digit**2, so up to ``lazy_chunk`` terms sum
+    exactly in int32 with a single modular reduction per chunk — the
+    trace is O(n / lazy_chunk) ops (effectively O(1)), not O(n).
     """
     import jax.numpy as jnp
 
     p = _p(profile)
     t = tables(p)
     m = jnp.asarray(t.moduli).reshape((-1,) + (1,) * (xs.ndim - 2))
+    n = xs.shape[0]
+    chunk = p.lazy_chunk
     acc = jnp.zeros(xs.shape[1:], jnp.int32)
-    for i in range(xs.shape[0]):
-        acc = jnp.remainder(acc + xs[i] * ys[i], m)  # PAC MAC, carry-free
+    for s in range(0, n, chunk):
+        part = jnp.sum(
+            (xs[s:s + chunk] * ys[s:s + chunk]).astype(jnp.int32), axis=0)
+        part = jnp.remainder(part, m)       # one lazy reduction per chunk
+        acc = jnp.remainder(acc + part, m)
     return fr_normalize(p, acc)

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["absmax_scale", "quantize", "dequantize"]
+__all__ = ["absmax_scale", "quantize", "quantize_with_scale", "dequantize"]
 
 
 def absmax_scale(x, bits: int, axis=None, eps: float = 1e-12):
@@ -22,12 +22,19 @@ def absmax_scale(x, bits: int, axis=None, eps: float = 1e-12):
     return jax.lax.stop_gradient(s)
 
 
+def quantize_with_scale(x, s, bits: int):
+    """v = clip(round(x*s)) on a caller-chosen scale — THE fixed-point
+    rule; the Pallas conversion kernel mirrors it and is tested against
+    this reference."""
+    qmax = 2 ** (bits - 1) - 1
+    return jnp.clip(jnp.round(jnp.asarray(x, jnp.float32) * s),
+                    -qmax, qmax).astype(jnp.int32)
+
+
 def quantize(x, bits: int, axis=None):
     """Returns (int32 values, scale).  v = clip(round(x*s))."""
     s = absmax_scale(x, bits, axis=axis)
-    qmax = 2 ** (bits - 1) - 1
-    v = jnp.clip(jnp.round(x * s), -qmax, qmax).astype(jnp.int32)
-    return v, s
+    return quantize_with_scale(x, s, bits), s
 
 
 def dequantize(v, s):

@@ -12,6 +12,12 @@ Exactness contract: with D <= profile.dot_capacity(qx, qw), the decoded
 integer equals the infinite-precision dot product of the quantized operands
 (verified against a python-int oracle in tests).
 
+Backend selection (reference jnp vs Pallas kernels) is owned by
+``core/dispatch.py``; this module only says *what* to compute.  For
+residue-domain chaining across ops (one normalization per chain instead of
+per matmul) see ``core/tensor.py`` — this module's float->float entry
+points are the single-op degenerate case of that API.
+
 Training: custom_vjp — backward matmuls ALSO run through RNS (the paper's
 motivation is wide-precision *training*), with straight-through gradients
 for the quantizer.
@@ -25,12 +31,18 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core import mrc
+from repro.core import dispatch
 from repro.core.moduli import get_profile
-from repro.core.quantize import quantize
-from repro.core.rns import encode_int32, tables
+from repro.core.quantize import absmax_scale
+from repro.core.rns import tables
 
-__all__ = ["RnsDotConfig", "rns_matmul_res", "rns_dot", "rns_dot_fwd_only"]
+__all__ = [
+    "RnsDotConfig",
+    "rns_matmul_res",
+    "rns_dot",
+    "rns_dot_fwd_only",
+    "rns_multi_dot",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,13 +51,28 @@ class RnsDotConfig:
     qx: int = 16            # activation fixed-point bits
     qw: int = 16            # weight fixed-point bits
     qg: int = 16            # gradient fixed-point bits (backward)
-    use_pallas: bool = False
+    # execution backend for all three primitives (see core/dispatch.py):
+    # "auto" | "reference" | "pallas" | "pallas_interpret".  None defers
+    # to the use_pallas flag (reference unless use_pallas); an explicit
+    # value always wins, so overrides can force the reference oracle even
+    # on configs built with use_pallas=True.
+    backend: str | None = None
+    use_pallas: bool = False    # legacy alias for backend="pallas"
     backward_rns: bool = True   # paper-faithful: grads through RNS too
+    # residue-domain chaining: let consecutive linear ops consume/produce
+    # RnsTensor and defer the slow MRC normalization to the end of the
+    # chain (models/layers.py uses this for the MLP block datapath).
+    defer: bool = False
     # shard the digit-slice axis over the model mesh axis (paper Fig. 5:
     # one slice per compute unit; digits only meet at normalization).
     # Requires n_digits % model_axis == 0 (e.g. profile rns16 on a 16-wide
     # model axis).
     slice_parallel: bool = False
+
+    def resolved_backend(self) -> str:
+        if self.backend is not None:
+            return self.backend
+        return "pallas" if self.use_pallas else "reference"
 
 
 def _check_capacity(cfg: RnsDotConfig, contract_dim: int, qa: int, qb: int):
@@ -60,7 +87,7 @@ def _check_capacity(cfg: RnsDotConfig, contract_dim: int, qa: int, qb: int):
 
 
 def rns_matmul_res(profile, a_res, b_res):
-    """Per-digit-slice modular matmul.
+    """Per-digit-slice modular matmul (the jnp reference implementation).
 
     a_res: [K, ..., M, D] int8/int32 residues; b_res: [K, D, N].
     Returns [K, ..., M, N] int32 residues of the exact product-sum mod m_s.
@@ -94,48 +121,52 @@ def rns_matmul_res(profile, a_res, b_res):
     return acc
 
 
-def _encode_operand(cfg: RnsDotConfig, x, bits: int):
-    v, s = quantize(x, bits)
-    res = encode_int32(cfg.profile, v)
-    p = get_profile(cfg.profile)
-    if p.int8_safe:
-        # residues < 128 by construction: int8 storage means any collective
-        # that touches encoded operands moves 9x1B, not 9x4B (§Perf rns)
-        res = res.astype(jnp.int8)
+def _encode_operand(cfg: RnsDotConfig, x, bits: int, backend: str):
+    # residues < 128 by construction for int8-safe profiles: int8 storage
+    # means any collective that touches encoded operands moves 9x1B, not
+    # 9x4B (§Perf rns)
+    s = absmax_scale(x, bits)
+    res = dispatch.convert(cfg.profile, x, s, bits=bits, backend=backend)
     return res, s
+
+
+def _sp_constrain(cfg: RnsDotConfig, res, kind: str):
+    """Slice-parallel sharding constraint (paper Fig. 5: one digit slice
+    per compute unit).  kind: "act" for [K, batch, ...] activations and
+    outputs, "w" for [K, D, N] weights."""
+    if not cfg.slice_parallel:
+        return res
+    from repro.distributed.sharding import constrain
+
+    if kind == "act":
+        return constrain(res, ("model", "batch") + (None,) * (res.ndim - 2))
+    return constrain(res, ("model",) + (None,) * (res.ndim - 1))
+
+
+def _res_matmul(cfg: RnsDotConfig, be: str, a_res, b_res):
+    """Digit-sliced matmul on residues, with slice-parallel constraints."""
+    a_res = _sp_constrain(cfg, a_res, "act")
+    b_res = _sp_constrain(cfg, b_res, "w")
+    y_res = dispatch.matmul(cfg.profile, a_res, b_res, backend=be)
+    return _sp_constrain(cfg, y_res, "act")
 
 
 def _rns_matmul_float(cfg: RnsDotConfig, x, w, qa: int, qb: int):
     """Non-differentiable float->float RNS matmul core."""
     _check_capacity(cfg, x.shape[-1], qa, qb)
+    be = cfg.resolved_backend()
     # NOTE §Perf rns iter 6: pinning the residue sharding (so reshards land
     # on the bf16 encode input) made XLA fully replicate the widest residue
     # planes instead — refuted, reverted.  Moving residues off the wire
     # entirely needs shard_map + the fused Pallas conversion (kernels/
     # rns_convert), where residues live only in VMEM — the software analogue
     # of the paper's Fig. 5 edge-of-array conversion pipelines.
-    a_res, sx = _encode_operand(cfg, x, qa)
-    b_res, sw = _encode_operand(cfg, w, qb)
-    if cfg.slice_parallel:
-        from repro.distributed.sharding import constrain
-
-        spec = lambda t: ("model",) + ("batch",) + (None,) * (t.ndim - 2)
-        a_res = constrain(a_res, spec(a_res))
-        b_res = constrain(b_res, ("model",) + (None,) * (b_res.ndim - 1))
-    if cfg.use_pallas:
-        from repro.kernels.rns_matmul import ops as _kops
-
-        y_res = _kops.rns_matmul(cfg.profile, a_res, b_res)
-    else:
-        y_res = rns_matmul_res(cfg.profile, a_res, b_res)
-    if cfg.slice_parallel:
-        from repro.distributed.sharding import constrain
-
-        y_res = constrain(
-            y_res, ("model", "batch") + (None,) * (y_res.ndim - 2))
+    a_res, sx = _encode_operand(cfg, x, qa, be)
+    b_res, sw = _encode_operand(cfg, w, qb, be)
+    y_res = _res_matmul(cfg, be, a_res, b_res)
     # deferred normalization: ONE MRC per output element (the only point
     # where slice-parallel digits communicate — paper Fig. 5)
-    y = mrc.decode_float(cfg.profile, y_res)
+    y = dispatch.normalize(cfg.profile, y_res, backend=be)
     return y * (1.0 / (sx * sw))
 
 
@@ -173,3 +204,73 @@ rns_dot.defvjp(_rns_dot_fwd, _rns_dot_bwd)
 def rns_dot_fwd_only(x, w, cfg: RnsDotConfig):
     """Inference-path entry (no vjp machinery)."""
     return _rns_matmul_float(cfg, x, w, cfg.qx, cfg.qw)
+
+
+# ------------------------------------------------- shared-operand fan-out --
+def _rns_multi_impl(cfg: RnsDotConfig, x, ws):
+    """Encode ``x`` ONCE, run one digit-sliced matmul per weight.
+
+    The QKV / gated-MLP projections all consume the same activation: the
+    forward conversion (quantize + per-digit reduction) is paid once per
+    block instead of once per matmul.  Numerics are identical to separate
+    ``rns_dot`` calls (same absmax grid).
+    """
+    be = cfg.resolved_backend()
+    _check_capacity(cfg, x.shape[-1], cfg.qx, cfg.qw)
+    a_res, sx = _encode_operand(cfg, x, cfg.qx, be)
+    outs = []
+    for w in ws:
+        b_res, sw = _encode_operand(cfg, w, cfg.qw, be)
+        y_res = _res_matmul(cfg, be, a_res, b_res)
+        y = dispatch.normalize(cfg.profile, y_res, backend=be)
+        outs.append(y * (1.0 / (sx * sw)))
+    return tuple(outs)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rns_multi_dot(x, ws: tuple, cfg: RnsDotConfig):
+    """(x @ w for w in ws) with one shared forward conversion of x.
+
+    x: [..., D] float; ws: tuple of [D, N_i] floats.  Differentiable with
+    the same STE/RNS-backward contract as :func:`rns_dot`.
+    """
+    return _rns_multi_impl(cfg, x, ws)
+
+
+def _rns_multi_fwd(x, ws, cfg: RnsDotConfig):
+    return rns_multi_dot(x, ws, cfg), (x, ws)
+
+
+def _rns_multi_bwd(cfg: RnsDotConfig, resids, gs):
+    x, ws = resids
+    lead = x.shape[:-1]
+    xf = x.reshape(-1, x.shape[-1])                      # [T, D]
+    be = cfg.resolved_backend()
+    gx = jnp.zeros(xf.shape, jnp.float32)
+    gws = []
+    if cfg.backward_rns:
+        # share conversions like the forward: encode x^T once for all
+        # weight grads, and each cotangent once for both of its matmuls
+        _check_capacity(cfg, xf.shape[0], cfg.qx, cfg.qg)
+        xt_res, sxt = _encode_operand(cfg, xf.T, cfg.qx, be)   # [K, D, T]
+    for w, g in zip(ws, gs):
+        gf = g.reshape(-1, g.shape[-1])                  # [T, N_i]
+        if cfg.backward_rns:
+            _check_capacity(cfg, gf.shape[-1], cfg.qg, cfg.qw)
+            g_res, sg = _encode_operand(cfg, gf, cfg.qg, be)   # [K, T, N]
+            wt_res, sw = _encode_operand(cfg, w.T, cfg.qw, be)  # [K, N, D]
+            gx_i = dispatch.normalize(
+                cfg.profile, _res_matmul(cfg, be, g_res, wt_res), backend=be
+            ) * (1.0 / (sg * sw))
+            gw = dispatch.normalize(
+                cfg.profile, _res_matmul(cfg, be, xt_res, g_res), backend=be
+            ) * (1.0 / (sxt * sg))
+        else:
+            gx_i = gf @ w.T
+            gw = xf.T @ gf
+        gx = gx + gx_i
+        gws.append(gw.astype(w.dtype))
+    return gx.reshape(*lead, x.shape[-1]).astype(x.dtype), tuple(gws)
+
+
+rns_multi_dot.defvjp(_rns_multi_fwd, _rns_multi_bwd)

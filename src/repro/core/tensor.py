@@ -1,0 +1,227 @@
+"""First-class residue-domain tensor with cross-op deferred normalization.
+
+An :class:`RnsTensor` carries a value tensor entirely in the residue
+domain:
+
+  ``value = X / (scale * M_f**frac_exp)``  with  ``X`` the signed integer
+  encoded by ``digits`` ([K, *shape] residue planes of the profile).
+
+* ``scale`` is a traced scalar (the fixed-point quantization scale —
+  data-dependent via absmax), so RnsTensor round-trips through jit/vmap.
+* ``frac_exp`` is *static* bookkeeping of pending Olsen M_f powers: every
+  fractional multiply raises it by one instead of paying the slow
+  normalization.  Keeping it static lets decode fold ``M_f**-frac_exp``
+  into exact host-side float64 weights (M_f powers overflow float32 fast).
+* ``mag_bits`` is a static worst-case bound on ``log2|X|``.  It is the
+  deferral ledger: chained PAC ops (matmul, elementwise multiply, add)
+  grow it, and :func:`rt_matmul` / :func:`rt_mul` consult it to decide
+  when a renormalization is *actually required* — one slow MRC op per
+  chain/block instead of one per op, the paper's central claim.
+
+All heavy lifting routes through :mod:`repro.core.dispatch`, so an
+RnsTensor program runs unchanged on the jnp reference path or the Pallas
+kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch
+from repro.core.moduli import RnsProfile, get_profile
+from repro.core.quantize import absmax_scale
+
+__all__ = [
+    "RnsTensor",
+    "rt_encode",
+    "rt_encode_int",
+    "rt_decode",
+    "rt_matmul",
+    "rt_mul",
+    "rt_add",
+    "rt_renormalize",
+    "matmul_out_bits",
+    "needs_renormalize",
+]
+
+#: headroom (bits) kept below the profile's guaranteed signed range when
+#: deciding whether a deferred op still fits exactly.
+_SAFETY_BITS = 1.0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class RnsTensor:
+    """Residues + profile + scale-exponent bookkeeping (a jax pytree).
+
+    ``digits``: [K, *shape] int8/int32 residue planes (leaf).
+    ``scale``:  scalar array, value = X / (scale * M_f**frac_exp) (leaf).
+    ``profile``: RNS profile name (static).
+    ``mag_bits``: static bound on log2|X| (deferral ledger).
+    ``frac_exp``: static count of deferred M_f normalizations.
+    """
+
+    digits: jax.Array
+    scale: jax.Array
+    profile: str
+    mag_bits: float
+    frac_exp: int = 0
+
+    # ------------------------------------------------------------ pytree --
+    def tree_flatten(self):
+        return (self.digits, self.scale), (
+            self.profile, self.mag_bits, self.frac_exp)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        digits, scale = children
+        profile, mag_bits, frac_exp = aux
+        return cls(digits, scale, profile, mag_bits, frac_exp)
+
+    # ------------------------------------------------------- conveniences --
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.digits.shape[1:]
+
+    @property
+    def ndim(self) -> int:
+        return self.digits.ndim - 1
+
+    @property
+    def rns_profile(self) -> RnsProfile:
+        return get_profile(self.profile)
+
+    def headroom_bits(self) -> float:
+        """Exactness margin left before |X| could exceed M/2."""
+        return self.rns_profile.signed_bits - _SAFETY_BITS - self.mag_bits
+
+    def astype_digits(self, dtype):
+        return dataclasses.replace(self, digits=self.digits.astype(dtype))
+
+
+def _digits32(rt: RnsTensor) -> jax.Array:
+    return rt.digits.astype(jnp.int32)
+
+
+# ------------------------------------------------------------- encoding ---
+def rt_encode(x, profile, *, bits: int = 16, scale=None,
+              backend: str | None = None) -> RnsTensor:
+    """Quantize a float tensor and forward-convert it (cheap PAC work).
+
+    ``scale`` defaults to the per-tensor absmax scale for ``bits``; pass an
+    explicit scale to pin the fixed-point grid (e.g. for exact oracles).
+    """
+    p = get_profile(profile) if isinstance(profile, str) else profile
+    if scale is None:
+        scale = absmax_scale(x, bits)
+    digits = dispatch.convert(p, x, scale, bits=bits, backend=backend)
+    return RnsTensor(digits, jnp.asarray(scale, jnp.float32), p.name,
+                     float(bits - 1))
+
+
+def rt_encode_int(v, profile, *, mag_bits: float | None = None) -> RnsTensor:
+    """Encode an int32 tensor exactly (scale 1; oracle-friendly)."""
+    from repro.core.rns import encode_int32
+
+    p = get_profile(profile) if isinstance(profile, str) else profile
+    digits = encode_int32(p, v)
+    if p.int8_safe:
+        digits = digits.astype(jnp.int8)
+    if mag_bits is None:
+        mag_bits = 31.0
+    return RnsTensor(digits, jnp.float32(1.0), p.name, float(mag_bits))
+
+
+# ------------------------------------------------------------- decoding ---
+def rt_decode(rt: RnsTensor, *, backend: str | None = None,
+              dtype=jnp.float32):
+    """Back to floats: exactly ONE MRC normalization, whatever the chain
+    of deferred ops that produced ``rt``."""
+    p = rt.rns_profile
+    inv = 1.0 / float(p.M_f) ** rt.frac_exp if rt.frac_exp else 1.0
+    y = dispatch.normalize(p.name, _digits32(rt), inv_scale=inv,
+                           backend=backend, dtype=dtype)
+    return y / rt.scale.astype(dtype)
+
+
+# ------------------------------------------------------- deferral ledger --
+def matmul_out_bits(a: RnsTensor, w: RnsTensor, contract_dim: int) -> float:
+    """Worst-case log2|X| of a product summation of ``a`` and ``w``."""
+    return a.mag_bits + w.mag_bits + math.log2(max(contract_dim, 1))
+
+
+def needs_renormalize(a: RnsTensor, extra_bits: float) -> bool:
+    """Would growing ``a`` by ``extra_bits`` overflow the exact range?"""
+    return a.mag_bits + extra_bits > a.rns_profile.signed_bits - _SAFETY_BITS
+
+
+def rt_renormalize(rt: RnsTensor, *, bits: int = 16,
+                   backend: str | None = None) -> RnsTensor:
+    """THE slow op: MRC-decode and re-encode on a fresh ``bits`` grid.
+
+    Inserted automatically by :func:`rt_matmul` / :func:`rt_mul` only when
+    the magnitude ledger says the next PAC op would overflow — this is the
+    "bookkeeping decides when normalization is actually required" point.
+    """
+    y = rt_decode(rt, backend=backend)
+    return rt_encode(y, rt.profile, bits=bits, backend=backend)
+
+
+# ---------------------------------------------------------------- PAC ops -
+def rt_matmul(a: RnsTensor, w: RnsTensor, *, backend: str | None = None,
+              renorm_bits: int = 16) -> RnsTensor:
+    """Residues-in/residues-out matmul along the last dim of ``a``.
+
+    Stays entirely in the residue domain (no normalization).  If the
+    magnitude ledger proves the exact range would overflow, the
+    *activation* operand is renormalized first (one slow op), then the
+    chain continues deferred.
+    """
+    if a.profile != w.profile:
+        raise ValueError(f"profile mismatch: {a.profile} vs {w.profile}")
+    D = a.shape[-1]
+    if matmul_out_bits(a, w, D) > a.rns_profile.signed_bits - _SAFETY_BITS:
+        a = rt_renormalize(a, bits=renorm_bits, backend=backend)
+        if matmul_out_bits(a, w, D) > a.rns_profile.signed_bits - _SAFETY_BITS:
+            raise ValueError(
+                f"profile {a.profile} cannot hold an exact {D}-term product "
+                f"summation of {a.mag_bits:.0f}+{w.mag_bits:.0f}-bit operands "
+                f"even after renormalization; use a wider profile")
+    digits = dispatch.matmul(a.profile, a.digits, w.digits, backend=backend)
+    return RnsTensor(digits, a.scale * w.scale, a.profile,
+                     matmul_out_bits(a, w, D), a.frac_exp + w.frac_exp)
+
+
+def rt_mul(a: RnsTensor, b: RnsTensor, *, backend: str | None = None,
+           renorm_bits: int = 16) -> RnsTensor:
+    """Elementwise PAC product (deferred — no normalization)."""
+    from repro.core.rns import rns_mul
+
+    if a.profile != b.profile:
+        raise ValueError(f"profile mismatch: {a.profile} vs {b.profile}")
+    if needs_renormalize(a, b.mag_bits):
+        a = rt_renormalize(a, bits=renorm_bits, backend=backend)
+        if needs_renormalize(a, b.mag_bits):
+            raise ValueError(
+                f"profile {a.profile} cannot hold an exact elementwise "
+                f"product of {a.mag_bits:.0f}+{b.mag_bits:.0f}-bit operands")
+    digits = rns_mul(a.profile, _digits32(a), _digits32(b))
+    return RnsTensor(digits, a.scale * b.scale, a.profile,
+                     a.mag_bits + b.mag_bits, a.frac_exp + b.frac_exp)
+
+
+def rt_add(a: RnsTensor, b: RnsTensor) -> RnsTensor:
+    """Elementwise PAC sum.  Operands must share one fixed-point grid
+    (same scale provenance and frac_exp) — adding across grids needs a
+    renormalization, which the caller should do explicitly."""
+    from repro.core.rns import rns_add
+
+    if a.profile != b.profile or a.frac_exp != b.frac_exp:
+        raise ValueError("rt_add operands must share profile and frac_exp")
+    digits = rns_add(a.profile, _digits32(a), _digits32(b))
+    return RnsTensor(digits, a.scale, a.profile,
+                     max(a.mag_bits, b.mag_bits) + 1.0, a.frac_exp)

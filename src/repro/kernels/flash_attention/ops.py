@@ -2,9 +2,9 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.kernels.flash_attention.kernel import flash_attention_bhtd
 
 
@@ -12,7 +12,7 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
                     bk: int = 128, interpret: bool | None = None):
     """q [B,Tq,H,D], k/v [B,Tk,Hk,D(v)] (GQA) -> [B,Tq,H,Dv]."""
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = dispatch.default_interpret()
     B, Tq, H, D = q.shape
     _, Tk, Hk, Dv = v.shape
     G = H // Hk

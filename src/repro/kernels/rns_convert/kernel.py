@@ -14,7 +14,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels import compiler_params
 
 from repro.core.rns import tables
 
@@ -49,7 +51,7 @@ def rns_convert_tiles(
         ],
         out_specs=pl.BlockSpec((K, bt), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((K, T), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -2,9 +2,9 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.kernels.rns_convert.kernel import rns_convert_tiles
 
 
@@ -14,7 +14,7 @@ def rns_convert(
 ):
     """x [...] float32, scale scalar -> [K, ...] residues."""
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = dispatch.default_interpret()
     shape = x.shape
     flat = x.reshape(-1).astype(jnp.float32)
     T = flat.shape[0]

@@ -19,7 +19,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels import compiler_params
 
 
 def _kernel(m_ref, a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
@@ -70,7 +72,7 @@ def rns_matmul_tiles(
         out_specs=pl.BlockSpec((1, bm, bn), lambda s, i, j, k: (s, i, j)),
         out_shape=jax.ShapeDtypeStruct((S, M, N), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -2,10 +2,10 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
 from repro.core.rns import tables
 from repro.kernels.rns_matmul.kernel import rns_matmul_tiles
 
@@ -30,7 +30,7 @@ def rns_matmul(
     residues contribute nothing mod m) and flattens leading batch dims.
     """
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = dispatch.default_interpret()
     t = tables(profile)
     moduli = jnp.asarray(np.asarray(t.moduli, np.int32))
     S = a_res.shape[0]

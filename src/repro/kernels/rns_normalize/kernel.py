@@ -18,7 +18,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+from repro.kernels import compiler_params
 
 from repro.core.rns import tables
 
@@ -80,7 +82,7 @@ def rns_normalize_tiles(x, *, profile, bt: int = 1024, interpret: bool = False):
         in_specs=[pl.BlockSpec((K, bt), lambda i: (0, i))],
         out_specs=pl.BlockSpec((bt,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((T,), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

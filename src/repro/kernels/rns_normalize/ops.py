@@ -2,16 +2,16 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.kernels.rns_normalize.kernel import rns_normalize_tiles
 
 
 def rns_normalize(profile, res, *, bt: int = 1024, interpret: bool | None = None):
     """res [K, ...] int32 -> [...] float32 signed values (unscaled)."""
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = dispatch.default_interpret()
     K = res.shape[0]
     shape = res.shape[1:]
     flat = res.reshape(K, -1)

@@ -97,6 +97,9 @@ def _operand_names(rest: str) -> list[str]:
             depth -= 1
         i += 1
     arglist = rest[: i - 1]
+    # newer XLA prints typed operands ("f32[256,256]{1,0} %name"); strip
+    # the shape annotations so the dtype token is not mistaken for a name
+    arglist = re.sub(r"[\w\-]+\[[\d,]*\](?:\{[^}]*\})?", " ", arglist)
     return re.findall(r"%?([\w.\-]+)", arglist)
 
 

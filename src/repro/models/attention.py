@@ -15,9 +15,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.rns_matmul import rns_multi_dot
 from repro.models.layers import init_linear, linear
 
 NEG_INF = -1e30
+
+
+def _multi_proj(x, ps, rns):
+    """Project ``x`` through several weight dicts with ONE shared forward
+    conversion on the RNS path (numerically identical to per-projection
+    ``linear`` calls — same absmax grid), or plain matmuls otherwise."""
+    if rns is None:
+        return tuple(linear(p, x) for p in ps)
+    ys = rns_multi_dot(
+        x.astype(jnp.float32),
+        tuple(p["w"].astype(jnp.float32) for p in ps), rns)
+    out = []
+    for p, y in zip(ps, ys):
+        y = y.astype(x.dtype)
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
+        out.append(y)
+    return tuple(out)
 
 
 # ---------------------------------------------------------------- rope ----
@@ -191,9 +210,10 @@ def init_gqa(key, cfg, dtype=jnp.float32):
 def gqa_qkv(p, x, cfg, positions, rns=None, *, use_rope=True):
     B, T, _ = x.shape
     H, Hk, D = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
-    q = linear(p["wq"], x, rns).reshape(B, T, H, D)
-    k = linear(p["wk"], x, rns).reshape(B, T, Hk, D)
-    v = linear(p["wv"], x, rns).reshape(B, T, Hk, D)
+    q, k, v = _multi_proj(x, (p["wq"], p["wk"], p["wv"]), rns)
+    q = q.reshape(B, T, H, D)
+    k = k.reshape(B, T, Hk, D)
+    v = v.reshape(B, T, Hk, D)
     if use_rope:
         q = rope(q, positions, cfg.rope_theta)
         k = rope(k, positions, cfg.rope_theta)
@@ -222,8 +242,9 @@ def gqa_attend(p, x, cfg, *, mode: str, positions=None, kv_mask=None,
         Hk, D = cfg.n_kv_heads, cfg.d_head
         q = linear(p["wq"], x, rns).reshape(B, T, cfg.n_heads, D)
         Tk = xkv.shape[1]
-        k = linear(p["wk"], xkv, rns).reshape(B, Tk, Hk, D)
-        v = linear(p["wv"], xkv, rns).reshape(B, Tk, Hk, D)
+        k, v = _multi_proj(xkv, (p["wk"], p["wv"]), rns)
+        k = k.reshape(B, Tk, Hk, D)
+        v = v.reshape(B, Tk, Hk, D)
         causal = False
     if mode == "dense":
         out = dense_attention(q, k, v, causal=causal, kv_mask=kv_mask)
@@ -314,20 +335,25 @@ def mla_qkv(p, x, cfg, positions, rns=None):
     m = cfg.mla
     B, T, _ = x.shape
     H = cfg.n_heads
-    cq = rmsnorm(p["q_norm"], linear(p["wdq"], x, rns))
-    q_nope = linear(p["wuqn"], cq, rns).reshape(B, T, H, m.qk_nope_dim)
-    q_rope = linear(p["wuqr"], cq, rns).reshape(B, T, H, m.qk_rope_dim)
+    # the down-projection pair (wdkv, wkr) and the up-projection pair
+    # (wuqn, wuqr) each share one forward conversion on the RNS path
+    dq, dkv, kr = _multi_proj(x, (p["wdq"], p["wdkv"], p["wkr"]), rns)
+    cq = rmsnorm(p["q_norm"], dq)
+    q_nope, q_rope = _multi_proj(cq, (p["wuqn"], p["wuqr"]), rns)
+    q_nope = q_nope.reshape(B, T, H, m.qk_nope_dim)
+    q_rope = q_rope.reshape(B, T, H, m.qk_rope_dim)
     q_nope = constrain(q_nope, ("batch", None, "model", None))
     q_rope = rope(q_rope, positions, cfg.rope_theta)
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
 
-    c_kv = rmsnorm(p["kv_norm"], linear(p["wdkv"], x, rns))       # [B,T,r]
+    c_kv = rmsnorm(p["kv_norm"], dkv)                              # [B,T,r]
     k_rope = rope(
-        linear(p["wkr"], x, rns)[:, :, None, :], positions, cfg.rope_theta
+        kr[:, :, None, :], positions, cfg.rope_theta
     )                                                              # [B,T,1,dr]
-    k_nope = linear(p["wuk"], c_kv, rns).reshape(B, T, H, m.qk_nope_dim)
+    k_nope, v = _multi_proj(c_kv, (p["wuk"], p["wuv"]), rns)
+    k_nope = k_nope.reshape(B, T, H, m.qk_nope_dim)
     k_nope = constrain(k_nope, ("batch", None, "model", None))
-    v = linear(p["wuv"], c_kv, rns).reshape(B, T, H, m.v_dim)
+    v = v.reshape(B, T, H, m.v_dim)
     v = constrain(v, ("batch", None, "model", None))
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_rope, (B, T, H, m.qk_rope_dim))], axis=-1
@@ -372,14 +398,16 @@ def mla_decode(p, x, cfg, cache, *, rns=None):
     B = x.shape[0]
     H = cfg.n_heads
     positions = cache["lengths"][:, None]
-    cq = rmsnorm(p["q_norm"], linear(p["wdq"], x, rns))
-    q_nope = linear(p["wuqn"], cq, rns).reshape(B, 1, H, m.qk_nope_dim)
-    q_rope = linear(p["wuqr"], cq, rns).reshape(B, 1, H, m.qk_rope_dim)
+    dq, dkv, kr = _multi_proj(x, (p["wdq"], p["wdkv"], p["wkr"]), rns)
+    cq = rmsnorm(p["q_norm"], dq)
+    q_nope, q_rope = _multi_proj(cq, (p["wuqn"], p["wuqr"]), rns)
+    q_nope = q_nope.reshape(B, 1, H, m.qk_nope_dim)
+    q_rope = q_rope.reshape(B, 1, H, m.qk_rope_dim)
     q_rope = rope(q_rope, positions, cfg.rope_theta)
 
-    c_kv_t = rmsnorm(p["kv_norm"], linear(p["wdkv"], x, rns))       # [B,1,r]
+    c_kv_t = rmsnorm(p["kv_norm"], dkv)                             # [B,1,r]
     k_rope_t = rope(
-        linear(p["wkr"], x, rns)[:, :, None, :], positions, cfg.rope_theta
+        kr[:, :, None, :], positions, cfg.rope_theta
     )[:, :, 0, :]                                                    # [B,1,dr]
     idx = jnp.arange(B)
     c_kv = cache["c_kv"].at[idx, cache["lengths"]].set(

@@ -4,6 +4,14 @@ Every projection routes through :func:`linear`, which dispatches to the RNS
 digit-sliced datapath when the model config asks for it — that is how the
 paper's technique becomes a first-class, per-layer-selectable feature.
 
+Residue-domain execution: :func:`linear` also consumes/produces
+:class:`~repro.core.tensor.RnsTensor`, and the MLP has a deferred datapath
+(``cfg.rns.defer``) where the wi -> gate-multiply -> wo chain stays in
+residues end to end — the slow MRC normalization runs once per block
+(plus once inside the unavoidable float nonlinearity), not once per
+matmul.  ``rns_linear_chain`` is the same idea for a bare stack of
+linears.
+
 Param-spec convention: ``init_*`` returns ``(params, specs)`` where specs
 mirror params with logical-axis tuples (see distributed/sharding.py for the
 logical->mesh rules).
@@ -11,11 +19,21 @@ logical->mesh rules).
 
 from __future__ import annotations
 
+import dataclasses
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.rns_matmul import RnsDotConfig, rns_dot
+from repro.core.rns_matmul import RnsDotConfig, rns_dot, rns_multi_dot
+from repro.core.tensor import (
+    RnsTensor,
+    rt_decode,
+    rt_encode,
+    rt_matmul,
+    rt_mul,
+)
 
 Axes = tuple  # logical axis names, one per param dim
 
@@ -36,7 +54,27 @@ def init_linear(key, d_in, d_out, *, axes: Axes, bias=False, dtype=jnp.float32,
     return p, s
 
 
+def _encode_weight(p, rns: RnsDotConfig) -> RnsTensor:
+    return rt_encode(p["w"].astype(jnp.float32), rns.profile, bits=rns.qw,
+                     backend=rns.resolved_backend())
+
+
 def linear(p, x, rns: RnsDotConfig | None = None):
+    """x @ w (+ b).  ``x`` may be a float array or an :class:`RnsTensor`.
+
+    With an RnsTensor input the op stays in the residue domain and returns
+    an RnsTensor — no normalization happens here; the caller decodes (or
+    keeps chaining) when it actually needs float values.
+    """
+    if isinstance(x, RnsTensor):
+        if rns is None:
+            raise ValueError("RnsTensor input requires an RnsDotConfig")
+        if "b" in p:
+            raise ValueError(
+                "bias add on a residue-domain activation needs a matching "
+                "fixed-point grid; decode first or drop the bias")
+        return rt_matmul(x, _encode_weight(p, rns),
+                         backend=rns.resolved_backend(), renorm_bits=rns.qx)
     w = p["w"]
     if rns is not None:
         y = rns_dot(x.astype(jnp.float32), w.astype(jnp.float32), rns)
@@ -46,6 +84,41 @@ def linear(p, x, rns: RnsDotConfig | None = None):
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
+
+
+# ---------------------------------------------------- residue-domain chain -
+def _chain_float_ref(ws, x):
+    return functools.reduce(lambda h, w: h @ w, ws, x)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rns_linear_chain(x, ws: tuple, cfg: RnsDotConfig):
+    """x @ w1 @ w2 @ ... entirely in residues: ONE MRC normalization.
+
+    The scale/magnitude ledger inserts intermediate renormalizations only
+    if the profile's exact range would overflow.  Backward is the float
+    chain with straight-through quantizer gradients.
+    """
+    be = cfg.resolved_backend()
+    ht = rt_encode(x.astype(jnp.float32), cfg.profile, bits=cfg.qx, backend=be)
+    for w in ws:
+        wt = rt_encode(w.astype(jnp.float32), cfg.profile, bits=cfg.qw,
+                       backend=be)
+        ht = rt_matmul(ht, wt, backend=be, renorm_bits=cfg.qx)
+    return rt_decode(ht, backend=be).astype(x.dtype)
+
+
+def _chain_fwd(x, ws, cfg):
+    return rns_linear_chain(x, ws, cfg), (x, ws)
+
+
+def _chain_bwd(cfg, resids, g):
+    x, ws = resids
+    _, vjp = jax.vjp(lambda x, ws: _chain_float_ref(ws, x), x, ws)
+    return vjp(g)
+
+
+rns_linear_chain.defvjp(_chain_fwd, _chain_bwd)
 
 
 # --------------------------------------------------------------- norms ----
@@ -123,7 +196,89 @@ def init_mlp(key, d, d_ff, *, gated=True, act="silu", dtype=jnp.float32,
     return p, s
 
 
+def _mlp_float_ref(p, x, gated, act):
+    h = x @ p["wi"]["w"]
+    if gated:
+        h = _act(act)(x @ p["wg"]["w"]) * h
+    else:
+        h = _act(act)(h)
+    return h @ p["wo"]["w"]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def mlp_rns_deferred(p, x, gated: bool, act: str, cfg: RnsDotConfig):
+    """The MLP block with a residue-domain main datapath.
+
+    wi(x) and the gate product and wo(.) chain in residues; the magnitude
+    ledger inserts a renormalization only when the profile would overflow.
+    Slow-op budget per block (when capacity holds): ONE normalize on the
+    main path (after wo) plus one inside the gate nonlinearity — versus
+    one per matmul (3) on the per-op path.
+
+    Backward: float-reference vjp with straight-through quantizer grads
+    (the per-op path's cfg.backward_rns RNS-backward is available by
+    switching defer off for training steps that want it).
+    """
+    be = cfg.resolved_backend()
+    xf = x.astype(jnp.float32)
+    xt = rt_encode(xf, cfg.profile, bits=cfg.qx, backend=be)   # 1 conversion
+    hi = linear(p["wi"], xt, cfg)                              # stays residues
+    if gated:
+        hg = linear(p["wg"], xt, cfg)
+        g = _act(act)(rt_decode(hg, backend=be))               # slow op (act)
+        gt = rt_encode(g, cfg.profile, bits=cfg.qx, backend=be)
+        hi = rt_mul(hi, gt, backend=be, renorm_bits=cfg.qx)    # PAC, deferred
+    else:
+        a = _act(act)(rt_decode(hi, backend=be))               # slow op (act)
+        hi = rt_encode(a, cfg.profile, bits=cfg.qx, backend=be)
+    out = linear(p["wo"], hi, cfg)                             # stays residues
+    return rt_decode(out, backend=be).astype(x.dtype)          # THE normalize
+
+
+def _mlp_deferred_fwd(p, x, gated, act, cfg):
+    return mlp_rns_deferred(p, x, gated, act, cfg), (p, x)
+
+
+def _mlp_deferred_bwd(gated, act, cfg, resids, g):
+    p, x = resids
+    _, vjp = jax.vjp(
+        lambda p, x: _mlp_float_ref(p, x.astype(jnp.float32), gated, act), p, x)
+    gp, gx = vjp(g.astype(jnp.float32))
+    return gp, gx.astype(x.dtype)
+
+
+mlp_rns_deferred.defvjp(_mlp_deferred_fwd, _mlp_deferred_bwd)
+
+
+def _mlp_no_bias(p, gated):
+    return ("b" not in p["wi"] and "b" not in p["wo"]
+            and (not gated or "b" not in p.get("wg", {})))
+
+
 def mlp(p, x, *, gated=True, act="silu", rns=None):
+    if rns is not None and rns.defer and not (
+            _mlp_no_bias(p, gated) and not rns.slice_parallel):
+        # fall back to per-op normalization: residue-domain bias adds need
+        # a matching fixed-point grid, and the deferred chain does not yet
+        # emit the slice-parallel sharding constraints
+        import warnings
+
+        warnings.warn(
+            "rns.defer requested but the MLP has biases or slice_parallel "
+            "is set; falling back to per-op normalization", stacklevel=2)
+        rns = dataclasses.replace(rns, defer=False)
+    if rns is not None and _mlp_no_bias(p, gated):
+        if rns.defer:
+            return mlp_rns_deferred(p, x, gated, act, rns)
+        if gated:
+            # per-op normalization, but ONE shared forward conversion of x
+            # for the wi/wg pair (identical numerics to separate rns_dots)
+            hi, hg = rns_multi_dot(
+                x.astype(jnp.float32),
+                (p["wi"]["w"].astype(jnp.float32),
+                 p["wg"]["w"].astype(jnp.float32)), rns)
+            h = (_act(act)(hg) * hi).astype(x.dtype)
+            return linear(p["wo"], h, rns)
     h = linear(p["wi"], x, rns)
     if gated:
         h = _act(act)(linear(p["wg"], x, rns)) * h

@@ -10,6 +10,13 @@ Modes:
   prefill -> chunked (online-softmax) attention, returns a decode cache
   decode  -> one token through per-layer caches (attn KV / MLA latent /
              mamba state / rwkv state)
+
+RNS execution: ``cfg.rns`` selects the digit-sliced datapath per target
+(attn/mlp/all).  Inside a block the projections share forward conversions
+(models/attention.py) and, with ``cfg.rns.defer``, the MLP's
+wi -> gate -> wo chain runs residues-in/residues-out with one MRC
+normalization on the main path (models/layers.py) — blocks exchange
+floats only at the residual stream.
 """
 
 from __future__ import annotations
@@ -62,7 +69,7 @@ def _init_layer(key, cfg, layer_type: str, mlp_type: str, dtype):
         p["xattn"], s["xattn"] = attn.init_gqa(ks[2], cfg, dtype)
     if mlp_type in ("dense", "__enc__"):
         p["ln2"], s["ln2"] = init_norm(cfg.d_model, cfg.norm, dtype)
-        rns_mlp = cfg.rns is not None and cfg.rns_targets in ("mlp", "all")
+        rns_mlp = _rns_for(cfg, "mlp") is not None
         p["mlp"], s["mlp"] = init_mlp(
             ks[1], cfg.d_model, cfg.d_ff, gated=cfg.gated_mlp, act=cfg.act,
             dtype=dtype,

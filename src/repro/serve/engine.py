@@ -3,6 +3,14 @@
 Batches are grouped by exact prompt length (bucketed batching); decode is a
 jitted step over the shared cache with per-row lengths, so rows that hit
 EOS simply stop contributing (their token is frozen).
+
+When the model config routes projections through RNS, the engine owns the
+execution policy: ``rns_backend`` picks the dispatch backend (reference /
+pallas) and ``rns_defer`` turns on the residue-domain MLP chain — serving
+is forward-only, so deferral is free (no vjp concerns) and drops the
+slow-normalize count per block.  ``rns_op_counts`` reports the structural
+convert/matmul/normalize tallies of one prefill, the serving-side view of
+the paper's one-normalize-per-summation claim.
 """
 
 from __future__ import annotations
@@ -14,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
 from repro.models import model as M
 
 
@@ -23,20 +32,42 @@ class ServeConfig:
     max_new_tokens: int = 32
     eos_id: int = -1            # -1: never stops early
     cache_dtype: str = "float32"
+    # RNS execution policy overrides (None: keep the model config's)
+    rns_backend: str | None = None   # reference|pallas|pallas_interpret|auto
+    rns_defer: bool | None = None    # residue-domain MLP chaining
+
+
+def _apply_rns_policy(model_cfg, scfg: ServeConfig):
+    if model_cfg.rns is None or (
+            scfg.rns_backend is None and scfg.rns_defer is None):
+        return model_cfg
+    rns = model_cfg.rns
+    if scfg.rns_backend is not None:
+        rns = dataclasses.replace(rns, backend=scfg.rns_backend)
+    if scfg.rns_defer is not None:
+        rns = dataclasses.replace(rns, defer=scfg.rns_defer)
+    return dataclasses.replace(model_cfg, rns=rns)
 
 
 class Engine:
     def __init__(self, params, model_cfg, scfg: ServeConfig):
         self.params = params
-        self.cfg = model_cfg
+        self.cfg = _apply_rns_policy(model_cfg, scfg)
         self.scfg = scfg
         self._prefill = jax.jit(
-            functools.partial(M.prefill, cfg=model_cfg, S_max=scfg.max_cache,
+            functools.partial(M.prefill, cfg=self.cfg, S_max=scfg.max_cache,
                               cache_dtype=jnp.dtype(scfg.cache_dtype)),
             static_argnames=())
         self._decode = jax.jit(
             lambda params, tok, cache: M.decode_step(
-                params, model_cfg, tok, cache))
+                params, self.cfg, tok, cache))
+
+    def rns_op_counts(self, B: int = 1, T: int = 8) -> dispatch.OpCounts:
+        """Structural RNS primitive counts for one [B, T] prefill trace."""
+        batch = {"tokens": jnp.zeros((B, T), jnp.int32)}
+        return dispatch.trace_op_counts(
+            lambda p, b: M.prefill(p, self.cfg, b, S_max=self.scfg.max_cache),
+            self.params, batch)
 
     def generate(self, prompts: np.ndarray, frontend: np.ndarray | None = None,
                  max_new: int | None = None):

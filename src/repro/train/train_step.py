@@ -5,8 +5,23 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import dispatch
 from repro.models import model as M
 from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+
+def measure_rns_ops(cfg, batch) -> dispatch.OpCounts:
+    """Structural RNS primitive counts for one loss evaluation.
+
+    Trace-time only (eval_shape — no FLOPs).  ``normalizes_per_matmul`` is
+    the amortization figure of merit: 1.0 on the per-op path, < 1.0 once
+    the residue-domain chains (``cfg.rns.defer``, shared conversions) are
+    doing their job.  Logged by benchmarks/CI against BENCH_*.json.
+    """
+    params = jax.eval_shape(lambda k: M.init_model(k, cfg)[0],
+                            jax.random.PRNGKey(0))
+    return dispatch.trace_op_counts(
+        lambda p, b: M.loss_fn(p, cfg, b), params, batch)
 
 
 def init_train_state(key, cfg):

@@ -4,12 +4,17 @@ import os
 # the dry-run process (launch/dryrun.py sets its own XLA_FLAGS).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-from hypothesis import HealthCheck, settings
-
-settings.register_profile(
-    "ci",
-    max_examples=25,
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
-)
-settings.load_profile("ci")
+# hypothesis is an optional extra (pyproject [test]); in a minimal env the
+# suite must still collect — property tests skip via tests/_hypothesis_stub.
+try:
+    from hypothesis import HealthCheck, settings
+except ModuleNotFoundError:
+    pass
+else:
+    settings.register_profile(
+        "ci",
+        max_examples=25,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    settings.load_profile("ci")

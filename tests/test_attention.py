@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_stub import given, st
 
 from repro.models.attention import (
     chunked_attention,

@@ -4,7 +4,7 @@ from fractions import Fraction
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, strategies as st
+from _hypothesis_stub import given, st
 
 from repro.core import fractional as fr
 from repro.core.moduli import get_profile

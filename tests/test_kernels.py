@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_stub import given, st
 
 from repro.core.rns import encode_exact, encode_int32, tables
 from repro.core.rns_matmul import RnsDotConfig, rns_dot

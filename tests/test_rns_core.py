@@ -3,7 +3,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_stub import given, st
 
 from repro.core import mrc, rns
 from repro.core.moduli import PROFILES, get_profile, required_digits

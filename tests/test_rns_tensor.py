@@ -1,0 +1,283 @@
+"""RnsTensor: pytree round-trips, deferred chains vs python-int oracle,
+and the one-normalize-per-chain op-count contract."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch
+from repro.core.moduli import get_profile
+from repro.core.rns import decode_exact
+from repro.core.rns_matmul import RnsDotConfig
+from repro.core.tensor import (
+    RnsTensor,
+    rt_add,
+    rt_decode,
+    rt_encode,
+    rt_encode_int,
+    rt_matmul,
+    rt_mul,
+)
+
+PROFILE = "rns9"
+
+
+def _mk_rt(rng, shape=(3, 4), bits=8):
+    x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+    return x, rt_encode(x, PROFILE, bits=bits)
+
+
+# ------------------------------------------------------------- pytree -----
+class TestPytree:
+    def test_flatten_unflatten_roundtrip(self):
+        rng = np.random.default_rng(0)
+        _, rt = _mk_rt(rng)
+        leaves, treedef = jax.tree_util.tree_flatten(rt)
+        rt2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert isinstance(rt2, RnsTensor)
+        assert rt2.profile == rt.profile
+        assert rt2.mag_bits == rt.mag_bits
+        assert rt2.frac_exp == rt.frac_exp
+        assert np.array_equal(np.asarray(rt2.digits), np.asarray(rt.digits))
+        assert float(rt2.scale) == float(rt.scale)
+
+    def test_jit_identity_and_consume(self):
+        rng = np.random.default_rng(1)
+        x, rt = _mk_rt(rng)
+
+        @jax.jit
+        def through(t: RnsTensor) -> RnsTensor:
+            return t
+
+        rt2 = through(rt)
+        assert isinstance(rt2, RnsTensor) and rt2.profile == rt.profile
+        assert np.array_equal(np.asarray(rt2.digits), np.asarray(rt.digits))
+
+        @jax.jit
+        def decode(t):
+            return rt_decode(t)
+
+        got = np.asarray(decode(rt))
+        # 8-bit grid: |err| <= 0.5/scale (+f32 reconstruction slack)
+        assert np.max(np.abs(got - np.asarray(x))) <= 0.51 / float(rt.scale)
+
+    def test_jit_produces_rnstensor(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.standard_normal((2, 5)), jnp.float32)
+        rt = jax.jit(lambda x: rt_encode(x, PROFILE, bits=8))(x)
+        assert isinstance(rt, RnsTensor)
+        np.testing.assert_allclose(np.asarray(rt_decode(rt)), np.asarray(x),
+                                   atol=0.5 / float(rt.scale))
+
+    def test_vmap_over_batch_axis(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((4, 3, 5)), jnp.float32)
+        rt = rt_encode(x, PROFILE, bits=8)  # digits [K, 4, 3, 5]
+        axes = RnsTensor(digits=1, scale=None, profile=rt.profile,
+                         mag_bits=rt.mag_bits, frac_exp=rt.frac_exp)
+        ys = jax.vmap(rt_decode, in_axes=(axes,))(rt)
+        np.testing.assert_allclose(
+            np.asarray(ys), np.asarray(rt_decode(rt)), rtol=1e-6)
+
+
+# ------------------------------------------------- deferred chain oracle ---
+class TestDeferredChain:
+    def test_three_linear_chain_matches_per_op_bit_for_bit(self):
+        """Acceptance: >=3 chained RNS linears, ONE MRC normalization,
+        decode bit-identical to the per-op-normalized reference."""
+        rng = np.random.default_rng(4)
+        p = get_profile(PROFILE)
+        xi = rng.integers(-7, 8, (2, 8)).astype(np.int32)
+        ws = [rng.integers(-7, 8, (8, 8)).astype(np.int32) for _ in range(2)]
+        ws.append(rng.integers(-7, 8, (8, 4)).astype(np.int32))
+
+        # deferred: stay in residues across all three matmuls
+        with dispatch.count_ops() as c_def:
+            ht = rt_encode_int(xi, PROFILE, mag_bits=3)
+            for w in ws:
+                ht = rt_matmul(ht, rt_encode_int(w, PROFILE, mag_bits=3))
+            deferred = decode_exact(p, np.asarray(ht.digits.astype(jnp.int32)))
+
+        # per-op: normalize (exact int decode) and re-encode after EVERY op
+        with dispatch.count_ops() as c_per:
+            ht = rt_encode_int(xi, PROFILE, mag_bits=3)
+            for w in ws:
+                ht = rt_matmul(ht, rt_encode_int(w, PROFILE, mag_bits=3))
+                ints = decode_exact(p, np.asarray(ht.digits.astype(jnp.int32)))
+                dispatch.normalize(  # count the slow op the re-entry pays
+                    PROFILE, ht.digits.astype(jnp.int32))
+                ht = rt_encode_int(
+                    np.asarray(ints, np.int64).astype(np.int32), PROFILE,
+                    mag_bits=30)
+            per_op = decode_exact(p, np.asarray(ht.digits.astype(jnp.int32)))
+
+        want = xi.astype(object)
+        for w in ws:
+            want = want @ w.astype(object)
+        assert np.array_equal(deferred, want)
+        assert np.array_equal(per_op, want)
+        assert np.array_equal(deferred, per_op)  # bit-for-bit
+        # the structural claim: 3 matmuls, 0 normalizations in-residues
+        # (the single final decode_exact is the chain's one slow op) vs
+        # one normalization per matmul on the per-op path
+        assert c_def.matmuls == 3 and c_def.normalizes == 0
+        assert c_per.matmuls == 3 and c_per.normalizes == 3
+
+    def test_chain_single_normalize_through_decode(self):
+        """Float chain: one rt_decode == exactly one dispatch.normalize."""
+        rng = np.random.default_rng(5)
+        cfg = RnsDotConfig(profile="rns9", qx=8, qw=8)
+        x = jnp.asarray(rng.standard_normal((2, 16)), jnp.float32)
+        ws = tuple(jnp.asarray(rng.standard_normal((16, 16)) / 4, jnp.float32)
+                   for _ in range(3))
+
+        from repro.models.layers import rns_linear_chain
+
+        with dispatch.count_ops() as c:
+            y = rns_linear_chain(x, ws, cfg)
+        assert c.matmuls == 3
+        assert c.normalizes == 1  # ONE MRC for the whole chain
+        ref = x
+        for w in ws:
+            ref = ref @ w
+        np.testing.assert_allclose(np.asarray(y), np.asarray(ref), atol=0.35)
+
+    def test_op_count_under_jit_trace(self):
+        rng = np.random.default_rng(6)
+        cfg = RnsDotConfig(profile="rns9", qx=8, qw=8)
+        x = jnp.asarray(rng.standard_normal((2, 16)), jnp.float32)
+        ws = tuple(jnp.asarray(rng.standard_normal((16, 16)) / 4, jnp.float32)
+                   for _ in range(3))
+        from repro.models.layers import rns_linear_chain
+
+        c = dispatch.trace_op_counts(
+            jax.jit(lambda x: rns_linear_chain(x, ws, cfg)), x)
+        assert (c.matmuls, c.normalizes) == (3, 1)
+        assert c.normalizes_per_matmul == pytest.approx(1 / 3)
+
+    def test_ledger_inserts_renormalize_on_overflow(self):
+        """Magnitude bookkeeping: a chain that would exceed the profile's
+        exact range triggers an automatic mid-chain renormalization."""
+        rng = np.random.default_rng(7)
+        cfg = RnsDotConfig(profile="rns5", qx=12, qw=12)  # ~34.8 bits only
+        x = jnp.asarray(rng.standard_normal((2, 64)), jnp.float32)
+        ws = tuple(jnp.asarray(rng.standard_normal((64, 64)) / 8, jnp.float32)
+                   for _ in range(3))
+        from repro.models.layers import rns_linear_chain
+
+        with dispatch.count_ops() as c:
+            y = rns_linear_chain(x, ws, cfg)
+        assert c.matmuls == 3
+        assert 1 < c.normalizes <= 3  # ledger-forced renorms + final decode
+        ref = x
+        for w in ws:
+            ref = ref @ w
+        err = np.max(np.abs(np.asarray(y) - np.asarray(ref)))
+        assert err < 0.1 * float(jnp.max(jnp.abs(ref)) + 1.0)
+
+    def test_elementwise_mul_and_add_defer(self):
+        rng = np.random.default_rng(8)
+        x = jnp.asarray(rng.standard_normal((32,)), jnp.float32)
+        y = jnp.asarray(rng.standard_normal((32,)), jnp.float32)
+        with dispatch.count_ops() as c:
+            xt = rt_encode(x, PROFILE, bits=12)
+            yt = rt_encode(y, PROFILE, bits=12)
+            pt = rt_mul(xt, yt)
+            st = rt_add(pt, pt)
+            out = np.asarray(rt_decode(st))
+        assert c.normalizes == 1  # product+sum normalized once
+        np.testing.assert_allclose(out, np.asarray(2 * x * y), atol=2e-2)
+
+
+# -------------------------------------------------------- model datapath ---
+class TestModelDatapaths:
+    def test_deferred_mlp_fewer_normalizes_and_close(self):
+        from repro.models.layers import init_mlp, mlp
+
+        rng = np.random.default_rng(9)
+        key = jax.random.PRNGKey(0)
+        d, d_ff = 16, 32
+        p, _ = init_mlp(key, d, d_ff, gated=True)
+        x = jnp.asarray(rng.standard_normal((2, 6, d)), jnp.float32)
+        per_op = RnsDotConfig(profile="rns9", qx=8, qw=8)
+        deferred = dataclasses.replace(per_op, defer=True)
+
+        with dispatch.count_ops() as c_p:
+            y_p = mlp(p, x, gated=True, act="silu", rns=per_op)
+        with dispatch.count_ops() as c_d:
+            y_d = mlp(p, x, gated=True, act="silu", rns=deferred)
+        # per-op: one normalize per matmul; deferred: gate + final only
+        assert c_p.normalizes == 3 and c_p.matmuls == 3
+        assert c_d.normalizes == 2 and c_d.matmuls == 3
+        # shared conversion on the per-op path: one convert for x + wi + wg
+        # + h + wo = 5, vs 6 when every matmul converts both operands
+        assert c_p.converts == 5
+        y_ref = mlp(p, x, gated=True, act="silu")
+        tol = 0.15 * float(jnp.max(jnp.abs(y_ref)) + 1e-3)
+        assert np.max(np.abs(np.asarray(y_p) - np.asarray(y_ref))) < tol
+        assert np.max(np.abs(np.asarray(y_d) - np.asarray(y_ref))) < tol
+
+    def test_deferred_mlp_grads(self):
+        from repro.models.layers import init_mlp, mlp
+
+        rng = np.random.default_rng(10)
+        p, _ = init_mlp(jax.random.PRNGKey(1), 8, 16, gated=True)
+        x = jnp.asarray(rng.standard_normal((3, 8)), jnp.float32)
+        cfg = RnsDotConfig(profile="rns9", qx=8, qw=8, defer=True)
+
+        def loss(p, x):
+            return jnp.sum(mlp(p, x, gated=True, act="silu", rns=cfg) ** 2)
+
+        gp, gx = jax.grad(loss, argnums=(0, 1))(p, x)
+        gp_ref, gx_ref = jax.grad(
+            lambda p, x: jnp.sum(mlp(p, x, gated=True, act="silu") ** 2),
+            argnums=(0, 1))(p, x)
+        for a, b in zip(jax.tree.leaves(gp), jax.tree.leaves(gp_ref)):
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b),
+                atol=0.2 * float(jnp.max(jnp.abs(b)) + 1e-3))
+        assert bool(jnp.all(jnp.isfinite(gx)))
+
+    def test_linear_consumes_and_produces_rnstensor(self):
+        from repro.models.layers import init_linear, linear
+
+        rng = np.random.default_rng(11)
+        cfg = RnsDotConfig(profile="rns9", qx=8, qw=8)
+        p1, _ = init_linear(jax.random.PRNGKey(2), 12, 12, axes=(None, None))
+        p2, _ = init_linear(jax.random.PRNGKey(3), 12, 6, axes=(None, None))
+        x = jnp.asarray(rng.standard_normal((4, 12)), jnp.float32)
+        with dispatch.count_ops() as c:
+            xt = rt_encode(x, cfg.profile, bits=cfg.qx)
+            h = linear(p1, xt, cfg)     # RnsTensor in ...
+            assert isinstance(h, RnsTensor)
+            y = linear(p2, h, cfg)      # ... RnsTensor out, still deferred
+            out = rt_decode(y)
+        assert c.normalizes == 1
+        ref = x @ p1["w"] @ p2["w"]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=0.25 * float(jnp.max(jnp.abs(ref))))
+
+    def test_profile_mismatch_raises(self):
+        rng = np.random.default_rng(12)
+        x, rt = _mk_rt(rng, (2, 4))
+        other = rt_encode(x, "rns12", bits=8)
+        with pytest.raises(ValueError, match="profile mismatch"):
+            rt_matmul(rt, other)
+
+
+# ----------------------------------------------------------- train/serve ---
+def test_measure_rns_ops_counts_mlp_matmuls():
+    from repro.configs.base import get_config
+    from repro.train.train_step import measure_rns_ops
+
+    cfg = get_config("smollm-135m", smoke=True)
+    cfg = dataclasses.replace(
+        cfg, rns=RnsDotConfig(profile="rns9", qx=14, qw=14),
+        rns_targets="mlp")
+    batch = {"tokens": jnp.zeros((2, 8), jnp.int32)}
+    c = measure_rns_ops(cfg, batch)
+    assert c.matmuls > 0
+    assert c.normalizes_per_matmul <= 1.0

@@ -15,7 +15,10 @@ class TestSpecResolution:
         # AbstractMesh: rule resolution only needs axis names + sizes
         from jax.sharding import AbstractMesh
 
-        return AbstractMesh(shape, axes)
+        try:
+            return AbstractMesh(shape, axes)            # jax >= 0.5
+        except TypeError:
+            return AbstractMesh(tuple(zip(axes, shape)))  # jax 0.4.x
 
     def test_basic_rules(self):
         from jax.sharding import PartitionSpec as P
