@@ -182,6 +182,27 @@ def bench_mlp_block_normalizes(report):
                f"converts={c.converts}")
 
 
+def bench_paged_gather(report):
+    """Serving-path overhead: the paged cache's block-table gather vs a
+    dense cache read (the price of decoupling cache memory from batch).
+    """
+    from repro.serve.kv_cache import gather_pages
+
+    rng = np.random.default_rng(5)
+    R, nb, bs, Hk, D = 8, 16, 16, 4, 64
+    P = 1 + R * nb
+    pages = jnp.asarray(rng.standard_normal((P, bs, Hk, D)), jnp.float32)
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, P))[: R * nb].reshape(R, nb), jnp.int32)
+    dense = jnp.asarray(rng.standard_normal((R, nb * bs, Hk, D)), jnp.float32)
+    t_gather = _t(jax.jit(lambda p, b: gather_pages(p, b) * 1.0), pages, bt,
+                  n=5)
+    t_dense = _t(jax.jit(lambda d: d * 1.0), dense, n=5)
+    report("paged_gather_8x256", t_gather,
+           f"dense_read={t_dense:.0f}us pages={P} page_size={bs} "
+           f"(gather cost amortizes into the decode attention read)")
+
+
 def bench_rns_matmul_wall(report):
     """CPU-proxy wall time: digit-sliced matmul (jnp + pallas-interpret)."""
     rng = np.random.default_rng(4)
@@ -211,4 +232,5 @@ def run_all(report):
     bench_precision_scaling(report)
     bench_chain_amortization(report)
     bench_mlp_block_normalizes(report)
+    bench_paged_gather(report)
     bench_rns_matmul_wall(report)

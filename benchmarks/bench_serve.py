@@ -1,0 +1,176 @@
+"""Mixed-length synthetic-traffic benchmark: continuous vs bucketed.
+
+This is the system-level benchmark behind the PR-2 tentpole: the paper's
+RNS cost model (cheap residue ops, one slow normalize per summation) only
+pays off if the engine keeps the datapath saturated — which bucketed
+batching cannot do the moment request lengths mix.  Each engine serves
+the SAME workload cold (fresh engine, compile included — the
+recompilation cliff IS the production cost being measured) and warm.
+
+Rows land in ``BENCH_serve.json`` via ``benchmarks/run.py --serve-json``:
+tokens/sec, p50/p99 request latency, and cache-page utilization.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
+
+
+PROMPT_LENS = (7, 33, 120)
+
+
+def _traffic(vocab, n_req, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, (PROMPT_LENS[i % len(PROMPT_LENS)],))
+            .astype(np.int32) for i in range(n_req)]
+
+
+def _serve_bucketed(params, cfg, prompts, max_new, max_cache):
+    """Exact-length buckets, each run to completion (the legacy engine)."""
+    t0 = time.perf_counter()
+    engine = Engine(params, cfg, ServeConfig(max_cache=max_cache,
+                                             max_new_tokens=max_new))
+    buckets: dict[int, list[int]] = {}
+    for i, p in enumerate(prompts):
+        buckets.setdefault(len(p), []).append(i)
+    done_at = np.zeros((len(prompts),), np.float64)
+    total = 0
+    for L, idxs in sorted(buckets.items()):
+        batch = np.stack([prompts[i] for i in idxs])
+        out = engine.generate(batch)
+        t = time.perf_counter() - t0
+        for i in idxs:
+            done_at[i] = t
+        total += out.size
+    wall = time.perf_counter() - t0
+    return {
+        "tokens_per_s": total / wall,
+        "wall_s": wall,
+        "latency_p50_s": float(np.percentile(done_at, 50)),
+        "latency_p99_s": float(np.percentile(done_at, 99)),
+        "n_buckets": len(buckets),
+    }
+
+
+def _serve_continuous(params, cfg, prompts, max_new, max_cache, **knobs):
+    engine = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=max_cache, max_new_tokens=max_new, **knobs))
+    _, stats = engine.run(prompts)
+    stats["decode_compiles"] = engine._decode._cache_size()
+    return stats
+
+
+def bench_traffic(report, arch="smollm-135m", n_req=9, max_new=16):
+    """Cold-start mixed-length traffic: the bucketed engine recompiles per
+    (length, bucket-size) cell; the continuous engine compiles once."""
+    cfg = get_config(arch, smoke=True)
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    prompts = _traffic(cfg.vocab, n_req)
+    max_cache = max(PROMPT_LENS) + max_new + 8
+
+    b = _serve_bucketed(params, cfg, prompts, max_new, max_cache)
+    c = _serve_continuous(params, cfg, prompts, max_new, max_cache,
+                          page_size=16, max_seqs=n_req)
+    report("serve_bucketed_cold", b["wall_s"] * 1e6,
+           f"tok_s={b['tokens_per_s']:.1f} p50={b['latency_p50_s']:.3f}s "
+           f"p99={b['latency_p99_s']:.3f}s buckets={b['n_buckets']}")
+    report("serve_continuous_cold", c["wall_s"] * 1e6,
+           f"tok_s={c['tokens_per_s']:.1f} p50={c['latency_p50_s']:.3f}s "
+           f"p99={c['latency_p99_s']:.3f}s "
+           f"page_util={c['mean_page_utilization']:.2f} "
+           f"decode_compiles={c['decode_compiles']} "
+           f"speedup_vs_bucketed={b['wall_s']/c['wall_s']:.2f}x")
+    return b, c
+
+
+def bench_traffic_warm(report, arch="smollm-135m", n_req=9, max_new=16):
+    """Same workload with compiles amortized: in-flight batching still wins
+    on scheduling (one dense step for all rows vs per-bucket loops)."""
+    cfg = get_config(arch, smoke=True)
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    max_cache = max(PROMPT_LENS) + max_new + 8
+
+    # warm each engine on a throwaway round, then measure a fresh workload
+    warm = _traffic(cfg.vocab, n_req, seed=1)
+    meas = _traffic(cfg.vocab, n_req, seed=2)
+
+    eng = Engine(params, cfg, ServeConfig(max_cache=max_cache,
+                                          max_new_tokens=max_new))
+    buckets: dict[int, list[np.ndarray]] = {}
+    for p in warm:
+        buckets.setdefault(len(p), []).append(p)
+    for L, ps in buckets.items():
+        eng.generate(np.stack(ps))
+    t0 = time.perf_counter()
+    total = 0
+    for L, ps in sorted(buckets.items()):
+        out = eng.generate(np.stack([p for p in meas if len(p) == L]))
+        total += out.size
+    wall_b = time.perf_counter() - t0
+
+    ceng = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=max_cache, max_new_tokens=max_new, page_size=16,
+        max_seqs=n_req))
+    ceng.run(warm)
+    _, cs = ceng.run(meas)
+    report("serve_bucketed_warm", wall_b * 1e6,
+           f"tok_s={total/wall_b:.1f}")
+    report("serve_continuous_warm", cs["wall_s"] * 1e6,
+           f"tok_s={cs['tokens_per_s']:.1f} "
+           f"page_util={cs['mean_page_utilization']:.2f} "
+           f"preemptions={cs['n_preemptions']}")
+
+
+def bench_preemption(report, arch="smollm-135m"):
+    """Recompute preemption under page pressure: throughput degrades
+    gracefully instead of rejecting traffic."""
+    cfg = get_config(arch, smoke=True)
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab, (L,)).astype(np.int32)
+               for L in (30, 28, 25, 20)]
+    c = _serve_continuous(params, cfg, prompts, 20, 64,
+                          page_size=16, max_seqs=4, n_pages=10)
+    report("serve_preemption_tiny_pool", c["wall_s"] * 1e6,
+           f"tok_s={c['tokens_per_s']:.1f} preemptions={c['n_preemptions']} "
+           f"page_util={c['mean_page_utilization']:.2f}")
+
+
+def bench_rns_serving(report, arch="smollm-135m"):
+    """The serving-side slow-op budget: per-step structural RNS counts
+    through the continuous engine (deferred-MLP policy on)."""
+    import dataclasses
+
+    from repro.core.rns_matmul import RnsDotConfig
+
+    cfg = dataclasses.replace(get_config(arch, smoke=True),
+                              rns=RnsDotConfig(profile="rns9", qx=8, qw=8),
+                              rns_targets="mlp")
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(1, cfg.vocab, (L,)).astype(np.int32)
+               for L in (7, 33)]
+    for tag, defer in (("per_op", False), ("deferred", True)):
+        eng = ContinuousEngine(params, cfg, ServeConfig(
+            max_cache=64, max_new_tokens=4, page_size=16, max_seqs=2,
+            rns_defer=defer))
+        _, stats = eng.run(prompts)
+        ops = stats["steps"][-1]["rns_ops"]        # decode-only step
+        report(f"serve_step_rns_{tag}", stats["wall_s"] * 1e6,
+               f"decode_step: norm_per_matmul="
+               f"{ops.normalizes_per_matmul:.3f} normalizes={ops.normalizes} "
+               f"matmuls={ops.matmuls} converts={ops.converts}")
+
+
+def run_all(report):
+    bench_traffic(report)
+    bench_traffic_warm(report)
+    bench_preemption(report)
+    bench_rns_serving(report)

@@ -1,7 +1,9 @@
 # One function per paper claim. Print ``name,us_per_call,derived`` CSV.
-# ``--json PATH`` additionally writes the rows as a BENCH_*.json artifact
-# (CI uploads BENCH_core.json so the normalize-ops-per-matmul amortization
-# figures are tracked per commit).
+# ``--json PATH`` additionally writes the rows as a BENCH_core.json
+# artifact (normalize-ops-per-matmul amortization, tracked per commit);
+# ``--serve-json PATH`` runs the mixed-length synthetic-traffic benchmark
+# (benchmarks/bench_serve.py) and writes BENCH_serve.json — tokens/sec,
+# p50/p99 latency, page utilization for continuous vs bucketed serving.
 from __future__ import annotations
 
 import argparse
@@ -12,18 +14,33 @@ import os
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="also write rows as JSON (e.g. BENCH_core.json)")
+                    help="also write core rows as JSON (e.g. BENCH_core.json)")
+    ap.add_argument("--serve-json", default=None, metavar="PATH",
+                    help="run the serve traffic benchmark, write its rows "
+                         "as JSON (e.g. BENCH_serve.json)")
+    ap.add_argument("--skip-core", action="store_true",
+                    help="skip the core benches (serve-only run)")
     args = ap.parse_args()
     rows = []
+    serve_rows = []
+    sink = rows
 
     def report(name: str, us: float, derived: str = ""):
-        rows.append({"name": name, "us_per_call": us, "derived": derived})
+        sink.append({"name": name, "us_per_call": us, "derived": derived})
         print(f"{name},{us:.1f},{derived}", flush=True)
 
     print("name,us_per_call,derived")
-    from benchmarks import bench_core
+    if not args.skip_core:
+        from benchmarks import bench_core
 
-    bench_core.run_all(report)
+        bench_core.run_all(report)
+
+    if args.serve_json:
+        from benchmarks import bench_serve
+
+        sink = serve_rows
+        bench_serve.run_all(report)
+        sink = rows
 
     # roofline summary from the newest dry-run artifacts
     for tag, d in (("baseline", "artifacts/dryrun"),
@@ -47,6 +64,10 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=2)
         print(f"wrote {args.json}", flush=True)
+    if args.serve_json:
+        with open(args.serve_json, "w") as f:
+            json.dump(serve_rows, f, indent=2)
+        print(f"wrote {args.serve_json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,66 @@
+"""Continuous batching: mixed-length traffic through one jitted decode.
+
+Submits a stream of mixed-length prompts, steps the scheduler by hand so
+the in-flight behaviour is visible (admissions, evictions, page
+utilization), then drains and prints the aggregate serving stats.
+
+    PYTHONPATH=src python examples/serve_continuous.py --arch smollm-135m
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serve.engine import ContinuousEngine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--new", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=14,
+                    help="small pool on purpose: watch preemption happen")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    engine = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=144, max_new_tokens=args.new, page_size=16, max_seqs=4,
+        n_pages=args.n_pages))
+
+    rng = np.random.default_rng(0)
+    lens = [7, 33, 120, 25, 60, 9]
+    for L in lens:
+        engine.submit(rng.integers(1, cfg.vocab, (L,)).astype(np.int32))
+
+    print(f"{len(lens)} requests, prompt lengths {lens}, "
+          f"pool={args.n_pages - 1} usable pages x 16 tokens")
+    while engine.sched.has_work:
+        s = engine.step()
+        tags = []
+        if s["admitted"]:
+            tags.append(f"admit{s['admitted']}")
+        if s["preempted"]:
+            tags.append(f"EVICT{s['preempted']}")
+        if s["finished"]:
+            tags.append(f"done{s['finished']}")
+        print(f"  step {s['step']:3d}: active={s['active']} "
+              f"waiting={s['waiting']} pages={s['page_utilization']:.2f} "
+              f"{' '.join(tags)}")
+
+    print(f"\nserved {len(engine.results)} requests — evicted rows "
+          f"re-prefill from their prompt, and greedy decode makes the "
+          f"replay token-identical to a solo run "
+          f"(tests/test_serve_continuous.py asserts it)")
+    print(f"decode compiles: {engine._decode._cache_size()} "
+          f"(one step for every length mix)")
+    for rid, toks in sorted(engine.results.items()):
+        print(f"  request {rid} (prompt {lens[rid]:3d} tokens): "
+              f"{toks[:8].tolist()}...")
+
+
+if __name__ == "__main__":
+    main()

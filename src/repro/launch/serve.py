@@ -1,7 +1,14 @@
-"""Batched serving launcher (smoke-scale on CPU; same engine at fleet scale).
+"""Serving launcher (smoke-scale on CPU; same engines at fleet scale).
+
+Bucketed (equal-length batch, legacy):
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --batch 8 --prompt-len 32 --new 16
+
+Continuous batching over the paged KV cache (mixed-length traffic):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
+        --continuous --requests 12 --prompt-lens 7,33,120 --new 16
 """
 
 from __future__ import annotations
@@ -14,19 +21,10 @@ import numpy as np
 
 from repro.configs.base import get_config
 from repro.models import model as M
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-135m")
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--new", type=int, default=16)
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch, smoke=True)
-    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+def _bucketed(args, cfg, params):
     engine = Engine(params, cfg, ServeConfig(
         max_cache=args.prompt_len + args.new + 8, max_new_tokens=args.new))
     rng = np.random.default_rng(0)
@@ -47,6 +45,53 @@ def main():
     dt = time.perf_counter() - t0
     print(f"warm: {n_tok/dt:.1f} tok/s")
     print("sample:", out[0][:16])
+
+
+def _continuous(args, cfg, params):
+    lens = [int(x) for x in args.prompt_lens.split(",")]
+    max_cache = max(lens) + args.new + 8
+    engine = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=max_cache, max_new_tokens=args.new,
+        page_size=args.page_size, max_seqs=args.max_seqs,
+        n_pages=args.n_pages))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (lens[i % len(lens)],)).astype(
+        np.int32) for i in range(args.requests)]
+    res, stats = engine.run(prompts)
+    print(f"served {stats['n_requests']} mixed-length requests "
+          f"(lens {sorted(set(lens))}) in {stats['n_steps']} steps / "
+          f"{stats['wall_s']:.2f}s -> {stats['tokens_per_s']:.1f} tok/s")
+    print(f"latency p50={stats['latency_p50_s']:.3f}s "
+          f"p99={stats['latency_p99_s']:.3f}s  "
+          f"page util (mean)={stats['mean_page_utilization']:.2f}  "
+          f"preemptions={stats['n_preemptions']}")
+    print(f"compiles: prefill={engine._prefill._cache_size()} "
+          f"decode={engine._decode._cache_size()} (per-length recompiles: 0)")
+    print("sample:", res[0][:16])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new", type=int, default=16)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching over the paged KV cache")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--prompt-lens", default="7,33,120",
+                    help="comma list; requests cycle through these lengths")
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--max-seqs", type=int, default=8)
+    ap.add_argument("--n-pages", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    if args.continuous:
+        _continuous(args, cfg, params)
+    else:
+        _bucketed(args, cfg, params)
 
 
 if __name__ == "__main__":

@@ -278,6 +278,34 @@ def gqa_decode(p, x, cfg, cache, *, rns=None, use_rope=True):
     return y, k_cache, v_cache
 
 
+def gqa_decode_paged(p, x, cfg, cache, *, rns=None, use_rope=True):
+    """One-token decode against a paged KV cache (continuous batching).
+
+    cache: {"k_pages","v_pages" [P,bs,Hk,D], "block_table" [R,nb],
+    "lengths" [R]}.  The new token's K/V are scattered into the row's
+    current page, then the row's pages are gathered back into a dense
+    [R, nb*bs, Hk, D] view — numerically identical to the dense-cache
+    path (positions past ``lengths`` are masked to exact zeros in the
+    softmax, so the page-pool garbage there never contributes).
+
+    Returns (y [B,1,d], k_pages, v_pages).
+    """
+    from repro.serve.kv_cache import gather_pages, write_token
+
+    B = x.shape[0]
+    positions = cache["lengths"][:, None]
+    q, k, v = gqa_qkv(p, x, cfg, positions, rns, use_rope=use_rope)
+    k_pages = write_token(cache["k_pages"], cache["block_table"],
+                          cache["lengths"], k[:, 0])
+    v_pages = write_token(cache["v_pages"], cache["block_table"],
+                          cache["lengths"], v[:, 0])
+    kd = gather_pages(k_pages, cache["block_table"])
+    vd = gather_pages(v_pages, cache["block_table"])
+    out, _lse = decode_attention(q, kd, vd, cache["lengths"] + 1)
+    y = linear(p["wo"], out.reshape(B, 1, -1), rns)
+    return y, k_pages, v_pages
+
+
 def cross_decode(p, x, cfg, xkv, *, rns=None):
     """Decode-time cross-attention over a static encoder KV (enc-dec archs).
 
@@ -381,42 +409,43 @@ def mla_attend(p, x, cfg, *, mode: str, positions=None, kv_mask=None,
     return linear(p["wo"], out.reshape(B, T, -1), rns), latent
 
 
-def mla_decode(p, x, cfg, cache, *, rns=None):
-    """Absorbed-matrix MLA decode (DeepSeek-V2's deployment form).
+def _mla_decode_proj(p, x, cfg, lengths, rns):
+    """Shared decode-time MLA projections.
 
-    cache: {"c_kv" [B,S,r], "k_rope" [B,S,dr], "lengths" [B]} — the latent
-    cache is (r + dr) per token instead of 2*H*D: the paper's compression.
-    W_uk is absorbed into the query and W_uv into the output so attention
-    runs directly in the latent space (MQA-shaped, Hk=1).
-
-    Returns (y [B,1,d], c_kv_cache, k_rope_cache, lse [B,1,1,1?]) — lse has
-    shape [B,1(Hk),H(G),1] for sequence-sharded combination.
+    Returns (q_nope [B,1,H,dn], q_rope [B,1,H,dr] roped, c_kv_t [B,1,r],
+    k_rope_t [B,1,dr] roped) — everything the cache write + absorbed
+    attention need, for either cache layout.
     """
     from repro.models.layers import rmsnorm
 
     m = cfg.mla
     B = x.shape[0]
     H = cfg.n_heads
-    positions = cache["lengths"][:, None]
+    positions = lengths[:, None]
     dq, dkv, kr = _multi_proj(x, (p["wdq"], p["wdkv"], p["wkr"]), rns)
     cq = rmsnorm(p["q_norm"], dq)
     q_nope, q_rope = _multi_proj(cq, (p["wuqn"], p["wuqr"]), rns)
     q_nope = q_nope.reshape(B, 1, H, m.qk_nope_dim)
     q_rope = q_rope.reshape(B, 1, H, m.qk_rope_dim)
     q_rope = rope(q_rope, positions, cfg.rope_theta)
-
     c_kv_t = rmsnorm(p["kv_norm"], dkv)                             # [B,1,r]
     k_rope_t = rope(
         kr[:, :, None, :], positions, cfg.rope_theta
     )[:, :, 0, :]                                                    # [B,1,dr]
-    idx = jnp.arange(B)
-    c_kv = cache["c_kv"].at[idx, cache["lengths"]].set(
-        c_kv_t[:, 0].astype(cache["c_kv"].dtype))
-    k_rope = cache["k_rope"].at[idx, cache["lengths"]].set(
-        k_rope_t[:, 0].astype(cache["k_rope"].dtype))
-    lengths = cache["lengths"] + 1
+    return q_nope, q_rope, c_kv_t, k_rope_t
 
-    # absorb W_uk: q_abs [B,1,H,r]
+
+def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, c_kv, k_rope, lengths,
+                         rns):
+    """Absorbed-matrix latent attention over a dense [B,S,·] latent view.
+
+    W_uk is absorbed into the query and W_uv into the output so attention
+    runs directly in the latent space (MQA-shaped, Hk=1).  Returns
+    (y [B,1,d], lse [B,1,H,1]).
+    """
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
     wuk = p["wuk"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_dim)
     q_abs = jnp.einsum("bthd,rhd->bthr", q_nope.astype(jnp.float32),
                        wuk.astype(jnp.float32))
@@ -438,4 +467,47 @@ def mla_decode(p, x, cfg, cache, *, rns=None):
     out = jnp.einsum("bthr,rhd->bthd", ctx, wuv.astype(jnp.float32))
     y = linear(p["wo"], out.reshape(B, 1, -1).astype(x.dtype), rns)
     lse = (mx + jnp.log(jnp.maximum(l, 1e-30)))[:, None, :, :]  # [B,1,H,1]
+    return y, lse
+
+
+def mla_decode(p, x, cfg, cache, *, rns=None):
+    """Absorbed-matrix MLA decode (DeepSeek-V2's deployment form).
+
+    cache: {"c_kv" [B,S,r], "k_rope" [B,S,dr], "lengths" [B]} — the latent
+    cache is (r + dr) per token instead of 2*H*D: the paper's compression.
+
+    Returns (y [B,1,d], c_kv_cache, k_rope_cache, lse) — lse has shape
+    [B,1(Hk),H(G),1] for sequence-sharded combination.
+    """
+    B = x.shape[0]
+    q_nope, q_rope, c_kv_t, k_rope_t = _mla_decode_proj(
+        p, x, cfg, cache["lengths"], rns)
+    idx = jnp.arange(B)
+    c_kv = cache["c_kv"].at[idx, cache["lengths"]].set(
+        c_kv_t[:, 0].astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[idx, cache["lengths"]].set(
+        k_rope_t[:, 0].astype(cache["k_rope"].dtype))
+    y, lse = _mla_absorbed_attend(
+        p, x, cfg, q_nope, q_rope, c_kv, k_rope, cache["lengths"] + 1, rns)
     return y, c_kv, k_rope, lse
+
+
+def mla_decode_paged(p, x, cfg, cache, *, rns=None):
+    """MLA decode against a paged latent cache (continuous batching).
+
+    cache: {"ckv_pages" [P,bs,r], "krope_pages" [P,bs,dr], "block_table"
+    [R,nb], "lengths" [R]}.  Returns (y, ckv_pages, krope_pages).
+    """
+    from repro.serve.kv_cache import gather_pages, write_token
+
+    q_nope, q_rope, c_kv_t, k_rope_t = _mla_decode_proj(
+        p, x, cfg, cache["lengths"], rns)
+    ckv_pages = write_token(cache["ckv_pages"], cache["block_table"],
+                            cache["lengths"], c_kv_t[:, 0])
+    krope_pages = write_token(cache["krope_pages"], cache["block_table"],
+                              cache["lengths"], k_rope_t[:, 0])
+    c_kv = gather_pages(ckv_pages, cache["block_table"])
+    k_rope = gather_pages(krope_pages, cache["block_table"])
+    y, _lse = _mla_absorbed_attend(
+        p, x, cfg, q_nope, q_rope, c_kv, k_rope, cache["lengths"] + 1, rns)
+    return y, ckv_pages, krope_pages

@@ -253,9 +253,40 @@ def prefill(params, cfg, batch, S_max, *, cache_dtype=jnp.bfloat16):
     return logits_last, new_cache
 
 
+# ------------------------------------------------------- ragged prefill ----
+def prefill_ragged(params, cfg, batch, lengths):
+    """Mixed-length prefill for continuous batching (paged caches).
+
+    ``batch["tokens"]`` [B, Tpad] right-padded (pad id is irrelevant —
+    causal masking keeps pad positions out of every valid position's
+    receptive field, and positionwise ops never mix rows/positions), with
+    per-row prompt ``lengths`` [B].  One compilation serves *every*
+    prompt length <= Tpad.
+
+    Returns (logits at each row's last prompt token [B, V], ys) where
+    ``ys`` are the raw per-layer prefill outputs ([n_periods, B, Tpad,
+    ...] KV planes) for the caller to blit into its paged cache — see
+    ``serve/kv_cache.write_prompt_pages``.
+
+    Decoder-only, causal, no frontend (the continuous engine validates).
+    """
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    h = _embed_tokens(params, cfg, tokens)
+    h = _add_abs_pos(cfg, h)
+    h, ys, _aux = tf.apply_blocks(params["blocks"], h, cfg, mode="prefill")
+    h_last = h[jnp.arange(B), lengths - 1][:, None]        # [B, 1, d]
+    return _logits(params, cfg, h_last)[:, 0], ys
+
+
 # --------------------------------------------------------------- decode ----
-def decode_step(params, cfg, token, cache):
-    """token [B,1] int32 -> (logits [B,V], updated cache)."""
+def decode_step(params, cfg, token, cache, active=None):
+    """token [B,1] int32 -> (logits [B,V], updated cache).
+
+    ``active`` [B] bool (continuous batching): inactive rows keep their
+    ``lengths`` frozen — their compute is garbage the engine discards,
+    and their cache writes land on the paged pool's trash page.
+    """
     h = _embed_tokens(params, cfg, token)
     # absolute-pos archs gather the position embedding at `lengths`
     if cfg.pos_emb == "sinusoidal":
@@ -264,7 +295,8 @@ def decode_step(params, cfg, token, cache):
         h = h + table[lengths][:, None]
     h, ys, _ = tf.apply_blocks(params["blocks"], h, cfg, mode="decode",
                                cache=cache)
-    new_cache = set_cache_lengths(ys, _cache_lengths(cache) + 1)
+    step = 1 if active is None else active.astype(jnp.int32)
+    new_cache = set_cache_lengths(ys, _cache_lengths(cache) + step)
     return _logits(params, cfg, h)[:, 0], new_cache
 
 
@@ -275,6 +307,10 @@ def _cache_lengths(cache):
 
 def _cache_smax(cfg, cache):
     first = cache[next(iter(cache))]
+    if "block_table" in first:      # paged: capacity = max_blocks * page_size
+        for k, v in first.items():
+            if k.endswith("_pages"):
+                return first["block_table"].shape[-1] * v.shape[2]
     for k, v in first.items():
         if k in ("k", "c_kv"):
             return v.shape[2]

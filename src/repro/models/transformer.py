@@ -126,14 +126,28 @@ def _apply_layer(lp, h, cfg, layer_type, mlp_type, *, mode, positions,
     if layer_type in ("attn", "mla"):
         hn = norm(lp["ln1"], h, cfg.norm)
         if mode == "decode":
+            # paged caches (continuous batching) are recognized by their
+            # page-pool keys; the dense layout stays the default
             if layer_type == "attn":
-                y, kc, vc = attn.gqa_decode(
-                    lp["attn"], hn, cfg, cache, rns=rns_a, use_rope=use_rope)
-                new_cache = dict(cache, k=kc, v=vc)
+                if "k_pages" in cache:
+                    y, kp, vp = attn.gqa_decode_paged(
+                        lp["attn"], hn, cfg, cache, rns=rns_a,
+                        use_rope=use_rope)
+                    new_cache = dict(cache, k_pages=kp, v_pages=vp)
+                else:
+                    y, kc, vc = attn.gqa_decode(
+                        lp["attn"], hn, cfg, cache, rns=rns_a,
+                        use_rope=use_rope)
+                    new_cache = dict(cache, k=kc, v=vc)
             else:
-                y, ckv, krope, _lse = attn.mla_decode(
-                    lp["attn"], hn, cfg, cache, rns=rns_a)
-                new_cache = dict(cache, c_kv=ckv, k_rope=krope)
+                if "ckv_pages" in cache:
+                    y, cp, kp = attn.mla_decode_paged(
+                        lp["attn"], hn, cfg, cache, rns=rns_a)
+                    new_cache = dict(cache, ckv_pages=cp, krope_pages=kp)
+                else:
+                    y, ckv, krope, _lse = attn.mla_decode(
+                        lp["attn"], hn, cfg, cache, rns=rns_a)
+                    new_cache = dict(cache, c_kv=ckv, k_rope=krope)
         else:
             T = hn.shape[1]
             if mode == "train":

@@ -1,22 +1,39 @@
-"""Batched serving engine: prefill + greedy decode with per-row stopping.
+"""Serving engines: bucketed batching (legacy) and continuous batching.
 
-Batches are grouped by exact prompt length (bucketed batching); decode is a
-jitted step over the shared cache with per-row lengths, so rows that hit
-EOS simply stop contributing (their token is frozen).
+:class:`Engine` is the original bucketed engine — batches grouped by
+exact prompt length, run to completion.  It remains as the baseline the
+traffic benchmark compares against (and for equal-length workloads where
+its simplicity wins).
 
-When the model config routes projections through RNS, the engine owns the
-execution policy: ``rns_backend`` picks the dispatch backend (reference /
-pallas) and ``rns_defer`` turns on the residue-domain MLP chain — serving
-is forward-only, so deferral is free (no vjp concerns) and drops the
-slow-normalize count per block.  ``rns_op_counts`` reports the structural
-convert/matmul/normalize tallies of one prefill, the serving-side view of
-the paper's one-normalize-per-summation claim.
+:class:`ContinuousEngine` is the production path: a paged KV cache
+(``serve/kv_cache.py``) plus a host-side scheduler
+(``serve/scheduler.py``) admit and evict sequences *mid-decode*.  Mixed
+prompt lengths share
+
+  * ONE jitted prefill (prompts right-padded to ``prompt_pad``; per-row
+    lengths make the padding inert), and
+  * ONE jitted decode step (shapes depend only on the slot count and the
+    page geometry — never on a prompt length),
+
+so serving arbitrary traffic costs zero per-length recompiles.  Finished
+rows free their pages the same step (slot compaction); when the page
+pool runs dry the scheduler preempts the youngest sequence and
+re-prefills it later (recompute preemption — greedy decode makes the
+replay identical).
+
+RNS execution policy: as in the bucketed engine, ``rns_backend`` /
+``rns_defer`` override the model config (serving is forward-only, so
+residue-domain deferral is free), prefill reuses the shared forward
+conversion + deferred-MLP chain, and each ``step()`` reports the
+structural convert/matmul/normalize tallies it scheduled
+(``stats["rns_ops"]``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -24,17 +41,40 @@ import numpy as np
 
 from repro.core import dispatch
 from repro.models import model as M
+from repro.serve import kv_cache as kv
+from repro.serve.scheduler import Request, Scheduler
 
 
 @dataclasses.dataclass
 class ServeConfig:
+    """Engine knobs shared by both engines.
+
+    ``eos_id`` semantics: a *non-negative* value is the vocabulary id that
+    stops a row's generation; the special sentinel ``-1`` means "never
+    stop early" (synthetic-traffic benchmarks, perplexity sweeps).  Any
+    other negative value can silently never match a sampled token, so it
+    is rejected at construction time.
+    """
+
     max_cache: int = 512
     max_new_tokens: int = 32
-    eos_id: int = -1            # -1: never stops early
+    eos_id: int = -1            # -1 sentinel: never stops early
     cache_dtype: str = "float32"
     # RNS execution policy overrides (None: keep the model config's)
     rns_backend: str | None = None   # reference|pallas|pallas_interpret|auto
     rns_defer: bool | None = None    # residue-domain MLP chaining
+    # continuous batching / paged cache (ContinuousEngine only)
+    page_size: int = 16              # tokens per physical page
+    max_seqs: int = 8                # concurrent decode slots
+    n_pages: int | None = None       # physical pool (None: max_seqs full seqs)
+    prompt_pad: int | None = None    # prefill pad length (None: seq capacity)
+
+    def __post_init__(self):
+        if self.eos_id < -1:
+            raise ValueError(
+                f"eos_id={self.eos_id}: vocabulary ids are non-negative; "
+                "use a valid token id, or -1 (the documented sentinel) to "
+                "disable early stopping")
 
 
 def _apply_rns_policy(model_cfg, scfg: ServeConfig):
@@ -50,6 +90,8 @@ def _apply_rns_policy(model_cfg, scfg: ServeConfig):
 
 
 class Engine:
+    """Bucketed batching: equal-length prompts, batch runs to completion."""
+
     def __init__(self, params, model_cfg, scfg: ServeConfig):
         self.params = params
         self.cfg = _apply_rns_policy(model_cfg, scfg)
@@ -90,3 +132,245 @@ class Engine:
             if bool(jnp.all(done)):
                 break
         return np.asarray(jnp.concatenate(out, axis=1))
+
+
+# ------------------------------------------------------------ continuous ---
+def _round_up(n: int, k: int) -> int:
+    return -(-n // k) * k
+
+
+class ContinuousEngine:
+    """In-flight batching over a paged KV cache (decoder-only attn/mla)."""
+
+    def __init__(self, params, model_cfg, scfg: ServeConfig):
+        cfg = _apply_rns_policy(model_cfg, scfg)
+        bad = sorted({t for t in cfg.layer_types if t not in ("attn", "mla")})
+        if bad:
+            raise NotImplementedError(
+                f"continuous batching pages attn/mla caches only; "
+                f"{cfg.arch_id} has layer types {bad}")
+        if cfg.enc_dec or cfg.frontend is not None:
+            raise NotImplementedError(
+                "continuous batching is decoder-only (no enc-dec / frontend)")
+        if not cfg.causal:
+            raise NotImplementedError("continuous batching requires causal "
+                                      "attention (padded prefill relies on it)")
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+
+        bs = scfg.page_size
+        max_blocks = -(-scfg.max_cache // bs)
+        n_pages = scfg.n_pages or 1 + scfg.max_seqs * max_blocks
+        self.pcfg = kv.PagedCacheConfig(
+            page_size=bs, n_pages=n_pages, max_seqs=scfg.max_seqs,
+            max_blocks=max_blocks)
+        self.prompt_pad = _round_up(
+            scfg.prompt_pad or self.pcfg.tokens_per_seq, bs)
+        if self.prompt_pad > self.pcfg.tokens_per_seq:
+            raise ValueError(
+                f"prompt_pad {self.prompt_pad} exceeds per-seq cache "
+                f"capacity {self.pcfg.tokens_per_seq}")
+        self.sched = Scheduler(self.pcfg)
+        self.cache = kv.make_paged_cache(
+            cfg, self.pcfg, dtype=jnp.dtype(scfg.cache_dtype))
+
+        self._prefill = jax.jit(
+            lambda params, tokens, lengths: M.prefill_ragged(
+                params, self.cfg, {"tokens": tokens}, lengths))
+
+        def _decode_fn(params, tok, cache, active):
+            logits, cache = M.decode_step(params, self.cfg, tok, cache,
+                                          active=active)
+            # argmax on device: the host pulls R ints, not R x vocab logits
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+        # donate the cache operand: the page pool is the big allocation,
+        # and both callers immediately rebind self.cache to the result —
+        # without donation every decoded token copies the whole pool
+        self._decode = jax.jit(_decode_fn, donate_argnums=(2,))
+        self._ingest = jax.jit(self._ingest_fn, donate_argnums=(0,))
+        self._tables_dirty = True
+        self._active = np.zeros((self.pcfg.max_seqs,), bool)
+
+        self._next_rid = 0
+        self._step_idx = 0
+        self.results: dict[int, np.ndarray] = {}
+        self.latencies: dict[int, float] = {}    # submit -> finish, seconds
+        self._op_cache: dict[str, dispatch.OpCounts] = {}
+
+    # ----------------------------------------------------------- ingest ---
+    def _ingest_fn(self, cache, ys, block_row):
+        """Blit one prefilled request's KV planes into its pages."""
+        new = dict(cache)
+        for j in range(self.cfg.period):
+            lt = self.cfg.layer_types[j]
+            z = dict(cache[f"l{j}"])
+            y = ys[f"l{j}"]
+            if lt == "attn":
+                k, v = y
+                z["k_pages"] = kv.write_prompt_pages(z["k_pages"], block_row, k)
+                z["v_pages"] = kv.write_prompt_pages(z["v_pages"], block_row, v)
+            else:  # mla
+                ckv, krope = y
+                z["ckv_pages"] = kv.write_prompt_pages(
+                    z["ckv_pages"], block_row, ckv)
+                z["krope_pages"] = kv.write_prompt_pages(
+                    z["krope_pages"], block_row, krope)
+            new[f"l{j}"] = z
+        return new
+
+    # ------------------------------------------------------------ intake --
+    def submit(self, prompt: np.ndarray, max_new: int | None = None) -> int:
+        """Queue one request; returns its request id."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        max_new = max_new or self.scfg.max_new_tokens
+        if len(prompt) > self.prompt_pad:
+            raise ValueError(
+                f"prompt length {len(prompt)} > prompt_pad {self.prompt_pad}; "
+                "raise ServeConfig.prompt_pad (chunked prefill is future work)")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.sched.submit(Request(rid=rid, tokens=prompt, max_new=max_new,
+                                  submit_time=time.perf_counter()))
+        return rid
+
+    # ----------------------------------------------------------- stepping --
+    def _do_prefill(self, seq):
+        T = len(seq.req.tokens)
+        tokens = np.zeros((1, self.prompt_pad), np.int32)
+        tokens[0, :T] = seq.req.tokens
+        logits, ys = self._prefill(self.params, jnp.asarray(tokens),
+                                   jnp.asarray([T], jnp.int32))
+        tok0 = int(jnp.argmax(logits, axis=-1)[0])
+        nbp = self.prompt_pad // self.pcfg.page_size
+        block_row = self.sched.block_row(seq, nbp)
+        self.cache = self._ingest(self.cache, ys, jnp.asarray(block_row))
+        seq.emitted = [tok0]
+        seq.last_token = tok0
+        # length stays at T: the decode step writes tok0's KV at position T
+
+    def _finish(self, seq):
+        self.results[seq.rid] = np.asarray(seq.emitted, np.int32)
+        self.latencies[seq.rid] = time.perf_counter() - seq.req.submit_time
+        self.sched.complete(seq)
+        self._tables_dirty = True
+
+    def _rns_ops(self, n_prefills: int) -> dispatch.OpCounts:
+        """Structural convert/matmul/normalize counts for this step."""
+        if self.cfg.rns is None:
+            return dispatch.OpCounts()
+        if "decode" not in self._op_cache:
+            bt, lengths, active, last = self.sched.tables()
+            cache = kv.set_tables(self.cache, bt, lengths)
+            self._op_cache["decode"] = dispatch.trace_op_counts(
+                lambda p, t: M.decode_step(p, self.cfg, t, cache,
+                                           active=jnp.asarray(active)),
+                self.params, jnp.zeros((self.pcfg.max_seqs, 1), jnp.int32))
+            self._op_cache["prefill"] = dispatch.trace_op_counts(
+                lambda p, t: M.prefill_ragged(
+                    p, self.cfg, {"tokens": t},
+                    jnp.ones((1,), jnp.int32)),
+                self.params, jnp.zeros((1, self.prompt_pad), jnp.int32))
+        d, pf = self._op_cache["decode"], self._op_cache["prefill"]
+        return dispatch.OpCounts(
+            converts=d.converts + n_prefills * pf.converts,
+            matmuls=d.matmuls + n_prefills * pf.matmuls,
+            normalizes=d.normalizes + n_prefills * pf.normalizes)
+
+    def step(self) -> dict:
+        """One scheduler step: admit/evict, prefill admits, decode all.
+
+        Returns a stats dict: admitted/preempted/finished rids, tokens
+        generated, page utilization, and the structural ``rns_ops``.
+        """
+        t0 = time.perf_counter()
+        plan = self.sched.schedule()
+        if plan.admitted or plan.preempted or plan.grew:
+            self._tables_dirty = True
+        for seq in plan.admitted:
+            self._do_prefill(seq)
+        # admission already produced one token per new row: those rows may
+        # already be done (max_new=1 or eos on the first token)
+        finished = []
+        for seq in list(self.sched.running.values()):
+            if seq.emitted and (
+                    len(seq.emitted) >= seq.req.max_new
+                    or seq.emitted[-1] == self.scfg.eos_id):
+                finished.append(seq.rid)
+                self._finish(seq)
+
+        n_tokens = 0
+        if self.sched.running:
+            bt, lengths, active, last = self.sched.tables()
+            if self._tables_dirty or not np.array_equal(active, self._active):
+                # topology changed: push fresh tables/lengths; otherwise the
+                # decode step's own active-masked length bump already matches
+                # the host counters and the upload is skipped
+                self.cache = kv.set_tables(self.cache, bt, lengths)
+                self._active = active
+                self._tables_dirty = False
+            nxt, self.cache = self._decode(
+                self.params, jnp.asarray(last[:, None]), self.cache,
+                jnp.asarray(self._active))
+            nxt = np.asarray(nxt, np.int32)
+            for seq in list(self.sched.running.values()):
+                tok = int(nxt[seq.slot])
+                seq.emitted.append(tok)
+                seq.last_token = tok
+                seq.length += 1
+                n_tokens += 1
+                if (len(seq.emitted) >= seq.req.max_new
+                        or tok == self.scfg.eos_id
+                        or seq.length + 1 > self.pcfg.tokens_per_seq):
+                    finished.append(seq.rid)
+                    self._finish(seq)
+        self._step_idx += 1
+        return {
+            "step": self._step_idx,
+            "admitted": [s.rid for s in plan.admitted],
+            "preempted": plan.preempted,
+            "finished": finished,
+            "active": len(self.sched.running),
+            "waiting": len(self.sched.waiting),
+            "new_tokens": n_tokens,
+            "page_utilization": self.sched.alloc.utilization,
+            "rns_ops": self._rns_ops(len(plan.admitted)),
+            "step_time_s": time.perf_counter() - t0,
+        }
+
+    def run(self, prompts=None, max_new: int | None = None):
+        """Serve until drained.  Returns (results {rid: tokens}, stats).
+
+        ``prompts``: optional list of 1-D prompt arrays to submit first.
+        Delivered results are *drained* from the engine (a long-lived
+        engine does not accumulate them); latency percentiles cover
+        submit -> finish, queue wait included.  Streaming users driving
+        ``submit()``/``step()`` directly read — and should pop —
+        ``engine.results`` / ``engine.latencies`` themselves.
+        """
+        rids = [self.submit(p, max_new) for p in (prompts or [])]
+        t0 = time.perf_counter()
+        steps = []
+        while self.sched.has_work:
+            steps.append(self.step())
+        dt = time.perf_counter() - t0
+        done = rids if rids else list(self.results)
+        out = {r: self.results.pop(r) for r in done if r in self.results}
+        lat = [self.latencies.pop(r) for r in done if r in self.latencies]
+        total = sum(len(v) for v in out.values())
+        stats = {
+            "n_requests": len(done),
+            "n_steps": len(steps),
+            "total_new_tokens": total,
+            "wall_s": dt,
+            "tokens_per_s": total / dt if dt > 0 else 0.0,
+            "latency_p50_s": float(np.percentile(lat, 50)) if lat else 0.0,
+            "latency_p99_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "mean_page_utilization": float(
+                np.mean([s["page_utilization"] for s in steps])) if steps
+            else 0.0,
+            "n_preemptions": sum(len(s["preempted"]) for s in steps),
+            "steps": steps,
+        }
+        return out, stats

@@ -1,0 +1,224 @@
+"""Paged KV cache: fixed-size pages + per-sequence block tables.
+
+The bucketed engine's dense cache couples cache capacity to the *batch*:
+every row owns ``[S_max]`` slots whether it uses 7 of them or 120.  The
+paged cache decouples the two (the vLLM/TensorRT-LLM in-flight-batching
+layout): one physical pool of ``n_pages`` pages of ``page_size`` tokens
+each, and per-sequence **block tables** mapping logical block ``t //
+page_size`` to a physical page.  Mixed-length sequences then share one
+jitted decode step — the step's shapes depend only on ``(max_seqs,
+max_blocks, page_size)``, never on any prompt length — and a finished
+row's pages return to the pool immediately.
+
+Layout per attention layer (leading ``n_periods`` dim added by the scan
+stacking, exactly like the dense cache):
+
+  * ``attn``: ``k_pages`` / ``v_pages``  ``[n_pages, page_size, Hk, D]``
+  * ``mla``:  ``ckv_pages`` ``[n_pages, page_size, r]``,
+              ``krope_pages`` ``[n_pages, page_size, dr]``
+  * both:     ``block_table`` ``[max_seqs, max_blocks]`` int32,
+              ``lengths`` ``[max_seqs]`` int32
+
+Physical page 0 is the **trash page**: the block-table entries of empty
+slots (and of logical blocks past a sequence's end) point at it, so every
+gather/scatter stays in bounds with no per-row branching — reads through
+it are masked by ``lengths`` and writes to it are discarded garbage.
+
+The device-side helpers here (:func:`gather_pages`, :func:`write_token`,
+:func:`write_prompt_pages`) are pure jnp and are consumed by
+``models/attention.py``; the host-side :class:`PageAllocator` free list
+is consumed by ``serve/scheduler.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "TRASH_PAGE",
+    "PagedCacheConfig",
+    "PageAllocator",
+    "make_paged_cache",
+    "set_tables",
+    "gather_pages",
+    "write_token",
+    "write_prompt_pages",
+]
+
+#: physical page reserved as the write-target / read-source of inactive
+#: rows; never handed out by the allocator, never read unmasked.
+TRASH_PAGE = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Static shape of the paged pool.
+
+    ``max_blocks * page_size`` is the per-sequence capacity (the paged
+    analogue of the dense cache's ``S_max``); ``n_pages`` bounds the
+    *total* tokens resident across all sequences — the knob that trades
+    memory for concurrency.  Page 0 is reserved (trash), so the usable
+    pool is ``n_pages - 1`` pages.
+    """
+
+    page_size: int = 16
+    n_pages: int = 129          # 128 usable + trash
+    max_seqs: int = 8           # decode slots (R)
+    max_blocks: int = 8         # logical blocks per sequence
+
+    def __post_init__(self):
+        if self.page_size < 1 or self.n_pages < 2:
+            raise ValueError("need page_size >= 1 and n_pages >= 2")
+        if self.n_pages - 1 < self.max_blocks:
+            raise ValueError(
+                f"pool of {self.n_pages - 1} usable pages cannot hold even "
+                f"one full sequence ({self.max_blocks} blocks)")
+
+    @property
+    def tokens_per_seq(self) -> int:
+        return self.page_size * self.max_blocks
+
+
+class PageAllocator:
+    """Host-side free list over physical pages 1..n_pages-1 (0 = trash)."""
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        # LIFO reuse keeps the working set of hot pages small
+        self._free = list(range(n_pages - 1, TRASH_PAGE, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        usable = self.n_pages - 1
+        return (usable - len(self._free)) / max(usable, 1)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """Pop ``n`` pages, or None (and no change) if not enough."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for pg in pages:
+            if not (TRASH_PAGE < pg < self.n_pages):
+                raise ValueError(f"bad page id {pg}")
+            if pg in self._free:
+                raise ValueError(f"double free of page {pg}")
+            self._free.append(pg)
+
+
+# ------------------------------------------------------- device pytrees ---
+def _layer_pages(cfg, lt: str, pcfg: PagedCacheConfig, dtype):
+    P, bs = pcfg.n_pages, pcfg.page_size
+    if lt == "attn":
+        kv = (P, bs, cfg.n_kv_heads, cfg.d_head)
+        return {"k_pages": jnp.zeros(kv, dtype), "v_pages": jnp.zeros(kv, dtype)}
+    if lt == "mla":
+        m = cfg.mla
+        return {
+            "ckv_pages": jnp.zeros((P, bs, m.kv_lora_rank), dtype),
+            "krope_pages": jnp.zeros((P, bs, m.qk_rope_dim), dtype),
+        }
+    raise NotImplementedError(
+        f"paged serving supports attn/mla layers only, got {lt!r} "
+        "(SSM states are fixed-size per sequence — nothing to page)")
+
+
+def make_paged_cache(cfg, pcfg: PagedCacheConfig, *, dtype=jnp.bfloat16):
+    """Zero paged decode cache, periods-stacked like ``model.make_cache``."""
+    p = cfg.period
+    n_periods = cfg.n_layers // p
+
+    def one_period():
+        per = {}
+        for j in range(p):
+            c = _layer_pages(cfg, cfg.layer_types[j], pcfg, dtype)
+            c["block_table"] = jnp.zeros(
+                (pcfg.max_seqs, pcfg.max_blocks), jnp.int32)
+            c["lengths"] = jnp.zeros((pcfg.max_seqs,), jnp.int32)
+            per[f"l{j}"] = c
+        return per
+
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (n_periods,) + x.shape),
+        one_period())
+
+
+def set_tables(cache, block_tables, lengths):
+    """Overwrite every layer's block table + lengths from host arrays.
+
+    The scheduler owns both as numpy state; the engine pushes them into
+    the device cache right before each decode step (tiny transfers — the
+    page pool itself never leaves the device).
+    """
+    bt = jnp.asarray(block_tables, jnp.int32)
+    ln = jnp.asarray(lengths, jnp.int32)
+
+    def walk(d):
+        out = {}
+        for k, v in d.items():
+            if k == "block_table":
+                out[k] = jnp.broadcast_to(bt[None], (v.shape[0],) + bt.shape)
+            elif k == "lengths":
+                out[k] = jnp.broadcast_to(ln[None], (v.shape[0],) + ln.shape)
+            elif isinstance(v, dict):
+                out[k] = walk(v)
+            else:
+                out[k] = v
+        return out
+
+    return walk(cache)
+
+
+# ------------------------------------------------------ gather / scatter --
+def gather_pages(pages, block_table):
+    """[P, bs, ...] pages + [R, nb] table -> dense [R, nb*bs, ...] view.
+
+    Logical token position t of row r lives at
+    ``pages[block_table[r, t // bs], t % bs]``; the gather lays rows out
+    contiguously so downstream attention is *identical* to the dense-cache
+    path (bit for bit — asserted in tests/test_kv_cache.py).
+    """
+    R = block_table.shape[0]
+    g = pages[block_table]                      # [R, nb, bs, ...]
+    return g.reshape((R, -1) + pages.shape[2:])
+
+
+def write_token(pages, block_table, lengths, vals):
+    """Scatter one new token per row at its current length.
+
+    ``vals`` [R, ...]: row r goes to page ``block_table[r, lengths[r] //
+    bs]`` offset ``lengths[r] % bs``.  Rows whose tables point at the
+    trash page (inactive slots) write garbage there harmlessly — and a
+    row somehow past capacity (block index >= nb) is *redirected* to the
+    trash page rather than clipped onto a real page, so a scheduler bug
+    can never corrupt a live token.
+    """
+    bs = pages.shape[1]
+    blk = lengths // bs
+    page = jnp.take_along_axis(block_table, blk[:, None], axis=1,
+                               mode="fill", fill_value=TRASH_PAGE)[:, 0]
+    return pages.at[page, lengths % bs].set(vals.astype(pages.dtype))
+
+
+def write_prompt_pages(pages, block_row, planes):
+    """Blit one prefilled prompt into its pages (periods-stacked).
+
+    ``pages`` [n_periods, P, bs, ...]; ``block_row`` [nbp] physical page
+    per logical block (trash for blocks past the prompt); ``planes``
+    [n_periods, 1, Tpad, ...] with ``Tpad == nbp * bs``.  Whole pages are
+    overwritten — positions past the prompt length hold garbage that
+    ``lengths`` masks at read time.
+    """
+    npr, P, bs = pages.shape[:3]
+    nbp = block_row.shape[0]
+    v = planes.reshape((npr, nbp, bs) + planes.shape[3:])
+    return pages.at[:, block_row].set(v.astype(pages.dtype))

@@ -1,0 +1,197 @@
+"""Continuous-batching engine: exactness, compile stability, policy.
+
+The load-bearing claims, executed:
+  * mixed-length traffic decodes through ONE jitted step (zero
+    per-length recompiles) and yields tokens identical to per-request
+    solo runs through the bucketed engine;
+  * eviction + readmission (recompute preemption) preserves per-row
+    results;
+  * finished rows free their pages the same step;
+  * the RNS execution policy threads through (per-step structural op
+    counts);
+  * the eos_id sentinel is validated.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
+
+
+def _params(cfg, seed=0):
+    return M.init_model(jax.random.PRNGKey(seed), cfg)[0]
+
+
+def _solo(params, cfg, prompt, max_new, max_cache):
+    eng = Engine(params, cfg, ServeConfig(max_cache=max_cache,
+                                          max_new_tokens=max_new))
+    return eng.generate(prompt[None])[0].tolist()
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = get_config("smollm-135m", smoke=True)
+    return cfg, _params(cfg)
+
+
+def test_mixed_lengths_match_solo_one_compile(smollm):
+    cfg, params = smollm
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab, (L,)).astype(np.int32)
+               for L in (7, 33, 120)]
+    max_new, S = 8, 160
+    eng = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=S, max_new_tokens=max_new, page_size=16, max_seqs=4))
+    res, stats = eng.run(prompts)
+    for i, p in enumerate(prompts):
+        assert res[i].tolist() == _solo(params, cfg, p, max_new, S), i
+    # zero per-length recompiles: one decode cell, one prefill cell
+    assert eng._decode._cache_size() == 1
+    assert eng._prefill._cache_size() == 1
+    assert stats["n_preemptions"] == 0
+    assert stats["total_new_tokens"] == 3 * max_new
+
+
+def test_mla_paged_matches_solo():
+    cfg = dataclasses.replace(get_config("deepseek-v2-236b", smoke=True),
+                              mlp_types=("dense",) * 4, moe=None)
+    params = _params(cfg, seed=1)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, cfg.vocab, (L,)).astype(np.int32)
+               for L in (5, 21)]
+    eng = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=64, max_new_tokens=6, page_size=8, max_seqs=2))
+    res, _ = eng.run(prompts)
+    for i, p in enumerate(prompts):
+        assert res[i].tolist() == _solo(params, cfg, p, 6, 64), i
+
+
+def test_eviction_readmission_preserves_rows(smollm):
+    """Tiny pool: growth forces LIFO preemption; recompute-from-prompt
+    re-decode is token-identical to an uninterrupted solo run."""
+    cfg, params = smollm
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, cfg.vocab, (L,)).astype(np.int32)
+               for L in (30, 28, 25, 20)]
+    max_new = 20
+    eng = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=64, max_new_tokens=max_new, page_size=16, max_seqs=4,
+        n_pages=10))                        # 9 usable pages for 4 rows
+    res, stats = eng.run(prompts)
+    assert stats["n_preemptions"] > 0       # the pool really was too small
+    for i, p in enumerate(prompts):
+        assert res[i].tolist() == _solo(params, cfg, p, max_new, 64), i
+
+
+def test_slot_compaction_frees_pages(smollm):
+    cfg, params = smollm
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab, (8,)).astype(np.int32),
+               rng.integers(1, cfg.vocab, (8,)).astype(np.int32)]
+    eng = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=32, max_new_tokens=3, page_size=16, max_seqs=2))
+    eng.submit(prompts[0], max_new=1)       # finishes at its prefill
+    eng.submit(prompts[1], max_new=3)
+    s1 = eng.step()
+    assert 0 in s1["finished"]              # max_new=1: done without decode
+    assert eng.sched.alloc.utilization < 0.5   # its pages came back
+    while eng.sched.has_work:
+        eng.step()
+    assert eng.sched.alloc.utilization == 0.0  # everything freed at drain
+    assert len(eng.results[1]) == 3
+
+
+def test_queueing_beyond_slots(smollm):
+    """More requests than slots: later arrivals wait, all complete."""
+    cfg, params = smollm
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(1, cfg.vocab, (5 + i,)).astype(np.int32)
+               for i in range(5)]
+    eng = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=32, max_new_tokens=4, page_size=16, max_seqs=2))
+    res, stats = eng.run(prompts)
+    assert sorted(res) == [0, 1, 2, 3, 4]
+    assert all(len(v) == 4 for v in res.values())
+    assert max(s["active"] for s in stats["steps"]) <= 2
+
+
+def test_rns_policy_and_per_step_op_counts():
+    from repro.core.rns_matmul import RnsDotConfig
+
+    cfg = dataclasses.replace(get_config("smollm-135m", smoke=True),
+                              rns=RnsDotConfig(profile="rns9", qx=8, qw=8),
+                              rns_targets="mlp")
+    params = _params(cfg)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, cfg.vocab, (L,)).astype(np.int32)
+               for L in (5, 12)]
+    per_step = {}
+    for defer in (False, True):
+        eng = ContinuousEngine(params, cfg, ServeConfig(
+            max_cache=32, max_new_tokens=3, page_size=16, max_seqs=2,
+            rns_defer=defer))
+        assert eng.cfg.rns.defer is defer   # the policy override landed
+        _, stats = eng.run(prompts)
+        first, last = stats["steps"][0], stats["steps"][-1]
+        # admission step counts prefill + decode; later steps decode only
+        assert first["rns_ops"].matmuls > last["rns_ops"].matmuls > 0
+        per_step[defer] = last["rns_ops"]
+    # deferred MLP: fewer slow normalizations for the same matmuls
+    assert per_step[True].matmuls == per_step[False].matmuls
+    assert per_step[True].normalizes < per_step[False].normalizes
+
+
+def test_eos_id_validation_and_sentinel(smollm):
+    cfg, params = smollm
+    with pytest.raises(ValueError, match="eos_id"):
+        ServeConfig(eos_id=-5)
+    # -1 sentinel: never stops early -> exactly max_new tokens
+    rng = np.random.default_rng(6)
+    p = rng.integers(1, cfg.vocab, (9,)).astype(np.int32)
+    eng = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=32, max_new_tokens=5, page_size=16, max_seqs=1, eos_id=-1))
+    res, _ = eng.run([p])
+    assert len(res[0]) == 5
+
+
+def test_eos_id_stops_row(smollm):
+    cfg, params = smollm
+    rng = np.random.default_rng(7)
+    p = rng.integers(1, cfg.vocab, (9,)).astype(np.int32)
+    base = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=32, max_new_tokens=8, page_size=16, max_seqs=1))
+    full, _ = base.run([p])
+    eos = int(full[0][2])                   # aim for the 3rd token
+    eng = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=32, max_new_tokens=8, page_size=16, max_seqs=1,
+        eos_id=eos))
+    res, _ = eng.run([p])
+    toks = full[0].tolist()
+    want = toks[: toks.index(eos) + 1]      # up to the FIRST eos occurrence
+    assert res[0].tolist() == want
+
+
+def test_unsupported_archs_rejected():
+    scfg = ServeConfig(max_cache=32)
+    rwkv = get_config("rwkv6-7b", smoke=True)
+    with pytest.raises(NotImplementedError, match="attn/mla"):
+        ContinuousEngine({}, rwkv, scfg)
+    whisper = get_config("whisper-medium", smoke=True)
+    with pytest.raises(NotImplementedError, match="decoder-only"):
+        ContinuousEngine({}, whisper, scfg)
+
+
+def test_oversized_requests_rejected(smollm):
+    cfg, params = smollm
+    eng = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=32, max_new_tokens=8, page_size=16, max_seqs=2))
+    with pytest.raises(ValueError, match="prompt"):
+        eng.submit(np.ones((33,), np.int32))        # > prompt_pad
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit(np.ones((30,), np.int32), max_new=10)  # 40 > 32 tokens
