@@ -1,0 +1,158 @@
+"""Digit-sharded execution benchmark: 1 vs 8 virtual devices.
+
+Measures the PR-3 tentpole end to end: the residue-channel datapath
+(convert -> digit-sliced matmuls -> one MRC normalize) and the continuous
+serving engine, each run on 1 and on 8 virtual CPU devices.  Device
+counts need their own XLA_FLAGS before jax initializes, so each
+measurement runs in a fresh subprocess of this module (``--worker``);
+the parent merges the rows into ``BENCH_dist.json`` via
+``benchmarks/run.py --dist-json``.
+
+Read the numbers for PLUMBING, not speedups: the 8 "devices" are slices
+of one host CPU, so sharding adds partition bookkeeping without adding
+FLOP/s — virtual-device rows are expected at parity or below the
+single-device row.  What the bench pins is the *structure* the paper
+promises: the residue segment compiles to zero cross-device collectives
+(also asserted in tests/test_distributed_rns.py), so on a real mesh the
+digit axis scales like the independent channels it is, and the one
+normalize-time gather is the only communication.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+DEVICE_COUNTS = (1, 8)
+PROFILE = "rns16"              # 16 digits: 2 per device on the 8-wide axis
+
+
+def _bench_chain(report, n_dev: int):
+    """Digit-sharded 3-linear residue chain, time per jitted call."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.tensor import rt_decode, rt_encode, rt_matmul
+    from repro.distributed.sharding import use_digit_sharding
+    from repro.launch.mesh import make_digit_mesh
+
+    mesh = make_digit_mesh()            # every device on the "model" axis
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 512)), jnp.float32)
+    ws = [jnp.asarray(rng.standard_normal((512, 512)) / 16, jnp.float32)
+          for _ in range(3)]
+
+    def chain(x, ws):
+        ht = rt_encode(x, PROFILE, bits=8)
+        for w in ws:
+            ht = rt_matmul(ht, rt_encode(w, PROFILE, bits=8))
+        return rt_decode(ht)
+
+    with use_digit_sharding(mesh):
+        jf = jax.jit(chain)
+        jf(x, ws).block_until_ready()   # compile + warm
+        n = 20
+        t0 = time.perf_counter()
+        for _ in range(n):
+            y = jf(x, ws)
+        y.block_until_ready()
+        us = (time.perf_counter() - t0) / n * 1e6
+    report(f"dist_chain_{n_dev}dev", us,
+           f"3-linear {PROFILE} chain [8,512]x[512,512], digit axis over "
+           f"{n_dev} device(s)")
+
+
+def _bench_serve(report, n_dev: int):
+    """Continuous engine, digit-sharded decode: warm tokens/sec."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.configs.base import get_config
+    from repro.core.rns_matmul import RnsDotConfig
+    from repro.models import model as M
+    from repro.launch.mesh import make_digit_mesh
+    from repro.serve.engine import ContinuousEngine, ServeConfig
+
+    cfg = dataclasses.replace(
+        get_config("smollm-135m", smoke=True),
+        rns=RnsDotConfig(profile=PROFILE, qx=8, qw=8), rns_targets="mlp")
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(1)
+    lens = (7, 33, 120)
+    prompts = [rng.integers(1, cfg.vocab, (lens[i % 3],)).astype(np.int32)
+               for i in range(6)]
+    engine = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=160, max_new_tokens=16, page_size=16, max_seqs=6,
+        mesh=make_digit_mesh()))
+    engine.run(prompts)                 # compile + warm round
+    _, stats = engine.run(prompts)
+    # us_per_call = microseconds PER TOKEN, so the row is comparable to
+    # every other per-call latency in the merged BENCH artifacts
+    us_per_tok = stats["wall_s"] / max(stats["total_new_tokens"], 1) * 1e6
+    report(f"dist_serve_{n_dev}dev", us_per_tok,
+           f"tok_s={stats['tokens_per_s']:.1f} "
+           f"page_util={stats['mean_page_utilization']:.2f} "
+           f"digit_axis={n_dev}")
+
+
+def worker(n_dev: int) -> None:
+    rows = []
+
+    def report(name, us, derived=""):
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+
+    _bench_chain(report, n_dev)
+    _bench_serve(report, n_dev)
+    print("RESULT:" + json.dumps(rows), flush=True)
+
+
+def run_all(report) -> None:
+    """Spawn one worker per device count; forward their rows."""
+    from repro.launch.mesh import virtual_cpu_env
+
+    for n in DEVICE_COUNTS:
+        res = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_dist", "--worker",
+             "--devices", str(n)],
+            env=virtual_cpu_env(n), capture_output=True, text=True,
+            timeout=1200)
+        if res.returncode != 0:
+            raise RuntimeError(
+                f"bench_dist worker ({n} devices) failed:\n"
+                + res.stderr[-2000:])
+        line = [l for l in res.stdout.splitlines()
+                if l.startswith("RESULT:")][0]
+        for row in json.loads(line[len("RESULT:"):]):
+            report(row["name"], row["us_per_call"], row["derived"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--worker", action="store_true")
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args()
+    if args.worker:
+        worker(args.devices)
+        return
+    rows = []
+
+    def report(name, us, derived=""):
+        rows.append({"name": name, "us_per_call": us, "derived": derived})
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    run_all(report)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,10 @@
 # ``--serve-json PATH`` runs the mixed-length synthetic-traffic benchmark
 # (benchmarks/bench_serve.py) and writes BENCH_serve.json — tokens/sec,
 # p50/p99 latency, page utilization for continuous vs bucketed serving.
+# ``--dist-json PATH`` runs the digit-sharded benchmark
+# (benchmarks/bench_dist.py; subprocesses with 1 and 8 virtual devices)
+# and writes BENCH_dist.json — residue-chain latency and serve tokens/sec
+# per device count.
 from __future__ import annotations
 
 import argparse
@@ -18,11 +22,16 @@ def main() -> None:
     ap.add_argument("--serve-json", default=None, metavar="PATH",
                     help="run the serve traffic benchmark, write its rows "
                          "as JSON (e.g. BENCH_serve.json)")
+    ap.add_argument("--dist-json", default=None, metavar="PATH",
+                    help="run the digit-sharded 1-vs-8-virtual-device "
+                         "benchmark, write its rows as JSON "
+                         "(e.g. BENCH_dist.json)")
     ap.add_argument("--skip-core", action="store_true",
                     help="skip the core benches (serve-only run)")
     args = ap.parse_args()
     rows = []
     serve_rows = []
+    dist_rows = []
     sink = rows
 
     def report(name: str, us: float, derived: str = ""):
@@ -40,6 +49,13 @@ def main() -> None:
 
         sink = serve_rows
         bench_serve.run_all(report)
+        sink = rows
+
+    if args.dist_json:
+        from benchmarks import bench_dist
+
+        sink = dist_rows
+        bench_dist.run_all(report)
         sink = rows
 
     # roofline summary from the newest dry-run artifacts
@@ -68,6 +84,10 @@ def main() -> None:
         with open(args.serve_json, "w") as f:
             json.dump(serve_rows, f, indent=2)
         print(f"wrote {args.serve_json}", flush=True)
+    if args.dist_json:
+        with open(args.dist_json, "w") as f:
+            json.dump(dist_rows, f, indent=2)
+        print(f"wrote {args.dist_json}", flush=True)
 
 
 if __name__ == "__main__":

@@ -90,3 +90,35 @@ print(f"\ncontinuous serving, prompt lengths (5, 17, 40): "
       f"{stats['mean_page_utilization']:.2f}, decode compiles = "
       f"{engine._decode._cache_size()}")
 print("tokens:", {r: t.tolist() for r, t in sorted(results.items())})
+
+# 7. Residue channels as a mesh axis: digits are carry-free and mutually
+#    independent, so the SAME chain runs sharded over a device mesh —
+#    each device owns a group of moduli, convert/matmul are local, only
+#    the decode's MRC gathers digits.  On this process's single device
+#    the mesh is 1-wide (nothing to partition, identical bits); run with
+#    XLA_FLAGS=--xla_force_host_platform_device_count=8 to watch rns16
+#    split 2 digits per device (docs/distributed.md, BENCH_dist.json).
+from repro.distributed.sharding import use_digit_sharding
+from repro.launch.mesh import make_digit_mesh
+
+
+def chain_sharded(x, ws):   # fresh def: jax's trace cache is per-function
+    ht = rt_encode(x, "rns16", bits=8)
+    for w in ws:
+        ht = rt_matmul(ht, rt_encode(w, "rns16", bits=8))
+    return rt_decode(ht)
+
+
+def chain_ref(x, ws):
+    ht = rt_encode(x, "rns16", bits=8)
+    for w in ws:
+        ht = rt_matmul(ht, rt_encode(w, "rns16", bits=8))
+    return rt_decode(ht)
+
+
+mesh = make_digit_mesh()        # every local device on the "model" axis
+with use_digit_sharding(mesh):
+    y_sh = jax.jit(chain_sharded)(xc, tuple(ws))
+y_ref = jax.jit(chain_ref)(xc, tuple(ws))
+print(f"\ndigit-sharded chain over {mesh.shape['model']} device(s): "
+      f"bit-identical to single-device = {bool(jnp.all(y_sh == y_ref))}")

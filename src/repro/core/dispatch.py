@@ -19,16 +19,31 @@ It also owns the op counters behind the deferred-normalization claim:
 ``count_ops()`` tallies primitive invocations at trace time, so tests and
 benchmarks can assert "one normalize per chain" structurally instead of
 timing it.
+
+Mesh-aware path (residue-channel sharding): when a
+``distributed.sharding.use_digit_sharding`` context is installed and the
+profile's digit count divides the digit mesh axis, the three primitives
+route through per-device ``shard_map`` bodies instead.  Each device owns
+``K / n`` moduli; ``convert`` and ``matmul`` then compile to strictly
+local work — the HLO of a residue segment contains ZERO cross-device
+collectives (asserted in tests/test_distributed_rns.py) because RNS
+digits never exchange carries.  Digits meet exactly once, inside
+``normalize``: its body all-gathers the digit axis and runs the MRC
+replicated.  The sharded bodies use the reference math (fusing the Pallas
+kernels into per-device digit slices needs per-slice constant tables and
+is future work), so an explicit ``backend=`` still wins only off-mesh.
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import threading
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "BACKENDS",
@@ -134,6 +149,146 @@ def trace_op_counts(fn, *args, **kwargs) -> OpCounts:
     return c
 
 
+# ------------------------------------------------- digit-sharded bodies ----
+def _digit_ctx(profile):
+    """The installed DigitSharding if it actually splits this profile."""
+    from repro.core.moduli import get_profile
+    from repro.distributed.sharding import digit_sharding
+
+    ds = digit_sharding()
+    if ds is None:
+        return None, None
+    p = get_profile(profile) if isinstance(profile, str) else profile
+    return (ds, p) if ds.shards(p.n_digits) else (None, p)
+
+
+def _moduli_arr(p) -> jax.Array:
+    return jnp.asarray(np.asarray(p.moduli, np.int32))
+
+
+def _jit_shard_map(f, ds, in_specs, out_specs):
+    from jax.experimental.shard_map import shard_map
+
+    mapped = shard_map(f, ds.mesh, in_specs=in_specs, out_specs=out_specs,
+                       check_rep=False, auto=ds.auto_axes())
+    # shard_map with auto (GSPMD-managed) axes only exists under jit; the
+    # wrapper keeps eager call sites working and inlines under outer jits
+    return jax.jit(mapped)
+
+
+# The builders below are lru_cached on their static parameters (the
+# frozen DigitSharding — Mesh is hashable — and the frozen RnsProfile,
+# so unregistered profile objects work exactly as on the unsharded
+# paths): a fresh closure per call would defeat jit's function-identity
+# cache and recompile every eager invocation.
+
+@functools.lru_cache(maxsize=512)
+def _sharded_convert_fn(ds, p, bits, xndim, sndim):
+    """Forward conversion, one digit group per device, zero collectives.
+
+    The local moduli arrive as a digit-sharded operand, so each device
+    quantizes ``x`` (replicated over the digit axis — DP axes stay auto)
+    and reduces by ITS moduli only.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.quantize import quantize_with_scale
+
+    def body(xb, sb, m_local):
+        q = quantize_with_scale(xb, sb, bits)
+        mv = m_local.reshape((-1,) + (1,) * q.ndim)
+        res = jnp.remainder(q[None], mv)
+        return res.astype(jnp.int8) if p.int8_safe else res
+
+    return _jit_shard_map(
+        body, ds,
+        (P(*([None] * xndim)), P(*([None] * sndim)), P(ds.axis)),
+        ds.digit_spec(xndim + 1))
+
+
+def _sharded_convert(p, x, scale, bits, ds):
+    x = jnp.asarray(x)
+    scale = jnp.asarray(scale, jnp.float32)
+    fn = _sharded_convert_fn(ds, p, bits, x.ndim, scale.ndim)
+    return fn(x, scale, _moduli_arr(p))
+
+
+@functools.lru_cache(maxsize=512)
+def _sharded_matmul_fn(ds, p, andim, bndim):
+    """Digit-sliced modular matmul, each device's digit group local.
+
+    The body is ``rns_matmul_res``'s lazy-reduction schedule
+    (``core/rns_matmul.modular_matmul`` — ONE source of truth for the
+    overflow-critical chunking; the bound depends only on max(moduli),
+    identical for every shard) with the moduli as a sharded operand.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.rns_matmul import modular_matmul
+
+    chunk = p.lazy_chunk
+
+    def body(a, b, m_local):
+        mv = m_local.reshape((-1,) + (1,) * (a.ndim - 1))
+        return modular_matmul(a, b, mv, chunk)
+
+    return _jit_shard_map(
+        body, ds,
+        (ds.digit_spec(andim), ds.digit_spec(bndim), P(ds.axis)),
+        ds.digit_spec(andim))
+
+
+def _sharded_matmul(p, a_res, b_res, ds):
+    fn = _sharded_matmul_fn(ds, p, a_res.ndim, b_res.ndim)
+    return fn(a_res, b_res, _moduli_arr(p))
+
+
+@functools.lru_cache(maxsize=512)
+def _sharded_normalize_fn(ds, p, ndim, inv_scale, dtype):
+    """MRC normalization: THE point where digit slices communicate.
+
+    One tiled all-gather reassembles the full ``[K, ...]`` residue tensor
+    on every device, then the sequential mixed-radix conversion runs
+    replicated.  This is the paper's Fig. 5 topology as collectives: the
+    PAC array never talks, the normalization unit is the meeting point.
+    (Scattering the MRC over batch via all-to-all is a future refinement;
+    it trades the replicated O(K^2) work for divisibility constraints.)
+
+    On a mesh with a real (size > 1) auto axis — the DP x digit
+    composition — the all-gather cannot live inside shard_map: XLA's
+    SPMD partitioner (0.4.x) hard-crashes on manual-subgroup collectives
+    mixed with auto axes.  There the digit gather is expressed as a
+    GSPMD replication constraint on the digit axis instead (other dims
+    unconstrained, so the MRC itself stays data-parallel over the batch).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.core import mrc
+
+    if any(ds.mesh.shape[a] > 1 for a in ds.auto_axes()):
+        def gather_and_decode(r):
+            full = jax.lax.with_sharding_constraint(
+                r, NamedSharding(
+                    ds.mesh, P(None, *([P.UNCONSTRAINED] * (ndim - 1)))))
+            return mrc.decode_float(p, full, inv_scale=inv_scale,
+                                    dtype=dtype)
+
+        return jax.jit(gather_and_decode)
+
+    def body(r):
+        full = jax.lax.all_gather(r, ds.axis, axis=0, tiled=True)
+        return mrc.decode_float(p, full, inv_scale=inv_scale, dtype=dtype)
+
+    return _jit_shard_map(body, ds, ds.digit_spec(ndim),
+                          P(*([None] * (ndim - 1))))
+
+
+def _sharded_normalize(p, res, inv_scale, dtype, ds):
+    fn = _sharded_normalize_fn(ds, p, res.ndim, float(inv_scale),
+                               jnp.dtype(dtype))
+    return fn(res)
+
+
 # ---------------------------------------------------------- primitives ----
 def convert(profile, x, scale, *, bits: int = 16, backend: str | None = None):
     """Quantize ``x`` by ``scale`` and encode to residues [K, ...].
@@ -145,7 +300,16 @@ def convert(profile, x, scale, *, bits: int = 16, backend: str | None = None):
 
     _tally("converts")
     be = resolve_backend(backend)
-    p = get_profile(profile) if isinstance(profile, str) else profile
+    ds, p = _digit_ctx(profile)
+    if p is None:
+        p = get_profile(profile) if isinstance(profile, str) else profile
+    if ds is not None:
+        return _sharded_convert(p, x, scale, bits, ds)
+    # per-sequence grids (mask-aware absmax) carry a non-scalar scale; the
+    # Pallas conversion kernel takes one scalar, so those fall back to the
+    # reference path regardless of the requested backend
+    if be != "reference" and jnp.ndim(scale) > 0:
+        be = "reference"
     if be == "reference":
         from repro.core.quantize import quantize_with_scale
         from repro.core.rns import encode_int32
@@ -163,6 +327,9 @@ def matmul(profile, a_res, b_res, *, backend: str | None = None):
     """Digit-sliced modular matmul: [K,...,M,D] @ [K,D,N] -> [K,...,M,N]."""
     _tally("matmuls")
     be = resolve_backend(backend)
+    ds, p = _digit_ctx(profile)
+    if ds is not None:
+        return _sharded_matmul(p, a_res, b_res, ds)
     if be == "reference":
         from repro.core.rns_matmul import rns_matmul_res
 
@@ -184,6 +351,9 @@ def normalize(profile, res, *, inv_scale: float = 1.0,
     """
     _tally("normalizes")
     be = resolve_backend(backend)
+    ds, p = _digit_ctx(profile)
+    if ds is not None:
+        return _sharded_normalize(p, res, inv_scale, dtype, ds)
     # the Pallas kernel reconstructs unscaled values; scales outside the
     # float32 range (deep M_f^frac_exp deferral) would under/overflow the
     # post-multiply, so those decodes take the reference path regardless

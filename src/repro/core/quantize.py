@@ -1,24 +1,122 @@
-"""Symmetric fixed-point quantization feeding the RNS conversion pipeline."""
+"""Symmetric fixed-point quantization feeding the RNS conversion pipeline.
+
+Two grid policies:
+
+* **per-tensor** (default): one absmax scale for the whole tensor — the
+  cheapest grid, used everywhere shapes are dense.
+* **per-sequence** (mask-aware): padded ragged batches compute each row's
+  scale over its REAL tokens only.  A per-tensor scale over a padded
+  ``[B, Tpad, d]`` activation couples rows through the pad garbage, which
+  is why the RNS path used to lose bit-exactness under continuous
+  batching; with a :class:`token_mask` context installed (see
+  ``models/model.prefill_ragged`` / ``decode_step``) every sequence gets
+  the same grid a solo run would compute, making padded prefill and
+  batched decode token-identical to solo runs (asserted in
+  tests/test_serve_continuous.py).
+
+Degenerate inputs: an all-zero (or sub-``eps``) block used to produce
+``~qmax/eps ≈ 9e15`` scales whose products overflow float32 after a few
+chained ops; blocks whose absmax sits below ``eps`` now flush to the
+unit grid (quantizing to exact zeros), which keeps chained scale
+products bounded.
+"""
 
 from __future__ import annotations
+
+import threading
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["absmax_scale", "quantize", "quantize_with_scale", "dequantize"]
+__all__ = [
+    "absmax_scale",
+    "quantize",
+    "quantize_with_scale",
+    "dequantize",
+    "token_mask",
+    "current_token_mask",
+]
+
+_state = threading.local()          # trace-time token-mask stack
 
 
-def absmax_scale(x, bits: int, axis=None, eps: float = 1e-12):
+def _masks() -> list:
+    if not hasattr(_state, "masks"):
+        _state.masks = []
+    return _state.masks
+
+
+class token_mask:
+    """Install a ``[B, T]`` validity mask for per-sequence quantization.
+
+    Inside the context, :func:`absmax_scale` computes PER-ROW scales over
+    positions where the mask is True, for activations whose leading dims
+    match the mask (``[B, T, ...]``).  Weights and other shapes keep the
+    per-tensor grid.  ``mask=None`` is a no-op.  The mask may be a traced
+    array: install it inside the traced function (the jitted prefill /
+    decode step), not around the jit call.
+    """
+
+    def __init__(self, mask):
+        self.mask = mask
+
+    def __enter__(self):
+        if self.mask is not None:
+            _masks().append(self.mask)
+        return self
+
+    def __exit__(self, *exc):
+        # pop by position, not value: the mask may be a tracer, and
+        # list.remove would force a traced __eq__ into a python bool
+        if self.mask is not None:
+            _masks().pop()
+        return False
+
+
+def current_token_mask():
+    ms = _masks()
+    return ms[-1] if ms else None
+
+
+def _context_mask_for(x):
+    """The installed mask if ``x`` looks like a [B, T, ...] activation."""
+    mask = current_token_mask()
+    if mask is None:
+        return None
+    if x.ndim == mask.ndim + 1 and x.shape[: mask.ndim] == mask.shape:
+        return mask
+    return None
+
+
+def absmax_scale(x, bits: int, axis=None, eps: float = 1e-12, mask=None):
     """Scale s such that round(x*s) uses <= ``bits`` signed bits.
 
     axis=None -> per-tensor scalar; otherwise the scale is reduced over
-    ``axis`` (per-channel).  The scale is stop-gradient'ed (STE).
+    ``axis`` (per-channel).  With ``mask`` (explicit ``[B, T]``, or
+    installed via :class:`token_mask`) the reduction runs per row over
+    unmasked positions only (per-sequence grids for ragged batches).
+    All-zero (or fully masked) inputs get scale 1.0 — see module
+    docstring.  The scale is stop-gradient'ed (STE).
     """
     qmax = float(2 ** (bits - 1) - 1)
-    amax = jnp.max(jnp.abs(x)) if axis is None else jnp.max(
-        jnp.abs(x), axis=axis, keepdims=True
-    )
-    s = qmax / jnp.maximum(amax, eps)
+    x = jnp.asarray(x)
+    if mask is None and axis is None:
+        mask = _context_mask_for(x)
+    if mask is not None:
+        m = jnp.asarray(mask, bool)
+        m = m.reshape(m.shape + (1,) * (x.ndim - m.ndim))
+        red = tuple(range(1, x.ndim))
+        amax = jnp.max(jnp.where(m, jnp.abs(x), 0.0), axis=red, keepdims=True)
+    elif axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    # eps is the denormal floor: blocks whose absmax sits below it flush
+    # to the unit grid (quantizing to exact zeros) instead of receiving a
+    # ~qmax/eps scale — those scales are what overflow chained float32
+    # scale products.  Clamping only exact zero would leave amax in
+    # (0, eps) on the overflow path.
+    s = jnp.where(amax >= eps, qmax / amax, 1.0)
     return jax.lax.stop_gradient(s)
 
 

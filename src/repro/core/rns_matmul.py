@@ -38,6 +38,7 @@ from repro.core.rns import tables
 
 __all__ = [
     "RnsDotConfig",
+    "modular_matmul",
     "rns_matmul_res",
     "rns_dot",
     "rns_dot_fwd_only",
@@ -86,6 +87,38 @@ def _check_capacity(cfg: RnsDotConfig, contract_dim: int, qa: int, qb: int):
         )
 
 
+def modular_matmul(a_res, b_res, mvec, chunk: int):
+    """Digit-batched einsum with lazy modular reduction — THE schedule.
+
+    ``mvec``: moduli broadcast to ``(K', 1, ..., 1)`` (any digit subset —
+    the digit-sharded dispatch path passes each device's local group);
+    ``chunk``: max #terms accumulable in int32 between reductions
+    (``profile.lazy_chunk``; depends only on max(moduli), so it is
+    identical for every digit shard).  Single source of truth for the
+    overflow-critical chunking used by both the reference and the
+    sharded path.
+    """
+    D = a_res.shape[-1]
+    if D <= chunk:
+        acc = jnp.einsum(
+            "s...md,sdn->s...mn", a_res, b_res,
+            preferred_element_type=jnp.int32,
+        )
+        return jnp.remainder(acc, mvec)
+    # chunked accumulation with a modular reduction per chunk
+    n_chunks = -(-D // chunk)
+    acc = None
+    for c in range(n_chunks):
+        sl = slice(c * chunk, min((c + 1) * chunk, D))
+        part = jnp.einsum(
+            "s...md,sdn->s...mn", a_res[..., sl], b_res[:, sl, :],
+            preferred_element_type=jnp.int32,
+        )
+        part = jnp.remainder(part, mvec)
+        acc = part if acc is None else jnp.remainder(acc + part, mvec)
+    return acc
+
+
 def rns_matmul_res(profile, a_res, b_res):
     """Per-digit-slice modular matmul (the jnp reference implementation).
 
@@ -97,28 +130,9 @@ def rns_matmul_res(profile, a_res, b_res):
     """
     p = get_profile(profile) if isinstance(profile, str) else profile
     t = tables(p)
-    chunk = p.lazy_chunk
-    D = a_res.shape[-1]
     # output is [K, ..., M, N]: same rank as a_res
     m = jnp.asarray(t.moduli).reshape((-1,) + (1,) * (a_res.ndim - 1))
-    if D <= chunk:
-        acc = jnp.einsum(
-            "s...md,sdn->s...mn", a_res, b_res,
-            preferred_element_type=jnp.int32,
-        )
-        return jnp.remainder(acc, m)
-    # chunked accumulation with a modular reduction per chunk
-    n_chunks = -(-D // chunk)
-    acc = None
-    for c in range(n_chunks):
-        sl = slice(c * chunk, min((c + 1) * chunk, D))
-        part = jnp.einsum(
-            "s...md,sdn->s...mn", a_res[..., sl], b_res[:, sl, :],
-            preferred_element_type=jnp.int32,
-        )
-        part = jnp.remainder(part, m)
-        acc = part if acc is None else jnp.remainder(acc + part, m)
-    return acc
+    return modular_matmul(a_res, b_res, m, p.lazy_chunk)
 
 
 def _encode_operand(cfg: RnsDotConfig, x, bits: int, backend: str):

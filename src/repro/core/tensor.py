@@ -19,8 +19,13 @@ domain:
   chain/block instead of one per op, the paper's central claim.
 
 All heavy lifting routes through :mod:`repro.core.dispatch`, so an
-RnsTensor program runs unchanged on the jnp reference path or the Pallas
-kernels.
+RnsTensor program runs unchanged on the jnp reference path, the Pallas
+kernels, or — with a ``distributed.sharding.use_digit_sharding`` context
+installed — digit-sharded over a device mesh: the leading ``[K, ...]``
+digit axis is partitioned over the ``model`` axis (one group of moduli
+per device), every PAC op stays device-local, and the single MRC decode
+is the only point where digits are gathered.  :func:`rt_device_put`
+places an already-encoded tensor into that layout.
 """
 
 from __future__ import annotations
@@ -44,6 +49,8 @@ __all__ = [
     "rt_mul",
     "rt_add",
     "rt_renormalize",
+    "rt_device_put",
+    "rt_digit_sharding",
     "matmul_out_bits",
     "needs_renormalize",
 ]
@@ -105,6 +112,33 @@ class RnsTensor:
 
 def _digits32(rt: RnsTensor) -> jax.Array:
     return rt.digits.astype(jnp.int32)
+
+
+# ------------------------------------------------------------ mesh layout --
+def rt_digit_sharding(rt: RnsTensor):
+    """The NamedSharding the installed digit mesh assigns to ``rt.digits``
+    ([K, ...] partitioned over the ``model`` axis), or None when no digit
+    context is installed / the profile doesn't divide the axis."""
+    from repro.distributed.sharding import digit_sharding
+
+    ds = digit_sharding()
+    if ds is None or not ds.shards(rt.rns_profile.n_digits):
+        return None
+    return ds.digit_sharding(rt.digits.ndim)
+
+
+def rt_device_put(rt: RnsTensor) -> RnsTensor:
+    """Place an encoded tensor into the digit-sharded layout (host->mesh).
+
+    Tensors *produced* under the digit context already carry this layout
+    (dispatch's shard_map outputs); this is for pre-encoded operands —
+    e.g. weights encoded once at engine build time — so the per-step jit
+    consumes them without a layout change.
+    """
+    sh = rt_digit_sharding(rt)
+    if sh is None:
+        return rt
+    return dataclasses.replace(rt, digits=jax.device_put(rt.digits, sh))
 
 
 # ------------------------------------------------------------- encoding ---

@@ -1,4 +1,4 @@
-"""Logical-axis -> mesh sharding rules (DP / FSDP / TP / EP / SP).
+"""Logical-axis -> mesh sharding rules (DP / FSDP / TP / EP / SP / digits).
 
 Params carry logical axis names (see models/*.init_*); this module resolves
 them against the production mesh:
@@ -7,6 +7,7 @@ them against the production mesh:
   embed           -> "data"           FSDP / ZeRO-3: d_model param dims
   mlp/heads/kv_heads/vocab/expert -> "model"   Megatron TP + expert parallel
   lora            -> "model", falling back to "data" on conflict
+  digit           -> "model"          RNS residue channels (paper Fig. 5)
 
 Resolution is SHAPE-AWARE: jit input shardings must divide dimensions
 evenly, so a candidate axis is skipped when the dim isn't divisible (e.g.
@@ -19,9 +20,23 @@ KV caches get their own policy: batch -> DP axes when it fills them,
 otherwise (long-context, batch=1) the SEQUENCE dim is sharded and partial
 attention is LSE-combined (distributed flash-decoding); KV-head counts that
 don't divide the model axis also fall back to sequence sharding.
+
+Residue channels get their own policy too (:class:`DigitSharding`,
+installed with :class:`use_digit_sharding`): the leading ``[K, ...]``
+digit axis of every residue tensor is partitioned over the ``model`` mesh
+axis.  RNS digits are carry-free and mutually independent — the paper's
+central claim — so each device owns ``K / n_model`` moduli and runs the
+convert/matmul/defer segments with ZERO cross-device communication; digits
+meet only inside MRC normalization (``core/dispatch.normalize`` gathers
+them once).  ``core/dispatch.py`` consults the installed context at trace
+time and routes the three primitives through per-device ``shard_map``
+bodies.
 """
 
 from __future__ import annotations
+
+import dataclasses
+import threading
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -40,6 +55,9 @@ RULES: dict[str | None, tuple[str, ...]] = {
     # dim turns each MLA matmul into a full-output all-reduce (§Perf,
     # deepseek iter 4 — this single rule was worth 3.7 TiB/step/device)
     "lora": (),
+    # leading [K, ...] residue-channel axis of encoded RNS tensors: one
+    # group of moduli per device (digit-axis sharding; see DigitSharding)
+    "digit": ("model",),
     "embed_vec": (),
     "expert_vec": (),
     "layers": (),
@@ -156,6 +174,76 @@ def constrain(x, logical: tuple):
             spec.append(None)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*spec)))
+
+
+# ------------------------------------------------- digit-axis (RNS) rules --
+@dataclasses.dataclass(frozen=True)
+class DigitSharding:
+    """Residue-channel layout: digit axis of ``[K, ...]`` tensors -> mesh.
+
+    ``axis`` is the mesh axis owning digit slices (one group of moduli per
+    device — the paper's "one digit slice per compute unit", Fig. 5).  All
+    OTHER mesh axes are left to GSPMD (``shard_map`` ``auto`` axes), so
+    digit sharding composes with data parallelism: a ``("data", "model")``
+    mesh runs DP over ``data`` and residue channels over ``model``.
+    """
+
+    mesh: Mesh
+    axis: str = "model"
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+    def shards(self, n_digits: int) -> bool:
+        """Whether a K-digit profile splits evenly over the digit axis."""
+        return n_digits % self.n_shards == 0
+
+    def auto_axes(self) -> frozenset:
+        return frozenset(a for a in self.mesh.axis_names if a != self.axis)
+
+    def digit_spec(self, ndim: int) -> P:
+        """PartitionSpec of a ``[K, ...]`` residue tensor (shard_map spec:
+        manual on the digit axis, replicated-per-shard elsewhere)."""
+        return P(self.axis, *([None] * (ndim - 1)))
+
+    def digit_sharding(self, ndim: int) -> NamedSharding:
+        """NamedSharding for placing a ``[K, ...]`` residue tensor."""
+        return NamedSharding(self.mesh, self.digit_spec(ndim))
+
+
+# per-thread, like core/quantize's token-mask stack: two engines traced
+# from different host threads (one sharded, one not) must not see each
+# other's context — a cross-thread leak would bake the wrong layout into
+# a jit cache permanently
+_digit_state = threading.local()
+
+
+class use_digit_sharding:
+    """Install the digit-axis layout for the duration of a trace/lowering.
+
+    ``mesh=None`` is a no-op (single-device runs and tests untouched) —
+    the same pattern as :class:`use_activation_sharding`.  Contexts nest;
+    the innermost wins.
+    """
+
+    def __init__(self, mesh: Mesh | None, axis: str = "model"):
+        self.ds = DigitSharding(mesh, axis) if mesh is not None else None
+
+    def __enter__(self):
+        self._prev = getattr(_digit_state, "ds", None)
+        if self.ds is not None:
+            _digit_state.ds = self.ds
+        return self.ds
+
+    def __exit__(self, *exc):
+        _digit_state.ds = self._prev
+        return False
+
+
+def digit_sharding() -> DigitSharding | None:
+    """The installed residue-channel layout, or None."""
+    return getattr(_digit_state, "ds", None)
 
 
 def first_valid_spec(shape, candidates, mesh: Mesh) -> P:

@@ -24,9 +24,21 @@ from repro.models import model as M
 from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
 
 
+def _digit_mesh(args):
+    if not args.digit_shard:
+        return None
+    from repro.launch.mesh import make_digit_mesh
+
+    mesh = make_digit_mesh()            # all local devices on "model"
+    print(f"digit sharding over {mesh.shape['model']} device(s) "
+          "(residue channels; see docs/distributed.md)")
+    return mesh
+
+
 def _bucketed(args, cfg, params):
     engine = Engine(params, cfg, ServeConfig(
-        max_cache=args.prompt_len + args.new + 8, max_new_tokens=args.new))
+        max_cache=args.prompt_len + args.new + 8, max_new_tokens=args.new,
+        mesh=_digit_mesh(args)))
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
     frontend = None
@@ -53,7 +65,7 @@ def _continuous(args, cfg, params):
     engine = ContinuousEngine(params, cfg, ServeConfig(
         max_cache=max_cache, max_new_tokens=args.new,
         page_size=args.page_size, max_seqs=args.max_seqs,
-        n_pages=args.n_pages))
+        n_pages=args.n_pages, mesh=_digit_mesh(args)))
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, (lens[i % len(lens)],)).astype(
         np.int32) for i in range(args.requests)]
@@ -84,6 +96,10 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--max-seqs", type=int, default=8)
     ap.add_argument("--n-pages", type=int, default=None)
+    ap.add_argument("--digit-shard", action="store_true",
+                    help="shard RNS residue channels over all local "
+                         "devices (either engine; needs an RNS arch "
+                         "whose digit count divides the device count)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)

@@ -268,15 +268,27 @@ def prefill_ragged(params, cfg, batch, lengths):
     ...] KV planes) for the caller to blit into its paged cache — see
     ``serve/kv_cache.write_prompt_pages``.
 
+    RNS exactness under padding: a per-tensor absmax grid over the padded
+    activations would couple each row's quantization to pad garbage, so a
+    :class:`~repro.core.quantize.token_mask` context is installed for the
+    whole stack — every sequence's scale reduces over its real tokens
+    only, which makes the RNS path token-identical to a solo (unpadded)
+    run of the same prompt.  The float path never consults the mask.
+
     Decoder-only, causal, no frontend (the continuous engine validates).
     """
+    from repro.core.quantize import token_mask
+
     tokens = batch["tokens"]
-    B = tokens.shape[0]
-    h = _embed_tokens(params, cfg, tokens)
-    h = _add_abs_pos(cfg, h)
-    h, ys, _aux = tf.apply_blocks(params["blocks"], h, cfg, mode="prefill")
-    h_last = h[jnp.arange(B), lengths - 1][:, None]        # [B, 1, d]
-    return _logits(params, cfg, h_last)[:, 0], ys
+    B, Tpad = tokens.shape
+    valid = jnp.arange(Tpad)[None, :] < lengths[:, None]
+    with token_mask(valid if cfg.rns is not None else None):
+        h = _embed_tokens(params, cfg, tokens)
+        h = _add_abs_pos(cfg, h)
+        h, ys, _aux = tf.apply_blocks(params["blocks"], h, cfg,
+                                      mode="prefill")
+        h_last = h[jnp.arange(B), lengths - 1][:, None]    # [B, 1, d]
+        return _logits(params, cfg, h_last)[:, 0], ys
 
 
 # --------------------------------------------------------------- decode ----
@@ -285,19 +297,30 @@ def decode_step(params, cfg, token, cache, active=None):
 
     ``active`` [B] bool (continuous batching): inactive rows keep their
     ``lengths`` frozen — their compute is garbage the engine discards,
-    and their cache writes land on the paged pool's trash page.
+    and their cache writes land on the paged pool's trash page.  On the
+    RNS path ``active`` doubles as the quantization token-mask, so each
+    row's fixed-point grid is its own (a batched decode step is then
+    bit-identical per row to a solo decode — same guarantee as
+    :func:`prefill_ragged`).
     """
-    h = _embed_tokens(params, cfg, token)
-    # absolute-pos archs gather the position embedding at `lengths`
-    if cfg.pos_emb == "sinusoidal":
-        lengths = _cache_lengths(cache)
-        table = sinusoidal_positions(_cache_smax(cfg, cache), cfg.d_model, h.dtype)
-        h = h + table[lengths][:, None]
-    h, ys, _ = tf.apply_blocks(params["blocks"], h, cfg, mode="decode",
-                               cache=cache)
+    from repro.core.quantize import token_mask
+
+    mask = active[:, None] if (active is not None
+                               and cfg.rns is not None) else None
+    with token_mask(mask):
+        h = _embed_tokens(params, cfg, token)
+        # absolute-pos archs gather the position embedding at `lengths`
+        if cfg.pos_emb == "sinusoidal":
+            lengths = _cache_lengths(cache)
+            table = sinusoidal_positions(_cache_smax(cfg, cache), cfg.d_model,
+                                         h.dtype)
+            h = h + table[lengths][:, None]
+        h, ys, _ = tf.apply_blocks(params["blocks"], h, cfg, mode="decode",
+                                   cache=cache)
+        logits = _logits(params, cfg, h)[:, 0]
     step = 1 if active is None else active.astype(jnp.int32)
     new_cache = set_cache_lengths(ys, _cache_lengths(cache) + step)
-    return _logits(params, cfg, h)[:, 0], new_cache
+    return logits, new_cache
 
 
 def _cache_lengths(cache):

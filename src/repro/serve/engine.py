@@ -26,7 +26,12 @@ RNS execution policy: as in the bucketed engine, ``rns_backend`` /
 residue-domain deferral is free), prefill reuses the shared forward
 conversion + deferred-MLP chain, and each ``step()`` reports the
 structural convert/matmul/normalize tallies it scheduled
-(``stats["rns_ops"]``).
+(``stats["rns_ops"]``).  Ragged prefill and batched decode are
+token-identical to solo runs on the RNS path too: per-sequence
+quantization grids (``core/quantize.token_mask``) keep each row's
+fixed-point scale independent of its neighbours and of pad garbage.
+With ``ServeConfig.mesh`` set, the whole RNS datapath runs
+digit-sharded over the mesh's ``model`` axis (see docs/distributed.md).
 """
 
 from __future__ import annotations
@@ -63,6 +68,11 @@ class ServeConfig:
     # RNS execution policy overrides (None: keep the model config's)
     rns_backend: str | None = None   # reference|pallas|pallas_interpret|auto
     rns_defer: bool | None = None    # residue-domain MLP chaining
+    # residue-channel sharding: a jax Mesh whose ``digit_axis`` partitions
+    # the RNS digit axis (one group of moduli per device; digits meet only
+    # at MRC normalization).  None: single-device layout, unchanged.
+    mesh: object | None = None       # jax.sharding.Mesh
+    digit_axis: str = "model"
     # continuous batching / paged cache (ContinuousEngine only)
     page_size: int = 16              # tokens per physical page
     max_seqs: int = 8                # concurrent decode slots
@@ -75,6 +85,29 @@ class ServeConfig:
                 f"eos_id={self.eos_id}: vocabulary ids are non-negative; "
                 "use a valid token id, or -1 (the documented sentinel) to "
                 "disable early stopping")
+
+
+def _with_digit_ctx(fn, scfg: ServeConfig):
+    """Wrap a jitted callable so tracing sees the digit-sharding context.
+
+    The context only matters during the (first-call) trace, where
+    ``core/dispatch.py`` routes convert/matmul/normalize through the
+    per-device shard_map bodies; afterwards the wrapper is a cheap
+    passthrough.  ``_cache_size`` is forwarded — tests pin the
+    zero-per-length-recompiles contract through it.
+    """
+    if scfg.mesh is None:
+        return fn
+    from repro.distributed.sharding import use_digit_sharding
+
+    @functools.wraps(fn)
+    def wrapped(*args, **kwargs):
+        with use_digit_sharding(scfg.mesh, scfg.digit_axis):
+            return fn(*args, **kwargs)
+
+    if hasattr(fn, "_cache_size"):
+        wrapped._cache_size = fn._cache_size
+    return wrapped
 
 
 def _apply_rns_policy(model_cfg, scfg: ServeConfig):
@@ -96,13 +129,13 @@ class Engine:
         self.params = params
         self.cfg = _apply_rns_policy(model_cfg, scfg)
         self.scfg = scfg
-        self._prefill = jax.jit(
+        self._prefill = _with_digit_ctx(jax.jit(
             functools.partial(M.prefill, cfg=self.cfg, S_max=scfg.max_cache,
                               cache_dtype=jnp.dtype(scfg.cache_dtype)),
-            static_argnames=())
-        self._decode = jax.jit(
+            static_argnames=()), scfg)
+        self._decode = _with_digit_ctx(jax.jit(
             lambda params, tok, cache: M.decode_step(
-                params, self.cfg, tok, cache))
+                params, self.cfg, tok, cache)), scfg)
 
     def rns_op_counts(self, B: int = 1, T: int = 8) -> dispatch.OpCounts:
         """Structural RNS primitive counts for one [B, T] prefill trace."""
@@ -175,9 +208,9 @@ class ContinuousEngine:
         self.cache = kv.make_paged_cache(
             cfg, self.pcfg, dtype=jnp.dtype(scfg.cache_dtype))
 
-        self._prefill = jax.jit(
+        self._prefill = _with_digit_ctx(jax.jit(
             lambda params, tokens, lengths: M.prefill_ragged(
-                params, self.cfg, {"tokens": tokens}, lengths))
+                params, self.cfg, {"tokens": tokens}, lengths)), scfg)
 
         def _decode_fn(params, tok, cache, active):
             logits, cache = M.decode_step(params, self.cfg, tok, cache,
@@ -188,7 +221,8 @@ class ContinuousEngine:
         # donate the cache operand: the page pool is the big allocation,
         # and both callers immediately rebind self.cache to the result —
         # without donation every decoded token copies the whole pool
-        self._decode = jax.jit(_decode_fn, donate_argnums=(2,))
+        self._decode = _with_digit_ctx(
+            jax.jit(_decode_fn, donate_argnums=(2,)), scfg)
         self._ingest = jax.jit(self._ingest_fn, donate_argnums=(0,))
         self._tables_dirty = True
         self._active = np.zeros((self.pcfg.max_seqs,), bool)

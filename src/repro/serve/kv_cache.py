@@ -83,12 +83,22 @@ class PagedCacheConfig:
 
 
 class PageAllocator:
-    """Host-side free list over physical pages 1..n_pages-1 (0 = trash)."""
+    """Host-side free list over physical pages 1..n_pages-1 (0 = trash).
+
+    ``free`` is IDEMPOTENT: a page already on the free list is skipped
+    rather than raised on.  The scheduler can preempt a sequence in the
+    same engine step that it finishes (growth runs before the finished
+    check), and the preemption path and the completion path both release
+    pages — releasing twice must not corrupt the free list or hand one
+    physical page to two sequences.  Out-of-range ids still raise: those
+    are real bugs, not benign races.
+    """
 
     def __init__(self, n_pages: int):
         self.n_pages = n_pages
         # LIFO reuse keeps the working set of hot pages small
         self._free = list(range(n_pages - 1, TRASH_PAGE, -1))
+        self._free_set = set(self._free)    # O(1) idempotence check
 
     @property
     def n_free(self) -> int:
@@ -104,15 +114,17 @@ class PageAllocator:
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(pages)
         return pages
 
     def free(self, pages: list[int]) -> None:
         for pg in pages:
             if not (TRASH_PAGE < pg < self.n_pages):
                 raise ValueError(f"bad page id {pg}")
-            if pg in self._free:
-                raise ValueError(f"double free of page {pg}")
+            if pg in self._free_set:
+                continue                    # already free: idempotent
             self._free.append(pg)
+            self._free_set.add(pg)
 
 
 # ------------------------------------------------------- device pytrees ---

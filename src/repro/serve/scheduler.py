@@ -102,6 +102,10 @@ class Scheduler:
             return None
         victim = max(self.running.values(), key=lambda s: s.admit_seq)
         self.alloc.free(victim.pages)
+        # clear the stale SeqState's pages: the engine may still hold a
+        # reference (e.g. it preempts a sequence the same step it
+        # finishes) and must not re-free them through complete()
+        victim.pages = []
         self._free_slots.append(victim.slot)
         del self.running[victim.slot]
         # back to the FRONT: it has the oldest arrival among waiting peers
@@ -157,7 +161,15 @@ class Scheduler:
         return StepPlan(admitted=admitted, preempted=preempted, grew=grew)
 
     def complete(self, seq: SeqState) -> None:
-        """Finished row: free its pages and slot immediately."""
+        """Finished row: free its pages and slot immediately.
+
+        Guarded against stale states: if ``seq`` is no longer the
+        registered occupant of its slot (it was preempted this same step,
+        or completed already), this is a no-op — freeing its slot or
+        pages again would hand them to two sequences at once.
+        """
+        if self.running.get(seq.slot) is not seq:
+            return
         self.alloc.free(seq.pages)
         seq.pages = []
         self._free_slots.append(seq.slot)

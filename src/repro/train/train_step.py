@@ -99,3 +99,47 @@ def make_eval_step(cfg):
         return {"loss": loss, **parts}
 
     return eval_step
+
+
+# ------------------------------------------------------ mesh composition ---
+def make_dp_train_step(cfg, opt_cfg: AdamWConfig, mesh, *,
+                       compress_dci: bool = False, digit_shard: bool = True):
+    """Data-parallel train step composed with a digit-sharded forward.
+
+    Two orthogonal parallelisms on one mesh:
+
+    * **batch** is sharded over the DP axes (``pod``/``data``); GSPMD
+      inserts the gradient all-reduce — standard data parallelism.
+    * **residue channels** are sharded over the ``model`` axis
+      (``digit_shard=True`` and ``cfg.rns`` set): every RNS
+      convert/matmul in the forward (and the RNS backward matmuls, when
+      ``cfg.rns.backward_rns``) runs as per-device digit groups with zero
+      collectives; only MRC normalizations gather digits.  When the
+      profile's digit count doesn't divide the axis, the layout silently
+      stays replicated — same numerics, no sharding.
+
+    The returned callable has the same (state, batch) -> (state, metrics)
+    contract as :func:`make_train_step`; losses match the single-device
+    step to float tolerance (reduction order differs across devices).
+    Host numpy batches are placed with the batch sharding before the call.
+    """
+    import contextlib
+
+    from jax.sharding import NamedSharding
+
+    from repro.distributed import sharding as SH
+
+    base = make_train_step(cfg, opt_cfg, compress_dci=compress_dci)
+    jitted = jax.jit(base, donate_argnums=(0,))
+    bspec = NamedSharding(mesh, SH.batch_spec(mesh))
+
+    def step(state, batch):
+        batch = jax.device_put(
+            batch, jax.tree.map(lambda _: bspec, batch))
+        dctx = (SH.use_digit_sharding(mesh)
+                if digit_shard and cfg.rns is not None
+                else contextlib.nullcontext())
+        with dctx, SH.use_activation_sharding(mesh):
+            return jitted(state, batch)
+
+    return step

@@ -28,7 +28,23 @@ def test_allocator_alloc_free_utilization():
     with pytest.raises(ValueError):
         a.free([TRASH_PAGE])        # trash page is never allocatable
     with pytest.raises(ValueError):
-        a.free([3, 3][:1] + [3])    # double free
+        a.free([a.n_pages])         # out of range is a real bug: raises
+
+
+def test_allocator_free_is_idempotent():
+    """Preempt-then-complete may release the same pages twice in one
+    engine step; the free list must not grow duplicates (a duplicate
+    would hand one physical page to two sequences)."""
+    a = PageAllocator(9)
+    got = a.alloc(3)
+    a.free(got)
+    a.free(got)                     # second release: silent no-op
+    assert a.n_free == 8
+    assert sorted(a._free) == list(range(1, 9))   # no duplicates
+    # a page re-allocated after the double release is handed out once
+    again = a.alloc(8)
+    assert sorted(again) == list(range(1, 9))
+    assert a.alloc(1) is None
 
 
 def test_paged_config_validates():

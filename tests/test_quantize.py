@@ -1,0 +1,143 @@
+"""Quantization grids: mask-aware per-sequence scales + degenerate inputs.
+
+Two PR-3 bugfixes, pinned:
+
+* ``absmax_scale`` with a token mask (explicit or via the ``token_mask``
+  context) computes each row's scale over its REAL tokens only — the fix
+  that makes padded ragged prefill bit-exact on the RNS path (the
+  engine-level assertion lives in tests/test_serve_continuous.py).
+* an all-zero input used to get scale ``qmax/eps ~ 9e15``; chained
+  blocks then overflow the float32 scale product.  Zero absmax now maps
+  to scale 1.0 (zero encodes exactly at any scale), and a chain of
+  all-zero blocks decodes to exact zeros with finite scales and no
+  spurious slow ops.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_stub import given, st
+
+from repro.core import dispatch
+from repro.core.quantize import absmax_scale, quantize_with_scale, token_mask
+from repro.core.tensor import rt_decode, rt_encode, rt_matmul, rt_mul
+
+
+class TestMaskedScale:
+    def test_per_row_scale_matches_solo(self):
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((2, 5, 8)), jnp.float32)
+        mask = jnp.asarray([[1, 1, 1, 0, 0], [1, 1, 1, 1, 1]], bool)
+        s = absmax_scale(x, 8, mask=mask)
+        assert s.shape == (2, 1, 1)      # per-sequence, broadcastable
+        # row 0's grid ignores its pad tail; row 1 is fully real
+        assert jnp.isclose(s[0, 0, 0], absmax_scale(x[0, :3], 8))
+        assert jnp.isclose(s[1, 0, 0], absmax_scale(x[1], 8))
+
+    def test_pad_garbage_cannot_move_a_real_rows_grid(self):
+        rng = np.random.default_rng(1)
+        x = np.asarray(rng.standard_normal((1, 4, 8)), np.float32)
+        xpad = np.concatenate(
+            [x, 1e6 * np.ones((1, 3, 8), np.float32)], axis=1)
+        mask = jnp.asarray([[1, 1, 1, 1, 0, 0, 0]], bool)
+        s_solo = absmax_scale(jnp.asarray(x), 8)
+        s_pad = absmax_scale(jnp.asarray(xpad), 8, mask=mask)
+        assert jnp.isclose(s_pad[0, 0, 0], s_solo)
+        # and the quantized REAL tokens are bit-identical to the solo run
+        q_solo = quantize_with_scale(jnp.asarray(x), s_solo, 8)
+        q_pad = quantize_with_scale(jnp.asarray(xpad), s_pad, 8)[:, :4]
+        assert np.array_equal(np.asarray(q_solo), np.asarray(q_pad))
+
+    def test_context_applies_only_to_matching_activations(self):
+        rng = np.random.default_rng(2)
+        act = jnp.asarray(rng.standard_normal((2, 3, 8)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+        mask = jnp.ones((2, 3), bool)
+        with token_mask(mask):
+            s_act = absmax_scale(act, 8)
+            s_w = absmax_scale(w, 8)
+        assert s_act.shape == (2, 1, 1)           # activation: per-row
+        assert s_w.shape == ()                    # weight: per-tensor
+        assert jnp.isclose(s_w, absmax_scale(w, 8))
+
+    def test_context_is_trace_compatible(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((2, 4, 8)), jnp.float32)
+
+        @jax.jit
+        def f(x, lengths):
+            m = jnp.arange(x.shape[1])[None, :] < lengths[:, None]
+            with token_mask(m):
+                return absmax_scale(x, 8)
+
+        s = f(x, jnp.asarray([2, 4], jnp.int32))
+        assert jnp.isclose(s[0, 0, 0], absmax_scale(x[0, :2], 8))
+        assert jnp.isclose(s[1, 0, 0], absmax_scale(x[1], 8))
+
+    def test_fully_masked_row_gets_clamped_scale(self):
+        x = jnp.asarray(np.ones((2, 3, 4), np.float32))
+        mask = jnp.asarray([[0, 0, 0], [1, 1, 1]], bool)
+        s = absmax_scale(x, 8, mask=mask)
+        assert float(s[0, 0, 0]) == 1.0           # inactive slot: clamped
+        assert jnp.isfinite(s).all()
+
+
+class TestZeroInputClamp:
+    def test_zero_tensor_scale_is_one(self):
+        assert float(absmax_scale(jnp.zeros((4, 4)), 8)) == 1.0
+        assert float(absmax_scale(jnp.zeros((4, 4)), 16)) == 1.0
+        # nonzero inputs keep the absmax grid
+        assert float(absmax_scale(jnp.full((2,), 0.5), 8)) == \
+            pytest.approx(127 / 0.5)
+
+    def test_sub_eps_block_flushes_to_unit_grid(self):
+        # absmax in (0, eps) must not get the ~qmax/eps overflow grid:
+        # the whole sub-eps range is the denormal floor, not just 0.0
+        s = absmax_scale(jnp.full((4,), 1e-30), 14)
+        assert float(s) == 1.0
+        s = absmax_scale(jnp.full((4,), 1e-13), 14)      # just below eps
+        assert float(s) == 1.0
+        s = absmax_scale(jnp.full((4,), 1e-11), 14)      # just above eps
+        assert float(s) == pytest.approx((2**13 - 1) / 1e-11, rel=1e-5)
+
+    def test_all_zero_chain_three_deep_14bit(self):
+        # deterministic instance of the property below (hypothesis is an
+        # optional extra; this one always runs): depth 3 on a 14-bit grid
+        # is the regime whose unclamped scales overflowed float32
+        self._check_zero_chain(depth=3, bits=14)
+
+    @given(st.integers(min_value=2, max_value=4),
+           st.integers(min_value=8, max_value=14))
+    def test_all_zero_chain_never_overflows(self, depth, bits):
+        """Property: a chain of all-zero blocks keeps finite scales,
+        decodes to exact zeros, and pays no spurious slow ops beyond
+        what the (static) magnitude ledger already requires."""
+        self._check_zero_chain(depth, bits)
+
+    def _check_zero_chain(self, depth, bits):
+        z = jnp.zeros((2, 8), jnp.float32)
+        wz = jnp.zeros((8, 8), jnp.float32)
+        with dispatch.count_ops() as c:
+            t = rt_encode(z, "rns9", bits=bits)
+            for _ in range(depth):
+                t = rt_matmul(t, rt_encode(wz, "rns9", bits=bits))
+            t = rt_mul(t, rt_encode(z, "rns9", bits=bits))
+            y = rt_decode(t)
+        assert np.array_equal(np.asarray(y), np.zeros((2, 8), np.float32))
+        assert np.isfinite(float(t.scale))        # used to hit f32 inf
+        assert float(t.scale) == 1.0              # clamped grids multiply to 1
+        # ledger-scheduled ops only: any mid-chain renormalizes are the
+        # static bits-driven ones; they must match a NONZERO run of the
+        # same shape/bits (i.e. values never force extra slow ops)
+        rng = np.random.default_rng(0)
+        x = jnp.asarray(rng.standard_normal((2, 8)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((8, 8)), jnp.float32)
+        with dispatch.count_ops() as c_ref:
+            t2 = rt_encode(x, "rns9", bits=bits)
+            for _ in range(depth):
+                t2 = rt_matmul(t2, rt_encode(w, "rns9", bits=bits))
+            t2 = rt_mul(t2, rt_encode(x, "rns9", bits=bits))
+            rt_decode(t2)
+        assert c.normalizes == c_ref.normalizes
+        assert c.matmuls == c_ref.matmuls

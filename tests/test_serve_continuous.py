@@ -121,6 +121,76 @@ def test_queueing_beyond_slots(smollm):
     assert max(s["active"] for s in stats["steps"]) <= 2
 
 
+def test_rns_ragged_prefill_and_decode_token_identical_to_solo():
+    """The per-sequence quantization grids (core/quantize.token_mask)
+    make the RNS path token-identical to solo runs under padding AND
+    under batched decode — the caveat PR 2 documented, removed."""
+    from repro.core.rns_matmul import RnsDotConfig
+
+    base = dataclasses.replace(get_config("smollm-135m", smoke=True),
+                               rns=RnsDotConfig(profile="rns9", qx=8, qw=8),
+                               rns_targets="mlp")
+    params = _params(base)
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(1, base.vocab, (L,)).astype(np.int32)
+               for L in (7, 33, 120)]
+    max_new, S = 8, 160
+    for defer in (False, True):
+        eng = ContinuousEngine(params, base, ServeConfig(
+            max_cache=S, max_new_tokens=max_new, page_size=16, max_seqs=4,
+            rns_defer=defer))
+        res, _ = eng.run(prompts)
+        for i, p in enumerate(prompts):
+            cfg_i = (base if not defer
+                     else dataclasses.replace(
+                         base, rns=dataclasses.replace(base.rns, defer=True)))
+            assert res[i].tolist() == _solo(params, cfg_i, p, max_new, S), (
+                defer, i)
+
+
+def test_preempt_same_step_as_finish_no_double_free():
+    """Regression: a sequence preempted in the same step it finishes.
+
+    Growth (which can preempt) runs before the finished check, so the
+    engine can hold a stale SeqState whose pages were already released
+    by the preemption; completing it must be a no-op — not a second
+    free of the pages and slot (which used to raise, and without the
+    raise would hand the same page/slot to two sequences).
+    """
+    from repro.serve.kv_cache import PagedCacheConfig
+    from repro.serve.scheduler import Request, Scheduler
+
+    pcfg = PagedCacheConfig(page_size=4, n_pages=6, max_seqs=2,
+                            max_blocks=4)
+    sched = Scheduler(pcfg)
+    sched.submit(Request(rid=0, tokens=np.ones(4, np.int32), max_new=8))
+    sched.submit(Request(rid=1, tokens=np.ones(4, np.int32), max_new=8))
+    plan = sched.schedule()
+    assert len(plan.admitted) == 2
+    old, young = plan.admitted
+    # the older row grows until the pool is dry: the youngest is evicted
+    # (needs 12 // 4 + 1 = 4 blocks; the pool holds 5, the pair owns 4)
+    old.length = 12
+    old.emitted = [3, 3, 3, 3]
+    plan2 = sched.schedule()
+    assert plan2.preempted == [young.rid]
+    assert young.pages == []            # stale state defused at eviction
+    n_free = sched.alloc.n_free
+    # engine's finished check now completes the stale state: no-op
+    sched.complete(young)
+    assert sched.alloc.n_free == n_free
+    assert sorted(sched._free_slots) == [young.slot]   # freed ONCE
+    assert young.rid not in {s.rid for s in sched.running.values()}
+    # the old row is untouched and the victim can be re-admitted cleanly
+    assert sched.running[old.slot] is old
+    sched.complete(old)
+    plan3 = sched.schedule()
+    assert [s.rid for s in plan3.admitted] == [young.rid]
+    # completing the SAME state twice is also a no-op
+    sched.complete(old)
+    assert len(sched._free_slots) + len(sched.running) == pcfg.max_seqs
+
+
 def test_rns_policy_and_per_step_op_counts():
     from repro.core.rns_matmul import RnsDotConfig
 
