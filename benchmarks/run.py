@@ -8,6 +8,10 @@
 # (benchmarks/bench_dist.py; subprocesses with 1 and 8 virtual devices)
 # and writes BENCH_dist.json — residue-chain latency and serve tokens/sec
 # per device count.
+# ``--kernels-json PATH`` runs the fused-kernel benchmark
+# (benchmarks/bench_kernels.py) and writes BENCH_kernels.json — HBM bytes
+# moved and wall-clock, fused vs unfused chain, plus the recompile and
+# autotune smoke rows; ``--skip-kernels`` suppresses it.
 from __future__ import annotations
 
 import argparse
@@ -26,12 +30,18 @@ def main() -> None:
                     help="run the digit-sharded 1-vs-8-virtual-device "
                          "benchmark, write its rows as JSON "
                          "(e.g. BENCH_dist.json)")
+    ap.add_argument("--kernels-json", default=None, metavar="PATH",
+                    help="run the fused-kernel benchmark, write its rows "
+                         "as JSON (e.g. BENCH_kernels.json)")
     ap.add_argument("--skip-core", action="store_true",
                     help="skip the core benches (serve-only run)")
+    ap.add_argument("--skip-kernels", action="store_true",
+                    help="skip the fused-kernel benches")
     args = ap.parse_args()
     rows = []
     serve_rows = []
     dist_rows = []
+    kernel_rows = []
     sink = rows
 
     def report(name: str, us: float, derived: str = ""):
@@ -56,6 +66,13 @@ def main() -> None:
 
         sink = dist_rows
         bench_dist.run_all(report)
+        sink = rows
+
+    if args.kernels_json and not args.skip_kernels:
+        from benchmarks import bench_kernels
+
+        sink = kernel_rows
+        bench_kernels.run_all(report)
         sink = rows
 
     # roofline summary from the newest dry-run artifacts
@@ -88,6 +105,10 @@ def main() -> None:
         with open(args.dist_json, "w") as f:
             json.dump(dist_rows, f, indent=2)
         print(f"wrote {args.dist_json}", flush=True)
+    if args.kernels_json and not args.skip_kernels:
+        with open(args.kernels_json, "w") as f:
+            json.dump(kernel_rows, f, indent=2)
+        print(f"wrote {args.kernels_json}", flush=True)
 
 
 if __name__ == "__main__":

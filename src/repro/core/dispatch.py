@@ -20,6 +20,16 @@ It also owns the op counters behind the deferred-normalization claim:
 benchmarks can assert "one normalize per chain" structurally instead of
 timing it.
 
+Fused composites (``pallas_fused`` / ``pallas_fused_interpret``): the
+paper's Fig. 5 datapath is one wired pipeline, and
+``fused_encode_matmul`` / ``fused_matmul_normalize`` / ``fused_dot``
+run it as single Pallas kernels (kernels/rns_fused) — bit-identical to
+the three-stage chain, without the [K, ..., D] residue-plane and
+[K, ..., N] accumulator round-trips through HBM.  On non-fused backends
+(or under a digit-sharding context, or for non-row-foldable scales) the
+composites decompose into the primitives, so call sites stay uniform;
+visible downgrades tally ``fallbacks``.  See docs/kernels.md.
+
 Mesh-aware path (residue-channel sharding): when a
 ``distributed.sharding.use_digit_sharding`` context is installed and the
 profile's digit count divides the digit mesh axis, the three primitives
@@ -50,18 +60,32 @@ __all__ = [
     "resolve_backend",
     "set_default_backend",
     "default_interpret",
+    "is_fused",
     "OpCounts",
     "count_ops",
     "trace_op_counts",
     "convert",
     "matmul",
     "normalize",
+    "fused_encode_matmul",
+    "fused_matmul_normalize",
+    "fused_dot",
 ]
 
-#: reference        — pure jnp (works everywhere; exactness oracle)
-#: pallas           — compiled Pallas TPU kernels (interpret auto on CPU)
-#: pallas_interpret — Pallas kernels forced through the interpreter
-BACKENDS = ("reference", "pallas", "pallas_interpret")
+#: reference              — pure jnp (works everywhere; exactness oracle)
+#: pallas                 — compiled Pallas TPU kernels (interpret auto on CPU)
+#: pallas_interpret       — Pallas kernels forced through the interpreter
+#: pallas_fused           — pallas + the fused composite kernels
+#:                          (kernels/rns_fused) at the fused_* call sites
+#: pallas_fused_interpret — same, forced through the interpreter
+BACKENDS = ("reference", "pallas", "pallas_interpret", "pallas_fused",
+            "pallas_fused_interpret")
+
+#: the per-primitive (convert/matmul/normalize) behaviour of a fused
+#: backend is its unfused pallas equivalent; only the fused_* composite
+#: entry points below change what actually runs.
+_FUSED_TO_UNFUSED = {"pallas_fused": "pallas",
+                     "pallas_fused_interpret": "pallas_interpret"}
 
 _state = threading.local()      # per-thread op-counter stacks
 _default_backend = "auto"       # process-wide (module global)
@@ -100,20 +124,51 @@ def default_interpret() -> bool:
     return jax.default_backend() == "cpu"
 
 
+def is_fused(name: str | None = None) -> bool:
+    """Whether the (resolved) backend routes composites through the
+    fused kernels."""
+    return resolve_backend(name) in _FUSED_TO_UNFUSED
+
+
+def fusion_active(profile, backend: str | None = None) -> bool:
+    """Would the composites actually launch fused kernels here?
+
+    False under a digit-sharding context that splits this profile: the
+    shard_map bodies own the layout there, so callers should keep their
+    unfused structure (e.g. ``rns_multi_dot``'s shared conversion)
+    instead of asking a composite that would only decompose."""
+    if not is_fused(backend):
+        return False
+    ds, _ = _digit_ctx(profile)
+    return ds is None
+
+
 def _interpret_for(backend: str) -> bool | None:
     # "pallas" lets the wrapper consult default_interpret(); the forced
-    # variant pins the interpreter regardless of platform.
-    return True if backend == "pallas_interpret" else None
+    # variants pin the interpreter regardless of platform.
+    if backend in ("pallas_interpret", "pallas_fused_interpret"):
+        return True
+    return None
 
 
 # ------------------------------------------------------------ counters ----
 @dataclasses.dataclass(eq=False)  # identity semantics: counters nest
 class OpCounts:
-    """Primitive tallies (trace-time; one per call site reached)."""
+    """Primitive tallies (trace-time; one per call site reached).
+
+    A fused composite tallies its constituent logical ops (a fused
+    encode+matmul is still one convert and one matmul — the structural
+    deferred-normalization claims stay backend-independent) PLUS one
+    ``fused`` entry per composite kernel launch.  ``fallbacks`` counts
+    requested-backend downgrades (e.g. a normalize whose inv_scale
+    escapes float32 range), which used to masquerade as pallas ops.
+    """
 
     converts: int = 0
     matmuls: int = 0
     normalizes: int = 0
+    fused: int = 0
+    fallbacks: int = 0
 
     @property
     def normalizes_per_matmul(self) -> float:
@@ -300,16 +355,15 @@ def convert(profile, x, scale, *, bits: int = 16, backend: str | None = None):
 
     _tally("converts")
     be = resolve_backend(backend)
+    be = _FUSED_TO_UNFUSED.get(be, be)
     ds, p = _digit_ctx(profile)
     if p is None:
         p = get_profile(profile) if isinstance(profile, str) else profile
     if ds is not None:
         return _sharded_convert(p, x, scale, bits, ds)
-    # per-sequence grids (mask-aware absmax) carry a non-scalar scale; the
-    # Pallas conversion kernel takes one scalar, so those fall back to the
-    # reference path regardless of the requested backend
-    if be != "reference" and jnp.ndim(scale) > 0:
-        be = "reference"
+    # per-sequence grids (mask-aware absmax, non-scalar scales) run through
+    # the Pallas kernel too since the scale became a streamed operand —
+    # the old silent reference fallback is gone
     if be == "reference":
         from repro.core.quantize import quantize_with_scale
         from repro.core.rns import encode_int32
@@ -327,6 +381,7 @@ def matmul(profile, a_res, b_res, *, backend: str | None = None):
     """Digit-sliced modular matmul: [K,...,M,D] @ [K,D,N] -> [K,...,M,N]."""
     _tally("matmuls")
     be = resolve_backend(backend)
+    be = _FUSED_TO_UNFUSED.get(be, be)
     ds, p = _digit_ctx(profile)
     if ds is not None:
         return _sharded_matmul(p, a_res, b_res, ds)
@@ -351,14 +406,16 @@ def normalize(profile, res, *, inv_scale: float = 1.0,
     """
     _tally("normalizes")
     be = resolve_backend(backend)
+    be = _FUSED_TO_UNFUSED.get(be, be)
     ds, p = _digit_ctx(profile)
     if ds is not None:
         return _sharded_normalize(p, res, inv_scale, dtype, ds)
     # the Pallas kernel reconstructs unscaled values; scales outside the
     # float32 range (deep M_f^frac_exp deferral) would under/overflow the
-    # post-multiply, so those decodes take the reference path regardless
-    if be != "reference" and inv_scale != 1.0 and not (
-            2.0**-126 <= abs(inv_scale) <= 2.0**127):
+    # post-multiply, so those decodes take the reference path — visibly
+    # (the fallback counter), not masquerading as a pallas op
+    if be != "reference" and not _inv_scale_in_f32(inv_scale):
+        _tally("fallbacks")
         be = "reference"
     if be == "reference":
         from repro.core import mrc
@@ -367,6 +424,133 @@ def normalize(profile, res, *, inv_scale: float = 1.0,
     from repro.kernels.rns_normalize.ops import rns_normalize
 
     out = rns_normalize(profile, res, interpret=_interpret_for(be))
+    if inv_scale != 1.0:
+        out = out * jnp.asarray(inv_scale, out.dtype)
+    return out.astype(dtype)
+
+
+# ------------------------------------------------- fused composites ----
+def _inv_scale_in_f32(inv_scale: float) -> bool:
+    return inv_scale == 1.0 or (2.0**-126 <= abs(inv_scale) <= 2.0**127)
+
+
+def _fused_scale_ok(x, scale) -> bool:
+    """Fused kernels take at most one scale per activation ROW: a scalar,
+    or a keepdims shape with a broadcast last dim (per-sequence grids)."""
+    if jnp.ndim(scale) == 0:
+        return True
+    xs, ss = jnp.shape(x), jnp.shape(scale)
+    return (len(ss) == len(xs) and ss[-1] == 1
+            and all(a in (1, b) for a, b in zip(ss, xs)))
+
+
+def _get_p(profile):
+    from repro.core.moduli import get_profile
+
+    return get_profile(profile) if isinstance(profile, str) else profile
+
+
+def fused_encode_matmul(profile, x, scale, w_res, *, bits: int = 16,
+                        backend: str | None = None):
+    """Forward conversion fused into the digit matmul.
+
+    ``x [..., D]`` floats + ``w_res [K, D, N]`` weight residues ->
+    ``[K, ..., N]`` residues; the activation residues never materialize
+    in HBM.  Tallies one convert + one matmul (the logical ops are still
+    performed) plus one ``fused``.  Decomposes into the separate
+    primitives when the backend is not fused, when a digit-sharding
+    context routes through shard_map, or when the scale is not row-
+    foldable — the latter downgrades count as ``fallbacks``.
+    """
+    be = resolve_backend(backend)
+    ds, p = _digit_ctx(profile)
+    if p is None:
+        p = _get_p(profile)
+    fuse = ds is None and be in _FUSED_TO_UNFUSED
+    if fuse and not _fused_scale_ok(x, scale):
+        _tally("fallbacks")
+        fuse = False
+    if not fuse:
+        ub = _FUSED_TO_UNFUSED.get(be, be)
+        res = convert(p, x, scale, bits=bits, backend=ub)
+        return matmul(p, res, w_res, backend=ub)
+    _tally("converts")
+    _tally("matmuls")
+    _tally("fused")
+    from repro.kernels.rns_fused.ops import rns_fused_encode_matmul
+
+    return rns_fused_encode_matmul(p, x, scale, w_res, bits=bits,
+                                   interpret=_interpret_for(be))
+
+
+def fused_matmul_normalize(profile, a_res, b_res, *, inv_scale: float = 1.0,
+                           backend: str | None = None, dtype=jnp.float32):
+    """Digit matmul fused with THE MRC normalization.
+
+    ``a_res [K, ..., D]`` @ ``b_res [K, D, N]`` -> ``[..., N]`` floats
+    times ``inv_scale``; the [K, ..., N] int32 accumulator never reaches
+    HBM.  Tallies one matmul + one normalize plus one ``fused``.
+    """
+    be = resolve_backend(backend)
+    ds, p = _digit_ctx(profile)
+    if p is None:
+        p = _get_p(profile)
+    fuse = ds is None and be in _FUSED_TO_UNFUSED
+    # an out-of-range inv_scale decomposes WITHOUT tallying a fallback
+    # here: normalize() itself records the visible downgrade
+    fuse = fuse and _inv_scale_in_f32(inv_scale)
+    if not fuse:
+        ub = _FUSED_TO_UNFUSED.get(be, be)
+        res = matmul(p, a_res, b_res, backend=ub)
+        return normalize(p, res, inv_scale=inv_scale, backend=ub, dtype=dtype)
+    _tally("matmuls")
+    _tally("normalizes")
+    _tally("fused")
+    from repro.kernels.rns_fused.ops import rns_fused_matmul_normalize
+
+    out = rns_fused_matmul_normalize(p, a_res, b_res,
+                                     interpret=_interpret_for(be))
+    if inv_scale != 1.0:
+        out = out * jnp.asarray(inv_scale, out.dtype)
+    return out.astype(dtype)
+
+
+def fused_dot(profile, x, scale, w_res, *, bits: int = 16,
+              inv_scale: float = 1.0, backend: str | None = None,
+              dtype=jnp.float32, shared_encode: bool = False):
+    """The whole Fig. 5 pipeline in one kernel: encode -> digit matmul ->
+    MRC normalize.  Floats in, floats out (times ``inv_scale``); residues
+    only ever exist in VMEM.  Tallies convert + matmul + normalize plus
+    one ``fused``.
+
+    ``shared_encode``: the activation's forward conversion is logically
+    shared with a previous composite over the same ``x`` in this
+    expression (``rns_multi_dot``'s one-conversion-per-block contract) —
+    the kernel still re-quantizes in VMEM (free vs HBM), but the
+    structural ``converts`` tally stays backend-independent."""
+    be = resolve_backend(backend)
+    ds, p = _digit_ctx(profile)
+    if p is None:
+        p = _get_p(profile)
+    fuse = ds is None and be in _FUSED_TO_UNFUSED
+    if fuse and not _fused_scale_ok(x, scale):
+        _tally("fallbacks")
+        fuse = False
+    fuse = fuse and _inv_scale_in_f32(inv_scale)   # normalize() tallies
+    if not fuse:
+        ub = _FUSED_TO_UNFUSED.get(be, be)
+        res = convert(p, x, scale, bits=bits, backend=ub)
+        out = matmul(p, res, w_res, backend=ub)
+        return normalize(p, out, inv_scale=inv_scale, backend=ub, dtype=dtype)
+    if not shared_encode:
+        _tally("converts")
+    _tally("matmuls")
+    _tally("normalizes")
+    _tally("fused")
+    from repro.kernels.rns_fused.ops import rns_fused_dot
+
+    out = rns_fused_dot(p, x, scale, w_res, bits=bits,
+                        interpret=_interpret_for(be))
     if inv_scale != 1.0:
         out = out * jnp.asarray(inv_scale, out.dtype)
     return out.astype(dtype)

@@ -53,7 +53,8 @@ class RnsDotConfig:
     qw: int = 16            # weight fixed-point bits
     qg: int = 16            # gradient fixed-point bits (backward)
     # execution backend for all three primitives (see core/dispatch.py):
-    # "auto" | "reference" | "pallas" | "pallas_interpret".  None defers
+    # "auto" | "reference" | "pallas" | "pallas_interpret" |
+    # "pallas_fused" | "pallas_fused_interpret".  None defers
     # to the use_pallas flag (reference unless use_pallas); an explicit
     # value always wins, so overrides can force the reference oracle even
     # on configs built with use_pallas=True.
@@ -165,10 +166,26 @@ def _res_matmul(cfg: RnsDotConfig, be: str, a_res, b_res):
     return _sp_constrain(cfg, y_res, "act")
 
 
+def _fused_path(cfg: RnsDotConfig, be: str) -> bool:
+    # the fused kernels don't emit slice-parallel sharding constraints
+    # (residues never leave VMEM, so there is nothing to constrain) —
+    # slice_parallel configs keep the per-primitive path, and so does a
+    # digit-sharded mesh context (shard_map owns that layout; keeping
+    # the unfused structure preserves the shared conversions there)
+    return dispatch.fusion_active(cfg.profile, be) and not cfg.slice_parallel
+
+
 def _rns_matmul_float(cfg: RnsDotConfig, x, w, qa: int, qb: int):
     """Non-differentiable float->float RNS matmul core."""
     _check_capacity(cfg, x.shape[-1], qa, qb)
     be = cfg.resolved_backend()
+    if _fused_path(cfg, be):
+        # ONE kernel: encode -> digit matmul -> MRC normalize; activation
+        # residues and the int32 accumulator never round-trip HBM
+        sx = absmax_scale(x, qa)
+        b_res, sw = _encode_operand(cfg, w, qb, be)
+        y = dispatch.fused_dot(cfg.profile, x, sx, b_res, bits=qa, backend=be)
+        return y * (1.0 / (sx * sw))
     # NOTE §Perf rns iter 6: pinning the residue sharding (so reshards land
     # on the bf16 encode input) made XLA fully replicate the widest residue
     # planes instead — refuted, reverted.  Moving residues off the wire
@@ -231,6 +248,20 @@ def _rns_multi_impl(cfg: RnsDotConfig, x, ws):
     """
     be = cfg.resolved_backend()
     _check_capacity(cfg, x.shape[-1], cfg.qx, cfg.qw)
+    if _fused_path(cfg, be):
+        # the shared grid survives fusion: every weight's kernel re-derives
+        # the SAME absmax scale (XLA CSEs the reduction), so numerics are
+        # identical to the shared-conversion path while the activation
+        # residues stay in VMEM.  shared_encode keeps the structural
+        # converts tally at one per block, like the unfused path.
+        sx = absmax_scale(x, cfg.qx)
+        outs = []
+        for i, w in enumerate(ws):
+            b_res, sw = _encode_operand(cfg, w, cfg.qw, be)
+            y = dispatch.fused_dot(cfg.profile, x, sx, b_res, bits=cfg.qx,
+                                   backend=be, shared_encode=i > 0)
+            outs.append(y * (1.0 / (sx * sw)))
+        return tuple(outs)
     a_res, sx = _encode_operand(cfg, x, cfg.qx, be)
     outs = []
     for w in ws:

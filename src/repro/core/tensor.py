@@ -51,6 +51,9 @@ __all__ = [
     "rt_renormalize",
     "rt_device_put",
     "rt_digit_sharding",
+    "rt_encode_matmul",
+    "rt_matmul_decode",
+    "rt_dot",
     "matmul_out_bits",
     "needs_renormalize",
 ]
@@ -217,17 +220,102 @@ def rt_matmul(a: RnsTensor, w: RnsTensor, *, backend: str | None = None,
     """
     if a.profile != w.profile:
         raise ValueError(f"profile mismatch: {a.profile} vs {w.profile}")
+    a = _matmul_ledger(a, w, backend=backend, renorm_bits=renorm_bits)
     D = a.shape[-1]
-    if matmul_out_bits(a, w, D) > a.rns_profile.signed_bits - _SAFETY_BITS:
+    digits = dispatch.matmul(a.profile, a.digits, w.digits, backend=backend)
+    return RnsTensor(digits, a.scale * w.scale, a.profile,
+                     matmul_out_bits(a, w, D), a.frac_exp + w.frac_exp)
+
+
+def _matmul_ledger(a: RnsTensor, w: RnsTensor, *, backend, renorm_bits):
+    """The shared pre-matmul overflow check: renormalize ``a`` once if the
+    product summation would escape the exact range, raise if even that
+    cannot fit."""
+    D = a.shape[-1]
+    lim = a.rns_profile.signed_bits - _SAFETY_BITS
+    if matmul_out_bits(a, w, D) > lim:
         a = rt_renormalize(a, bits=renorm_bits, backend=backend)
-        if matmul_out_bits(a, w, D) > a.rns_profile.signed_bits - _SAFETY_BITS:
+        if matmul_out_bits(a, w, D) > lim:
             raise ValueError(
                 f"profile {a.profile} cannot hold an exact {D}-term product "
                 f"summation of {a.mag_bits:.0f}+{w.mag_bits:.0f}-bit operands "
                 f"even after renormalization; use a wider profile")
-    digits = dispatch.matmul(a.profile, a.digits, w.digits, backend=backend)
-    return RnsTensor(digits, a.scale * w.scale, a.profile,
-                     matmul_out_bits(a, w, D), a.frac_exp + w.frac_exp)
+    return a
+
+
+# ------------------------------------------------------- fused entries ---
+def _encode_out_bits(p, bits: int, w: RnsTensor, D: int) -> float:
+    """Ledger bound of encode(x, bits) @ w — ONE home for the check the
+    fused entry points share (same formula as matmul_out_bits on a fresh
+    ``bits``-grid encode).  Raises if the exact range would overflow."""
+    out_bits = float(bits - 1) + w.mag_bits + math.log2(max(D, 1))
+    if out_bits > p.signed_bits - _SAFETY_BITS:
+        raise ValueError(
+            f"profile {p.name} cannot hold an exact {D}-term product "
+            f"summation of {bits - 1}+{w.mag_bits:.0f}-bit operands; use a "
+            f"wider profile or fewer bits")
+    return out_bits
+
+
+def rt_encode_matmul(x, w: RnsTensor, *, bits: int = 16, scale=None,
+                     backend: str | None = None) -> RnsTensor:
+    """Fused head of a chain: forward conversion + digit matmul.
+
+    Identical numerics and ledger bookkeeping to ``rt_matmul(rt_encode(x),
+    w)``; with a fused backend the activation residues never reach HBM
+    (the paper's edge-of-array converter feeding the PAC array).  Other
+    backends decompose inside dispatch, so call sites stay uniform.
+    """
+    p = get_profile(w.profile)
+    if scale is None:
+        scale = absmax_scale(x, bits)
+    out_bits = _encode_out_bits(p, bits, w, x.shape[-1])
+    digits = dispatch.fused_encode_matmul(p.name, x, scale, w.digits,
+                                          bits=bits, backend=backend)
+    return RnsTensor(digits, jnp.asarray(scale, jnp.float32) * w.scale,
+                     p.name, out_bits, w.frac_exp)
+
+
+def rt_matmul_decode(a: RnsTensor, w: RnsTensor, *, backend: str | None = None,
+                     renorm_bits: int = 16, dtype=jnp.float32):
+    """Fused tail of a chain: digit matmul + THE one MRC normalization.
+
+    Bit-identical to ``rt_decode(rt_matmul(a, w))``; with a fused backend
+    the [K, ..., N] product residues never reach HBM — the MRC runs on
+    the accumulator tile while it is still in VMEM.
+    """
+    if a.profile != w.profile:
+        raise ValueError(f"profile mismatch: {a.profile} vs {w.profile}")
+    a = _matmul_ledger(a, w, backend=backend, renorm_bits=renorm_bits)
+    p = a.rns_profile
+    fe = a.frac_exp + w.frac_exp
+    inv = 1.0 / float(p.M_f) ** fe if fe else 1.0
+    y = dispatch.fused_matmul_normalize(a.profile, a.digits, w.digits,
+                                        inv_scale=inv, backend=backend,
+                                        dtype=dtype)
+    return y / (a.scale * w.scale).astype(dtype)
+
+
+def rt_dot(x, w: RnsTensor, *, bits: int = 16, scale=None,
+           backend: str | None = None, dtype=jnp.float32,
+           shared_encode: bool = False):
+    """Single-op fused pipeline: encode -> digit matmul -> normalize.
+
+    Float activations in, float values out; the residues only ever exist
+    in VMEM on a fused backend.  Equivalent to
+    ``rt_decode(rt_matmul(rt_encode(x), w))`` for capacity-safe chains.
+    ``shared_encode`` forwards to :func:`dispatch.fused_dot` — pass True
+    when ``x``'s conversion was already tallied by a sibling composite.
+    """
+    p = get_profile(w.profile)
+    if scale is None:
+        scale = absmax_scale(x, bits)
+    _encode_out_bits(p, bits, w, x.shape[-1])   # raises on overflow
+    inv = 1.0 / float(p.M_f) ** w.frac_exp if w.frac_exp else 1.0
+    y = dispatch.fused_dot(p.name, x, scale, w.digits, bits=bits,
+                           inv_scale=inv, backend=backend, dtype=dtype,
+                           shared_encode=shared_encode)
+    return y / (jnp.asarray(scale, jnp.float32) * w.scale).astype(dtype)
 
 
 def rt_mul(a: RnsTensor, b: RnsTensor, *, backend: str | None = None,

@@ -1,0 +1,233 @@
+"""Block-size autotuner for the Pallas kernel wrappers.
+
+The kernel wrappers used to hardcode their tile sizes (``bm/bn/bk`` for
+the matmul-shaped kernels, ``bt`` for the elementwise pipelines).  Good
+tiles depend on the machine and on the problem shape, so the wrappers now
+resolve ``None`` block arguments here:
+
+  * lookups are keyed on ``(kind, profile, shape-bucket, backend)`` —
+    shapes are bucketed to powers of two, so a serving engine cycling
+    through ragged batch sizes hits ONE cache row per bucket;
+  * tuned rows persist to a JSON cache (``REPRO_AUTOTUNE_CACHE`` or
+    ``~/.cache/repro_rns/autotune.json``) so a machine is measured once;
+  * :func:`get_blocks` NEVER measures — it returns the tuned row or the
+    defaults.  Measurement is the explicit :func:`tune` call (run it from
+    ``benchmarks/bench_kernels.py`` or offline); keeping timing out of
+    the hot path means trace-time lookups stay pure python.
+
+Cache file format (versioned)::
+
+    {"version": 1,
+     "entries": {"rns_matmul|rns9|128x512x128|cpu":
+                 {"blocks": {"bm": 128, "bn": 128, "bk": 512},
+                  "us": 123.4}}}
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+
+import jax
+
+__all__ = ["get_blocks", "tune", "shape_bucket", "pow2_at_least",
+           "cache_path", "clear_cache", "DEFAULTS", "CANDIDATES"]
+
+_MATMUL_DEFAULTS = {"bm": 128, "bn": 128, "bk": 512}
+_TILE_DEFAULTS = {"bt": 1024}
+
+#: per-kernel-kind hardcoded fallbacks (what the wrappers shipped with)
+DEFAULTS: dict[str, dict[str, int]] = {
+    "rns_matmul": _MATMUL_DEFAULTS,
+    "rns_fused_encode_matmul": _MATMUL_DEFAULTS,
+    "rns_fused_matmul_normalize": _MATMUL_DEFAULTS,
+    "rns_fused_dot": _MATMUL_DEFAULTS,
+    "rns_convert": _TILE_DEFAULTS,
+    "rns_normalize": _TILE_DEFAULTS,
+}
+
+#: the search space :func:`tune` sweeps.  bm/bn stay MXU-aligned
+#: multiples of the sublane/lane tile; bk trades VMEM residency against
+#: modular-reduction frequency (every step is one ``rem``).
+CANDIDATES: dict[str, list[dict[str, int]]] = {
+    "rns_matmul": [
+        {"bm": bm, "bn": bn, "bk": bk}
+        for bm in (64, 128) for bn in (128, 256) for bk in (256, 512)
+    ],
+    "rns_convert": [{"bt": t} for t in (512, 1024, 2048)],
+    "rns_normalize": [{"bt": t} for t in (256, 512, 1024)],
+}
+for _kind in ("rns_fused_encode_matmul", "rns_fused_matmul_normalize",
+              "rns_fused_dot"):
+    CANDIDATES[_kind] = CANDIDATES["rns_matmul"]
+
+_lock = threading.Lock()
+_cache: dict[str, dict] | None = None      # loaded lazily, saved on tune
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro_rns",
+                     "autotune.json"))
+
+
+def pow2_at_least(n: int, lo: int = 8) -> int:
+    """Smallest power of two >= max(n, lo) — THE bucketing rule, shared
+    with the wrappers' M padding so tuned rows land on the exact buckets
+    the kernels compile for."""
+    p = lo
+    while p < n:
+        p <<= 1
+    return p
+
+
+def shape_bucket(shape) -> tuple[int, ...]:
+    """Power-of-two bucket per dim — the recompile-granularity the
+    wrappers already pad to, so one tuned row covers the bucket."""
+    return tuple(pow2_at_least(int(d), 8) for d in shape)
+
+
+def _backend_tag(backend: str | None) -> str:
+    return backend or jax.default_backend()
+
+
+def _key(kind: str, profile, shape, backend: str | None) -> str:
+    name = getattr(profile, "name", profile)
+    dims = "x".join(str(d) for d in shape_bucket(shape))
+    return f"{kind}|{name}|{dims}|{_backend_tag(backend)}"
+
+
+def _load() -> dict[str, dict]:
+    global _cache
+    with _lock:
+        if _cache is None:
+            _cache = {}
+            try:
+                with open(cache_path()) as f:
+                    data = json.load(f)
+                if data.get("version") == 1:
+                    _cache = dict(data.get("entries", {}))
+            except (OSError, ValueError):
+                pass
+        return _cache
+
+
+def _save() -> None:
+    path = cache_path()
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with _lock:
+        data = {"version": 1, "entries": _cache or {}}
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(data, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+def clear_cache() -> None:
+    """Drop the in-memory table (tests repoint REPRO_AUTOTUNE_CACHE)."""
+    global _cache
+    with _lock:
+        _cache = None
+
+
+def get_blocks(kind: str, profile, shape, backend: str | None = None
+               ) -> dict[str, int]:
+    """Tuned blocks for this (kind, profile, shape-bucket, backend), or
+    the hardcoded defaults.  Pure lookup — never measures."""
+    out = dict(DEFAULTS[kind])
+    entry = _load().get(_key(kind, profile, shape, backend))
+    if entry:
+        out.update(entry["blocks"])
+    return out
+
+
+def tune(kind: str, profile, shape, backend: str | None = None, *,
+         bench_fn=None, repeats: int = 3) -> dict[str, int]:
+    """Measure the candidate tilings and persist the winner.
+
+    ``bench_fn(blocks) -> seconds`` overrides the built-in micro-bench
+    (tests inject a deterministic cost model; CPU-interpret smoke runs
+    exercise the full measure→persist path even though interpreter wall
+    times are only a proxy for real-TPU tile quality).
+    """
+    if bench_fn is None:
+        bench_fn = _default_bench(kind, profile, shape, backend)
+    best, best_t = None, None
+    for cand in CANDIDATES[kind]:
+        t = min(bench_fn(dict(cand)) for _ in range(repeats))
+        if best_t is None or t < best_t:
+            best, best_t = dict(cand), t
+    entries = _load()
+    with _lock:
+        entries[_key(kind, profile, shape, backend)] = {
+            "blocks": best, "us": float(best_t * 1e6)}
+    _save()
+    return dict(DEFAULTS[kind], **best)
+
+
+def _default_bench(kind: str, profile, shape, backend: str | None):
+    """Wall-clock micro-bench of the real wrapper on random operands."""
+    import numpy as np
+
+    from repro.core.moduli import get_profile
+    from repro.core.rns import encode_int32
+
+    p = get_profile(profile) if isinstance(profile, str) else profile
+    rng = np.random.default_rng(0)
+
+    if kind in ("rns_convert", "rns_normalize"):
+        (T,) = shape
+        if kind == "rns_convert":
+            from repro.kernels.rns_convert.ops import rns_convert
+
+            x = jax.numpy.asarray(
+                rng.standard_normal(T).astype(np.float32))
+
+            def run(blocks):
+                return rns_convert(p.name, x, np.float32(37.5), **blocks)
+        else:
+            from repro.kernels.rns_normalize.ops import rns_normalize
+
+            res = jax.numpy.asarray(encode_int32(
+                p, rng.integers(-2**20, 2**20, T).astype(np.int32)))
+
+            def run(blocks):
+                return rns_normalize(p.name, res, **blocks)
+    else:
+        M, D, N = shape
+        a = rng.integers(-2**11, 2**11, (M, D)).astype(np.int32)
+        b = rng.integers(-2**11, 2**11, (D, N)).astype(np.int32)
+        ra = jax.numpy.asarray(encode_int32(p, a))
+        rb = jax.numpy.asarray(encode_int32(p, b))
+        if kind == "rns_matmul":
+            from repro.kernels.rns_matmul.ops import rns_matmul
+
+            def run(blocks):
+                return rns_matmul(p.name, ra, rb, **blocks)
+        elif kind == "rns_fused_matmul_normalize":
+            from repro.kernels.rns_fused.ops import rns_fused_matmul_normalize
+
+            def run(blocks):
+                return rns_fused_matmul_normalize(p.name, ra, rb, **blocks)
+        else:
+            from repro.kernels.rns_fused.ops import (
+                rns_fused_dot, rns_fused_encode_matmul)
+
+            xf = jax.numpy.asarray(a.astype(np.float32))
+            s = np.float32(1.0)
+            fn = (rns_fused_dot if kind == "rns_fused_dot"
+                  else rns_fused_encode_matmul)
+
+            def run(blocks):
+                return fn(p.name, xf, s, rb, **blocks)
+
+    def bench(blocks) -> float:
+        jax.block_until_ready(run(blocks))       # compile outside the clock
+        t0 = time.perf_counter()
+        jax.block_until_ready(run(blocks))
+        return time.perf_counter() - t0
+
+    return bench

@@ -21,10 +21,12 @@ from repro.kernels import compiler_params
 from repro.core.rns import tables
 
 
-def _kernel(x_ref, s_ref, o_ref, *, profile, qmax: int):
+def _kernel(x_ref, s_ref, o_ref, *, profile, qmax: int, per_elem: bool):
     t = tables(profile)
     x = x_ref[...]
-    s = s_ref[0, 0]
+    # per_elem: a [bt] scale tile rides next to the x tile (per-sequence
+    # quantization grids broadcast to elements); else one scalar in VMEM
+    s = s_ref[...] if per_elem else s_ref[0, 0]
     v = jnp.clip(jnp.round(x * s), -qmax, qmax).astype(jnp.int32)
     for j, m in enumerate(t.moduli):
         o_ref[j] = jnp.remainder(v, jnp.int32(int(m))).astype(o_ref.dtype)
@@ -37,17 +39,21 @@ def rns_convert_tiles(
     x, scale, *, profile, bits: int = 16, bt: int = 1024,
     interpret: bool = False, out_dtype=jnp.int8,
 ):
-    """x [T] float32, scale scalar -> [K, T] residues."""
+    """x [T] float32, scale scalar or [T] -> [K, T] residues."""
     t = tables(profile)
     K = t.profile.n_digits
     (T,) = x.shape
     grid = (T // bt,)
+    per_elem = scale.ndim > 0
+    s_spec = (pl.BlockSpec((bt,), lambda i: (i,)) if per_elem
+              else pl.BlockSpec((1, 1), lambda i: (0, 0)))
     return pl.pallas_call(
-        functools.partial(_kernel, profile=profile, qmax=2 ** (bits - 1) - 1),
+        functools.partial(_kernel, profile=profile, qmax=2 ** (bits - 1) - 1,
+                          per_elem=per_elem),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bt,), lambda i: (i,)),
-            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            s_spec,
         ],
         out_specs=pl.BlockSpec((K, bt), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((K, T), out_dtype),
@@ -55,4 +61,4 @@ def rns_convert_tiles(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,
-    )(x, scale.reshape(1, 1))
+    )(x, scale if per_elem else scale.reshape(1, 1))

@@ -9,21 +9,40 @@ from repro.kernels.rns_convert.kernel import rns_convert_tiles
 
 
 def rns_convert(
-    profile, x, scale, *, bits: int = 16, bt: int = 1024,
+    profile, x, scale, *, bits: int = 16, bt: int | None = None,
     interpret: bool | None = None, out_dtype=jnp.int8,
 ):
-    """x [...] float32, scale scalar -> [K, ...] residues."""
+    """x [...] float32, scale scalar or broadcastable -> [K, ...] residues.
+
+    ``scale`` may be any shape that broadcasts against ``x`` (the
+    reference rule is ``round(x * scale)``), so per-sequence quantization
+    grids ([B, 1, 1] rows from mask-aware absmax) run through the kernel
+    instead of falling back to the reference path.  Non-scalar scales are
+    broadcast to ``x``'s shape and streamed tile-by-tile next to ``x``.
+
+    The tile size is FIXED (``bt``) with zero-padding up to a ``bt``
+    multiple — one compiled kernel per padded-size bucket, never one per
+    distinct length (see rns_normalize/ops.py for the shared rationale).
+    """
     if interpret is None:
         interpret = dispatch.default_interpret()
     shape = x.shape
     flat = x.reshape(-1).astype(jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32)
+    if scale.ndim:
+        scale = jnp.broadcast_to(scale, shape).reshape(-1)
     T = flat.shape[0]
-    bt_eff = min(bt, T) if T % min(bt, T) == 0 else T
-    pad = (-T) % bt_eff
+    if bt is None:
+        from repro.kernels import autotune
+
+        bt = autotune.get_blocks("rns_convert", profile, (T,))["bt"]
+    pad = (-T) % bt
     if pad:
         flat = jnp.pad(flat, (0, pad))
+        if scale.ndim:
+            scale = jnp.pad(scale, (0, pad))
     out = rns_convert_tiles(
-        flat, jnp.asarray(scale, jnp.float32), profile=profile, bits=bits,
-        bt=bt_eff, interpret=interpret, out_dtype=out_dtype,
+        flat, scale, profile=profile, bits=bits,
+        bt=bt, interpret=interpret, out_dtype=out_dtype,
     )
     return out[:, :T].reshape((out.shape[0],) + shape)

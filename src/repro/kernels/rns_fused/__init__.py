@@ -1,0 +1,3 @@
+"""Fused residue-datapath kernels: encode -> digit matmul -> normalize
+as single Pallas passes (the paper's Fig. 5 pipeline without the HBM
+round-trips the three separate kernels paid between stages)."""

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles: the UNFUSED convert -> matmul -> normalize chain.
+
+The fused kernels' exactness contract is "bit-identical to running the
+three stages separately", so the oracles are literally the composition of
+the stage references — no independent math to drift."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import mrc
+from repro.core.quantize import quantize_with_scale
+from repro.core.rns import encode_int32
+from repro.core.rns_matmul import rns_matmul_res
+
+
+def rns_fused_encode_matmul_ref(profile, x, scale, b_res, *, bits: int = 16):
+    """convert(x, scale) -> matmul: [K, ..., N] int32 residues."""
+    res = encode_int32(profile, quantize_with_scale(x, scale, bits))
+    return rns_matmul_res(profile, res, b_res)
+
+
+def rns_fused_matmul_normalize_ref(profile, a_res, b_res):
+    """matmul -> normalize: [..., N] float32 signed values (unscaled)."""
+    out = rns_matmul_res(profile, a_res, b_res)
+    return mrc.decode_float(profile, out, inv_scale=1.0, dtype=jnp.float32)
+
+
+def rns_fused_dot_ref(profile, x, scale, b_res, *, bits: int = 16):
+    """The full chain: convert -> matmul -> normalize."""
+    out = rns_fused_encode_matmul_ref(profile, x, scale, b_res, bits=bits)
+    return mrc.decode_float(profile, out, inv_scale=1.0, dtype=jnp.float32)

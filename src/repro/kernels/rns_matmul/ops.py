@@ -7,6 +7,7 @@ import numpy as np
 
 from repro.core import dispatch
 from repro.core.rns import tables
+from repro.kernels.autotune import pow2_at_least as _pow2_at_least
 from repro.kernels.rns_matmul.kernel import rns_matmul_tiles
 
 
@@ -21,17 +22,33 @@ def _pad_to(x, axis: int, mult: int):
 
 
 def rns_matmul(
-    profile, a_res, b_res, *, bm: int = 128, bn: int = 128, bk: int = 512,
-    interpret: bool | None = None,
+    profile, a_res, b_res, *, bm: int | None = None, bn: int | None = None,
+    bk: int | None = None, interpret: bool | None = None,
 ):
     """a_res [K, ..., M, D], b_res [K, D, N] residues -> [K, ..., M, N] int32.
 
     Zero-pads every dim to the BlockSpec tile multiples (exact: zero
     residues contribute nothing mod m) and flattens leading batch dims.
+
+    The M tile is always a multiple of 8 (TPU sublanes — ``min(bm, M)``
+    alone produced Mosaic-illegal block shapes that only ran in interpret
+    mode) and M is bucketed to the next power of two: mixed-batch callers
+    whose row counts land in one bucket reuse ONE compiled kernel instead
+    of keying a recompile on every distinct M.
     """
     if interpret is None:
         interpret = dispatch.default_interpret()
     t = tables(profile)
+    if bm is None or bn is None or bk is None:
+        from repro.kernels import autotune
+
+        blk = autotune.get_blocks(
+            "rns_matmul", t.profile.name,
+            (int(np.prod(a_res.shape[1:-1], dtype=np.int64)),
+             a_res.shape[-1], b_res.shape[-1]))
+        bm = bm if bm is not None else blk["bm"]
+        bn = bn if bn is not None else blk["bn"]
+        bk = bk if bk is not None else blk["bk"]
     moduli = jnp.asarray(np.asarray(t.moduli, np.int32))
     S = a_res.shape[0]
     D = a_res.shape[-1]
@@ -39,7 +56,7 @@ def rns_matmul(
     lead = a_res.shape[1:-1]
     a2 = a_res.reshape(S, -1, D)
     M = a2.shape[1]
-    bm_eff = min(bm, max(8, M))
+    bm_eff = min(bm, _pow2_at_least(M))
     a2 = _pad_to(_pad_to(a2, 1, bm_eff), 2, bk)
     b2 = _pad_to(_pad_to(b_res, 1, bk), 2, bn)
     out = rns_matmul_tiles(

@@ -9,6 +9,13 @@ paper sandwiches after the accumulator array.
 The MRC is the paper's "slow" O(K^2) op; it runs ONCE per output element
 (deferred normalization), so its cost is amortized over the whole product
 summation that produced the element.
+
+The tile-level helpers (:func:`mrc_digit_rows`, :func:`lex_ge`,
+:func:`mrc_float_tile`) are shape-agnostic — they operate on a python
+list of K same-shape residue blocks — so the fused matmul kernels
+(kernels/rns_fused) run the SAME reconstruction on their [bm, bn]
+accumulator tiles, which is what makes fused and unfused normalization
+bit-identical.
 """
 
 from __future__ import annotations
@@ -25,8 +32,8 @@ from repro.kernels import compiler_params
 from repro.core.rns import tables
 
 
-def _mrc_digits_rows(rows, t):
-    """rows: list of K [1, bt] int32 vectors -> list of K digit vectors."""
+def mrc_digit_rows(rows, t):
+    """rows: list of K same-shape int32 blocks -> list of K digit blocks."""
     K = len(rows)
     ms = [int(m) for m in t.moduli]
     r = list(rows)
@@ -40,7 +47,8 @@ def _mrc_digits_rows(rows, t):
     return digits
 
 
-def _lex_ge(digits, ref_digits):
+def lex_ge(digits, ref_digits):
+    """Lexicographic (most-significant-last) digits >= ref (elementwise)."""
     K = len(digits)
     ge = jnp.zeros_like(digits[0], dtype=jnp.bool_)
     eq = jnp.ones_like(digits[0], dtype=jnp.bool_)
@@ -51,24 +59,34 @@ def _lex_ge(digits, ref_digits):
     return ge | eq
 
 
-def _kernel(x_ref, o_ref, *, profile):
-    t = tables(profile)
-    K = t.profile.n_digits
+def mrc_float_tile(rows, t):
+    """Two-pass MRC + float32 reconstruction of K residue blocks.
+
+    Pass 1 detects the sign (X >= M/2 <=> negative), pass 2 re-runs the
+    MRC on the magnitude so the float reconstruction never cancels
+    against M.  Accumulation order (digit-ascending, float32) is the
+    contract shared with core/mrc.decode_float — keep them in lockstep.
+    """
+    K = len(rows)
     ms = [int(m) for m in t.moduli]
-    rows = [x_ref[j][None, :] for j in range(K)]
-    # pass 1: sign
-    digits = _mrc_digits_rows(rows, t)
-    neg = _lex_ge(digits, t.half_digits)
-    # negate to magnitude, pass 2
+    digits = mrc_digit_rows(rows, t)
+    neg = lex_ge(digits, t.half_digits)
     mag = [
         jnp.where(neg, jnp.remainder(jnp.int32(ms[j]) - rows[j], ms[j]), rows[j])
         for j in range(K)
     ]
-    mdig = _mrc_digits_rows(mag, t)
+    mdig = mrc_digit_rows(mag, t)
     acc = jnp.zeros(rows[0].shape, dtype=jnp.float32)
     for j in range(K):
         acc = acc + mdig[j].astype(jnp.float32) * jnp.float32(float(t.W_f64[j]))
-    o_ref[...] = jnp.where(neg, -acc, acc)[0]
+    return jnp.where(neg, -acc, acc)
+
+
+def _kernel(x_ref, o_ref, *, profile):
+    t = tables(profile)
+    K = t.profile.n_digits
+    rows = [x_ref[j][None, :] for j in range(K)]
+    o_ref[...] = mrc_float_tile(rows, t)[0]
 
 
 @functools.partial(jax.jit, static_argnames=("profile", "bt", "interpret"))

@@ -8,17 +8,31 @@ from repro.core import dispatch
 from repro.kernels.rns_normalize.kernel import rns_normalize_tiles
 
 
-def rns_normalize(profile, res, *, bt: int = 1024, interpret: bool | None = None):
-    """res [K, ...] int32 -> [...] float32 signed values (unscaled)."""
+def rns_normalize(profile, res, *, bt: int | None = None,
+                  interpret: bool | None = None):
+    """res [K, ...] int32 -> [...] float32 signed values (unscaled).
+
+    The tile size is FIXED (``bt``, autotuner default 1024) and ``T`` is
+    zero-padded up to a ``bt`` multiple: every length in a padded-size
+    bucket shares one compiled kernel (``rns_normalize_tiles._cache_size()``
+    stays 1 across ragged lengths), and VMEM block size is bounded by
+    ``bt`` no matter how large the tensor is.  The old behaviour —
+    collapsing the tile to ``T`` whenever ``T % bt != 0`` — compiled one
+    whole-array VMEM block (unbounded VMEM at large T) and a fresh kernel
+    per distinct length.
+    """
     if interpret is None:
         interpret = dispatch.default_interpret()
     K = res.shape[0]
     shape = res.shape[1:]
     flat = res.reshape(K, -1)
     T = flat.shape[1]
-    bt_eff = min(bt, T) if T % min(bt, T) == 0 else T
-    pad = (-T) % bt_eff
+    if bt is None:
+        from repro.kernels import autotune
+
+        bt = autotune.get_blocks("rns_normalize", profile, (T,))["bt"]
+    pad = (-T) % bt
     if pad:
         flat = jnp.pad(flat, ((0, 0), (0, pad)))
-    out = rns_normalize_tiles(flat, profile=profile, bt=bt_eff, interpret=interpret)
+    out = rns_normalize_tiles(flat, profile=profile, bt=bt, interpret=interpret)
     return out[:T].reshape(shape)

@@ -38,7 +38,7 @@ def _digit_mesh(args):
 def _bucketed(args, cfg, params):
     engine = Engine(params, cfg, ServeConfig(
         max_cache=args.prompt_len + args.new + 8, max_new_tokens=args.new,
-        mesh=_digit_mesh(args)))
+        rns_backend=args.rns_backend, mesh=_digit_mesh(args)))
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
     frontend = None
@@ -65,7 +65,8 @@ def _continuous(args, cfg, params):
     engine = ContinuousEngine(params, cfg, ServeConfig(
         max_cache=max_cache, max_new_tokens=args.new,
         page_size=args.page_size, max_seqs=args.max_seqs,
-        n_pages=args.n_pages, mesh=_digit_mesh(args)))
+        n_pages=args.n_pages, rns_backend=args.rns_backend,
+        mesh=_digit_mesh(args)))
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, (lens[i % len(lens)],)).astype(
         np.int32) for i in range(args.requests)]
@@ -96,6 +97,10 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--max-seqs", type=int, default=8)
     ap.add_argument("--n-pages", type=int, default=None)
+    ap.add_argument("--rns-backend", default=None,
+                    help="RNS execution backend override for either engine "
+                         "(reference|pallas|pallas_fused|...; pallas_fused "
+                         "runs the fused encode->matmul->normalize kernels)")
     ap.add_argument("--digit-shard", action="store_true",
                     help="shard RNS residue channels over all local "
                          "devices (either engine; needs an RNS arch "

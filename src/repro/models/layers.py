@@ -26,12 +26,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dispatch
 from repro.core.rns_matmul import RnsDotConfig, rns_dot, rns_multi_dot
 from repro.core.tensor import (
     RnsTensor,
     rt_decode,
+    rt_dot,
     rt_encode,
+    rt_encode_matmul,
     rt_matmul,
+    rt_matmul_decode,
     rt_mul,
 )
 
@@ -218,9 +222,33 @@ def mlp_rns_deferred(p, x, gated: bool, act: str, cfg: RnsDotConfig):
     Backward: float-reference vjp with straight-through quantizer grads
     (the per-op path's cfg.backward_rns RNS-backward is available by
     switching defer off for training steps that want it).
+
+    On a fused backend the same chain runs through the composite kernels:
+    wi is a fused encode+matmul (residues out, for the PAC gate product),
+    the gate branch is one fully-fused dot (its only consumer is the
+    float nonlinearity), and wo is a fused matmul+normalize — identical
+    numerics and slow-op budget, but neither the activation residues nor
+    the [K, ..., d] main-path accumulator ever round-trip HBM.
     """
     be = cfg.resolved_backend()
     xf = x.astype(jnp.float32)
+    if dispatch.fusion_active(cfg.profile, be) and not cfg.slice_parallel:
+        if gated:
+            hi = rt_encode_matmul(xf, _encode_weight(p["wi"], cfg),
+                                  bits=cfg.qx, backend=be)
+            # shared_encode: x's conversion was tallied by wi's composite
+            hg = rt_dot(xf, _encode_weight(p["wg"], cfg), bits=cfg.qx,
+                        backend=be, shared_encode=True)
+            g = _act(act)(hg)                                  # slow op (act)
+            gt = rt_encode(g, cfg.profile, bits=cfg.qx, backend=be)
+            hi = rt_mul(hi, gt, backend=be, renorm_bits=cfg.qx)
+        else:
+            a = _act(act)(rt_dot(xf, _encode_weight(p["wi"], cfg),
+                                 bits=cfg.qx, backend=be))     # slow op (act)
+            hi = rt_encode(a, cfg.profile, bits=cfg.qx, backend=be)
+        out = rt_matmul_decode(hi, _encode_weight(p["wo"], cfg), backend=be,
+                               renorm_bits=cfg.qx)             # THE normalize
+        return out.astype(x.dtype)
     xt = rt_encode(xf, cfg.profile, bits=cfg.qx, backend=be)   # 1 conversion
     hi = linear(p["wi"], xt, cfg)                              # stays residues
     if gated:

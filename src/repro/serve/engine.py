@@ -65,8 +65,11 @@ class ServeConfig:
     max_new_tokens: int = 32
     eos_id: int = -1            # -1 sentinel: never stops early
     cache_dtype: str = "float32"
-    # RNS execution policy overrides (None: keep the model config's)
-    rns_backend: str | None = None   # reference|pallas|pallas_interpret|auto
+    # RNS execution policy overrides (None: keep the model config's).
+    # "pallas_fused" routes the whole datapath — including ragged prefill
+    # with its per-sequence quantization grids — through the composite
+    # kernels (kernels/rns_fused); step stats gain nonzero rns_ops.fused.
+    rns_backend: str | None = None   # see core/dispatch.BACKENDS | auto
     rns_defer: bool | None = None    # residue-domain MLP chaining
     # residue-channel sharding: a jax Mesh whose ``digit_axis`` partitions
     # the RNS digit axis (one group of moduli per device; digits meet only
@@ -310,7 +313,9 @@ class ContinuousEngine:
         return dispatch.OpCounts(
             converts=d.converts + n_prefills * pf.converts,
             matmuls=d.matmuls + n_prefills * pf.matmuls,
-            normalizes=d.normalizes + n_prefills * pf.normalizes)
+            normalizes=d.normalizes + n_prefills * pf.normalizes,
+            fused=d.fused + n_prefills * pf.fused,
+            fallbacks=d.fallbacks + n_prefills * pf.fallbacks)
 
     def step(self) -> dict:
         """One scheduler step: admit/evict, prefill admits, decode all.

@@ -1,8 +1,16 @@
 import os
+import tempfile
 
 # Tests run on the single real CPU device; the 512-device farm is ONLY for
 # the dry-run process (launch/dryrun.py sets its own XLA_FLAGS).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# The suite's compile-count pins assume the wrappers' DEFAULT tile sizes;
+# a developer's tuned cache (~/.cache/repro_rns/autotune.json) must not
+# leak in.  Point the autotuner at a throwaway per-run path (the
+# autotune tests repoint it again via monkeypatch).
+os.environ["REPRO_AUTOTUNE_CACHE"] = os.path.join(
+    tempfile.mkdtemp(prefix="repro_autotune_test_"), "autotune.json")
 
 # hypothesis is an optional extra (pyproject [test]); in a minimal env the
 # suite must still collect — property tests skip via tests/_hypothesis_stub.

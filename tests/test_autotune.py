@@ -1,0 +1,92 @@
+"""Block-size autotuner: bucketing, lookup, measure -> persist -> reuse."""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import autotune
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path, monkeypatch):
+    path = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(path))
+    autotune.clear_cache()
+    yield path
+    autotune.clear_cache()
+
+
+def test_shape_bucket_pow2():
+    assert autotune.shape_bucket((1, 100, 512)) == (8, 128, 512)
+    assert autotune.shape_bucket((129,)) == (256,)
+    # bucketing is what keys the cache: nearby shapes share a row
+    k1 = autotune._key("rns_matmul", "rns9", (100, 500, 100), "cpu")
+    k2 = autotune._key("rns_matmul", "rns9", (128, 512, 128), "cpu")
+    assert k1 == k2
+
+
+def test_get_blocks_defaults_without_cache(tmp_cache):
+    blk = autotune.get_blocks("rns_matmul", "rns9", (64, 256, 64))
+    assert blk == {"bm": 128, "bn": 128, "bk": 512}
+    assert autotune.get_blocks("rns_normalize", "rns9", (100,)) == {"bt": 1024}
+    assert not tmp_cache.exists()      # pure lookup never writes
+
+
+def test_tune_picks_argmin_and_persists(tmp_cache):
+    """Injected cost model: tune must select its argmin and write the
+    versioned JSON row; a fresh in-memory cache then serves the row."""
+    want = {"bm": 64, "bn": 256, "bk": 256}
+
+    def fake_bench(blocks):
+        return 0.001 if blocks == want else 1.0
+
+    got = autotune.tune("rns_matmul", "rns9", (64, 256, 64),
+                        bench_fn=fake_bench, repeats=1)
+    assert {k: got[k] for k in want} == want
+    data = json.loads(tmp_cache.read_text())
+    assert data["version"] == 1
+    (key, entry), = data["entries"].items()
+    assert key.startswith("rns_matmul|rns9|64x256x64|")
+    assert entry["blocks"] == want
+
+    autotune.clear_cache()             # force a reload from disk
+    assert autotune.get_blocks("rns_matmul", "rns9", (64, 256, 64)) == dict(
+        autotune.DEFAULTS["rns_matmul"], **want)
+    # a different bucket still gets defaults
+    assert autotune.get_blocks("rns_matmul", "rns9", (512, 512, 512)) == \
+        autotune.DEFAULTS["rns_matmul"]
+
+
+def test_tune_real_bench_smoke(tmp_cache, monkeypatch):
+    """The built-in micro-bench path runs end-to-end (tiny shape, pruned
+    candidate set) and produces kernel-legal blocks."""
+    monkeypatch.setitem(autotune.CANDIDATES, "rns_matmul",
+                        [{"bm": 64, "bn": 128, "bk": 256},
+                         {"bm": 128, "bn": 128, "bk": 512}])
+    blk = autotune.tune("rns_matmul", "rns9", (16, 64, 16), repeats=1)
+    assert set(blk) == {"bm", "bn", "bk"}
+    assert blk["bm"] % 8 == 0 and blk["bn"] % 128 == 0
+    assert tmp_cache.exists()
+
+
+def test_wrappers_consult_tuned_blocks(tmp_cache):
+    """A tuned row changes the wrapper's compiled tiling (observable via
+    the jit cache) without changing results."""
+    from repro.core.rns import encode_int32
+    from repro.kernels.rns_normalize.kernel import rns_normalize_tiles
+    from repro.kernels.rns_normalize.ops import rns_normalize
+    from repro.kernels.rns_normalize.ref import rns_normalize_ref
+
+    res = jnp.asarray(encode_int32(
+        "rns9", np.arange(-50, 50, dtype=np.int32)))
+    autotune.tune("rns_normalize", "rns9", (100,),
+                  bench_fn=lambda b: 0.0 if b["bt"] == 256 else 1.0,
+                  repeats=1)
+    before = rns_normalize_tiles._cache_size()
+    out = rns_normalize("rns9", res)
+    assert rns_normalize_tiles._cache_size() == before + 1  # bt=256 cell
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(rns_normalize_ref(res, profile="rns9")))

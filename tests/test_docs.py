@@ -19,6 +19,13 @@ def test_numerics_doctests():
     assert results.failed == 0
 
 
+def test_kernels_doctests():
+    results = doctest.testfile(
+        str(DOCS / "kernels.md"), module_relative=False, verbose=False)
+    assert results.attempted >= 10, "kernels.md lost its examples"
+    assert results.failed == 0
+
+
 def test_docs_cross_links_resolve():
     for page in DOCS.glob("*.md"):
         text = page.read_text()

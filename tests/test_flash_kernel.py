@@ -3,6 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_stub import given, st
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import flash_attention_ref
@@ -12,7 +13,11 @@ from repro.models.attention import dense_attention
 @pytest.mark.parametrize("causal", [True, False])
 @pytest.mark.parametrize(
     "shape", [(1, 128, 128, 2, 1, 16), (2, 96, 200, 4, 2, 32),
-              (1, 17, 33, 2, 2, 64)])
+              (1, 17, 33, 2, 2, 64),
+              # non-tile-multiple tails on BOTH sequence axes (bq/bk = 64
+              # below: 130 -> two tiles + tail, 5/7 -> sub-tile ragged)
+              (1, 130, 257, 2, 1, 32), (2, 7, 5, 2, 2, 16),
+              (1, 65, 64, 2, 1, 16)])
 def test_flash_kernel_matches_refs(causal, shape):
     B, Tq, Tk, H, Hk, D = shape
     rng = np.random.default_rng(hash((causal,) + shape) % 2**32)
@@ -33,3 +38,20 @@ def test_flash_kernel_matches_refs(causal, shape):
         want2 = dense_attention(q, k, v, causal=causal)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want2),
                                    atol=2e-5)
+
+
+@given(st.integers(1, 70), st.integers(1, 70), st.booleans())
+def test_flash_kernel_property_ragged(Tq, Tk, causal):
+    """Arbitrary ragged (Tq, Tk): padded tiles mask out exactly."""
+    B, H, Hk, D = 1, 2, 1, 16
+    rng = np.random.default_rng(Tq * 97 + Tk * 3 + causal)
+    q = jnp.asarray(rng.standard_normal((B, Tq, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, Tk, Hk, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, Tk, Hk, D)), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, bq=32, bk=32)
+    kb = jnp.repeat(k, H // Hk, 2).transpose(0, 2, 1, 3).reshape(B * H, Tk, D)
+    vb = jnp.repeat(v, H // Hk, 2).transpose(0, 2, 1, 3).reshape(B * H, Tk, D)
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, Tq, D)
+    want = flash_attention_ref(qb, kb, vb, causal=causal, tk_valid=Tk)
+    want = want.reshape(B, H, Tq, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)

@@ -82,3 +82,98 @@ def test_end_to_end_pallas_equals_jnp_backend():
     y_p = rns_dot(x, w, RnsDotConfig(profile="rns9", qx=14, qw=14,
                                      use_pallas=True))
     assert np.array_equal(np.asarray(y_j), np.asarray(y_p))
+
+
+# --------------------------------------------- property tests (tails) -----
+@given(st.integers(1, 1200), st.sampled_from(PROFILES),
+       st.sampled_from([8, 16]))
+def test_convert_property_ragged(T, profile, bits):
+    rng = np.random.default_rng(T * 31 + bits)
+    x = rng.standard_normal(T).astype(np.float32) * 10
+    s = np.float32(rng.uniform(0.5, 50.0))
+    got = np.asarray(rns_convert(profile, jnp.asarray(x), s, bits=bits))
+    want = np.asarray(rns_convert_ref(x, s, profile=profile, bits=bits))
+    assert np.array_equal(got, want)
+
+
+@given(st.lists(st.integers(-(2**55), 2**55), min_size=1, max_size=60),
+       st.sampled_from(PROFILES))
+def test_normalize_property_ragged(vals, profile):
+    rv = jnp.asarray(encode_exact(profile, np.asarray(vals, dtype=object)))
+    got = np.asarray(rns_normalize(profile, rv))
+    want = np.asarray(rns_normalize_ref(rv, profile=profile))
+    assert np.array_equal(got, want)   # same kernel math: bitwise, not close
+
+
+@given(st.integers(1, 40), st.integers(1, 80), st.integers(1, 30),
+       st.sampled_from(PROFILES))
+def test_matmul_property_tails(M, D, N, profile):
+    t = tables(profile)
+    rng = np.random.default_rng(M * 7919 + D * 131 + N)
+    A = rng.integers(-2**11, 2**11, (M, D)).astype(np.int32)
+    B = rng.integers(-2**11, 2**11, (D, N)).astype(np.int32)
+    ra = encode_int32(profile, A).astype(jnp.int8)
+    rb = encode_int32(profile, B).astype(jnp.int8)
+    got = np.asarray(rns_matmul(profile, ra, rb))
+    want = np.asarray(rns_matmul_ref(np.asarray(t.moduli), ra, rb))
+    assert np.array_equal(got, want)
+
+
+@given(st.integers(1, 6), st.integers(1, 9), st.integers(1, 33))
+def test_convert_property_per_sequence_scales(B, T, d):
+    """Per-row grids through the kernel == the reference broadcast rule."""
+    from repro.core.quantize import quantize_with_scale
+
+    rng = np.random.default_rng(B * 100 + T * 10 + d)
+    x = jnp.asarray(rng.standard_normal((B, T, d)), jnp.float32)
+    s = jnp.asarray(rng.uniform(0.5, 40.0, (B, 1, 1)), jnp.float32)
+    got = rns_convert("rns9", x, s, bits=12)
+    want = encode_int32("rns9", quantize_with_scale(x, s, 12))
+    assert np.array_equal(np.asarray(got, np.int32), np.asarray(want))
+
+
+# -------------------------------------- zero-per-length-recompile pins ----
+def test_normalize_wrapper_single_compile_across_ragged_lengths():
+    """Satellite: fixed bt tile + padding — ONE kernel for every length
+    in a padded-size bucket (was: one whole-array compile per length)."""
+    from repro.kernels.rns_normalize.kernel import rns_normalize_tiles
+
+    rng = np.random.default_rng(7)
+    before = rns_normalize_tiles._cache_size()
+    for L in (3, 17, 100, 555, 1000, 1024):
+        res = jnp.asarray(encode_int32(
+            "rns9", rng.integers(-2**20, 2**20, L).astype(np.int32)))
+        rns_normalize("rns9", res)
+    assert rns_normalize_tiles._cache_size() - before <= 1
+
+
+def test_convert_wrapper_single_compile_across_ragged_lengths():
+    from repro.kernels.rns_convert.kernel import rns_convert_tiles
+
+    rng = np.random.default_rng(8)
+    before = rns_convert_tiles._cache_size()
+    for L in (3, 17, 100, 555, 1000, 1024):
+        rns_convert("rns9", jnp.asarray(
+            rng.standard_normal(L), jnp.float32), np.float32(11.0))
+    assert rns_convert_tiles._cache_size() - before <= 1
+
+
+def test_matmul_wrapper_m_bucketing_single_compile():
+    """Satellite: bm is a multiple of 8 and M is pow2-bucketed — mixed
+    row counts in one bucket share ONE compile (was: a Mosaic-illegal
+    non-multiple-of-8 tile and a recompile per distinct M)."""
+    from repro.kernels.rns_matmul.kernel import rns_matmul_tiles
+    from repro.kernels.rns_matmul.ops import _pow2_at_least
+
+    assert all(_pow2_at_least(m) % 8 == 0 for m in range(1, 300))
+    rng = np.random.default_rng(9)
+    B = rng.integers(-500, 500, (64, 16)).astype(np.int32)
+    rb = encode_int32("rns9", B).astype(jnp.int8)
+    before = rns_matmul_tiles._cache_size()
+    for M in (65, 80, 100, 128):       # one power-of-two bucket: (64, 128]
+        A = rng.integers(-500, 500, (M, 64)).astype(np.int32)
+        ra = encode_int32("rns9", A).astype(jnp.int8)
+        rns_matmul("rns9", ra, rb)
+    # <= 1: an earlier test may already have compiled this bucket's cell;
+    # the broken wrapper would have added one cell PER distinct M
+    assert rns_matmul_tiles._cache_size() - before <= 1
