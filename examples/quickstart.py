@@ -144,3 +144,23 @@ print(f"\nfused datapath: bit-identical to unfused = "
       f"{bool(jnp.all(y_fused == y_unfused))}; counts: "
       f"converts={ops8.converts} matmuls={ops8.matmuls} "
       f"normalizes={ops8.normalizes} fused={ops8.fused}")
+
+# 9. Production serving levers on the same paged cache (docs/serving.md):
+#    copy-on-write prefix caching (sequences sharing a prompt prefix
+#    share physical KV pages; refcounts + content-addressed index) and
+#    EXACT speculative decoding (self-drafted n-grams verified in one
+#    [R, k+1] window; greedy accept keeps tokens identical to vanilla).
+engine = ContinuousEngine(params, cfg, ServeConfig(
+    max_cache=64, max_new_tokens=6, page_size=16, max_seqs=2,
+    prefix_cache=True, spec_decode=True, spec_k=3))
+shared = rng.integers(1, cfg.vocab, (24,)).astype(np.int32)
+multi_turn = [shared.copy(), shared.copy(),
+              np.concatenate([shared, rng.integers(1, cfg.vocab, (6,))
+                              .astype(np.int32)])]
+results9, stats9 = engine.run(multi_turn)
+print(f"\nprefix cache + spec decode: cache_hit_tokens="
+      f"{stats9['cache_hit_tokens']} pages_shared={stats9['pages_shared']} "
+      f"cow_splits={stats9['cow_splits']} "
+      f"tokens/step={stats9['tokens_per_step']:.2f} "
+      f"acceptance={stats9['acceptance_rate']:.2f} "
+      f"verify compiles = {engine._verify._cache_size()}")

@@ -55,14 +55,23 @@ class token_mask:
     per-tensor grid.  ``mask=None`` is a no-op.  The mask may be a traced
     array: install it inside the traced function (the jitted prefill /
     decode step), not around the jit call.
+
+    ``per_token=True`` tightens the grid to one scale per (row, token)
+    instead of one per row: the reduction then runs over the feature dims
+    only, yielding a ``[B, T, 1, ...]`` scale.  This is what makes a
+    ``[R, W]`` speculative-verify window bit-identical per position to W
+    consecutive one-token decode steps — each window position gets
+    exactly the grid its own solo decode step would have computed,
+    instead of a grid coupled to its window neighbours.
     """
 
-    def __init__(self, mask):
+    def __init__(self, mask, per_token: bool = False):
         self.mask = mask
+        self.per_token = per_token
 
     def __enter__(self):
         if self.mask is not None:
-            _masks().append(self.mask)
+            _masks().append((self.mask, self.per_token))
         return self
 
     def __exit__(self, *exc):
@@ -74,38 +83,48 @@ class token_mask:
 
 
 def current_token_mask():
+    """The innermost installed (mask, per_token) pair, or None."""
     ms = _masks()
     return ms[-1] if ms else None
 
 
 def _context_mask_for(x):
-    """The installed mask if ``x`` looks like a [B, T, ...] activation."""
-    mask = current_token_mask()
-    if mask is None:
+    """The installed (mask, per_token) if ``x`` looks like a [B, T, ...]
+    activation matching the mask's leading dims."""
+    ctx = current_token_mask()
+    if ctx is None:
         return None
+    mask, per_token = ctx
     if x.ndim == mask.ndim + 1 and x.shape[: mask.ndim] == mask.shape:
-        return mask
+        return mask, per_token
     return None
 
 
-def absmax_scale(x, bits: int, axis=None, eps: float = 1e-12, mask=None):
+def absmax_scale(x, bits: int, axis=None, eps: float = 1e-12, mask=None,
+                 per_token: bool = False):
     """Scale s such that round(x*s) uses <= ``bits`` signed bits.
 
     axis=None -> per-tensor scalar; otherwise the scale is reduced over
     ``axis`` (per-channel).  With ``mask`` (explicit ``[B, T]``, or
     installed via :class:`token_mask`) the reduction runs per row over
-    unmasked positions only (per-sequence grids for ragged batches).
-    All-zero (or fully masked) inputs get scale 1.0 — see module
-    docstring.  The scale is stop-gradient'ed (STE).
+    unmasked positions only (per-sequence grids for ragged batches);
+    ``per_token`` additionally keeps the token axis, one grid per
+    (row, token) — see :class:`token_mask`.  All-zero (or fully masked)
+    inputs get scale 1.0 — see module docstring.  The scale is
+    stop-gradient'ed (STE).
     """
     qmax = float(2 ** (bits - 1) - 1)
     x = jnp.asarray(x)
     if mask is None and axis is None:
-        mask = _context_mask_for(x)
+        ctx = _context_mask_for(x)
+        if ctx is not None:
+            mask, per_token = ctx
     if mask is not None:
         m = jnp.asarray(mask, bool)
+        mask_ndim = m.ndim
         m = m.reshape(m.shape + (1,) * (x.ndim - m.ndim))
-        red = tuple(range(1, x.ndim))
+        red = (tuple(range(mask_ndim, x.ndim)) if per_token
+               else tuple(range(1, x.ndim)))
         amax = jnp.max(jnp.where(m, jnp.abs(x), 0.0), axis=red, keepdims=True)
     elif axis is None:
         amax = jnp.max(jnp.abs(x))

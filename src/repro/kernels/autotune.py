@@ -100,17 +100,40 @@ def _key(kind: str, profile, shape, backend: str | None) -> str:
     return f"{kind}|{name}|{dims}|{_backend_tag(backend)}"
 
 
+def _valid_entry(entry) -> bool:
+    """A cache row the wrappers can actually consume: a dict whose
+    ``blocks`` maps known tile names to positive ints.  Anything else —
+    hand-edited files, partial writes, rows from a future format —
+    is dropped at load time so a poisoned cache can never push a
+    non-integer (or absurd) tile size into a kernel launch."""
+    if not isinstance(entry, dict) or not isinstance(entry.get("blocks"), dict):
+        return False
+    names = {n for d in DEFAULTS.values() for n in d}
+    return all(
+        isinstance(k, str) and k in names
+        and isinstance(v, int) and not isinstance(v, bool) and v > 0
+        for k, v in entry["blocks"].items())
+
+
 def _load() -> dict[str, dict]:
     global _cache
     with _lock:
         if _cache is None:
             _cache = {}
+            # Corruption tolerance: a missing/unreadable file, invalid
+            # JSON, a non-dict top level, a version mismatch, or junk
+            # rows must all degrade to "no tuned entries" (the wrappers
+            # fall back to DEFAULTS) — never crash a serving process over
+            # a cache file.  The next tune() rewrites the file whole.
             try:
                 with open(cache_path()) as f:
                     data = json.load(f)
-                if data.get("version") == 1:
-                    _cache = dict(data.get("entries", {}))
-            except (OSError, ValueError):
+                if isinstance(data, dict) and data.get("version") == 1:
+                    entries = data.get("entries")
+                    if isinstance(entries, dict):
+                        _cache = {k: v for k, v in entries.items()
+                                  if isinstance(k, str) and _valid_entry(v)}
+            except (OSError, ValueError, TypeError):
                 pass
         return _cache
 

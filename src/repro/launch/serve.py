@@ -66,7 +66,8 @@ def _continuous(args, cfg, params):
         max_cache=max_cache, max_new_tokens=args.new,
         page_size=args.page_size, max_seqs=args.max_seqs,
         n_pages=args.n_pages, rns_backend=args.rns_backend,
-        mesh=_digit_mesh(args)))
+        prefix_cache=args.prefix_cache, spec_decode=args.spec_decode,
+        spec_k=args.spec_k, mesh=_digit_mesh(args)))
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, (lens[i % len(lens)],)).astype(
         np.int32) for i in range(args.requests)]
@@ -78,8 +79,19 @@ def _continuous(args, cfg, params):
           f"p99={stats['latency_p99_s']:.3f}s  "
           f"page util (mean)={stats['mean_page_utilization']:.2f}  "
           f"preemptions={stats['n_preemptions']}")
+    if args.spec_decode:
+        print(f"speculative: tokens/step={stats['tokens_per_step']:.2f} "
+              f"acceptance={stats['acceptance_rate']:.2f} "
+              f"(window {engine.spec_window})")
+    if args.prefix_cache:
+        print(f"prefix cache: hit_tokens={stats['cache_hit_tokens']} "
+              f"pages_shared={stats['pages_shared']} "
+              f"pages_allocated={stats['pages_allocated']} "
+              f"cow_splits={stats['cow_splits']}")
+    decode_jit = engine._verify if args.spec_decode else engine._decode
     print(f"compiles: prefill={engine._prefill._cache_size()} "
-          f"decode={engine._decode._cache_size()} (per-length recompiles: 0)")
+          f"{'verify' if args.spec_decode else 'decode'}="
+          f"{decode_jit._cache_size()} (per-length recompiles: 0)")
     print("sample:", res[0][:16])
 
 
@@ -97,6 +109,17 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--max-seqs", type=int, default=8)
     ap.add_argument("--n-pages", type=int, default=None)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="copy-on-write prefix caching: sequences sharing "
+                         "a prompt prefix share physical KV pages "
+                         "(continuous engine only)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="self-speculative (n-gram prompt-lookup) decoding "
+                         "through one jitted [R, k+1] verify step "
+                         "(continuous engine only; tokens stay identical "
+                         "to vanilla decode)")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="draft tokens per speculative step")
     ap.add_argument("--rns-backend", default=None,
                     help="RNS execution backend override for either engine "
                          "(reference|pallas|pallas_fused|...; pallas_fused "

@@ -165,15 +165,23 @@ def flash_attention(q, k, v, *, causal: bool, kv_mask=None,
 
 
 def decode_attention(q, k_cache, v_cache, lengths):
-    """q [B,1,H,D] against cache [B,S,Hk,D]; lengths [B] valid prefix sizes.
+    """q [B,Tq,H,D] against cache [B,S,Hk,D]; ``lengths`` [B] valid prefix
+    sizes shared by every query, or [B, Tq] per-query valid counts (the
+    speculative-verify window: query ``i`` sees ``lengths[b, i]`` keys —
+    its own window predecessors included, later/rejected KV excluded).
 
-    Returns (out [B,1,H,D], lse [B,Hk,G,1]) — the LSE makes partial results
-    combinable across a sequence-sharded cache (flash-decoding).
+    Returns (out [B,Tq,H,D], lse [B,Hk,G,Tq]) — the LSE makes partial
+    results combinable across a sequence-sharded cache (flash-decoding).
     """
     B, S = k_cache.shape[:2]
-    kv_mask = jnp.arange(S)[None, :] < lengths[:, None]
+    if lengths.ndim == 2:       # per-query valid counts (verify window)
+        mask = (jnp.arange(S)[None, None, :] <
+                lengths[:, :, None])[:, None, None, :, :]
+    else:
+        mask = (jnp.arange(S)[None, :] <
+                lengths[:, None])[:, None, None, None, :]
     s = _gqa_scores(q.astype(jnp.float32), k_cache.astype(jnp.float32))
-    s = jnp.where(kv_mask[:, None, None, None, :], s, NEG_INF)
+    s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.exp(s - m[..., None])
     l = jnp.sum(p, axis=-1)
@@ -306,6 +314,36 @@ def gqa_decode_paged(p, x, cfg, cache, *, rns=None, use_rope=True):
     return y, k_pages, v_pages
 
 
+def gqa_decode_paged_window(p, x, cfg, cache, *, rns=None, use_rope=True):
+    """W-token speculative-verify decode against a paged KV cache.
+
+    x [R, W, d]: the window [last_token, draft_1, ..., draft_{W-1}].  All
+    W tokens' K/V are scattered at positions lengths..lengths+W-1 (writes
+    past the row's allocated pages are redirected to the trash page — the
+    engine caps acceptance to what landed on real pages), then causal
+    window attention runs over the gathered dense view.  ``lengths`` is
+    NOT advanced here: the engine sets it to length + accepted + 1 after
+    the greedy accept/reject.
+
+    Returns (y [R, W, d], k_pages, v_pages).
+    """
+    from repro.serve.kv_cache import gather_pages, write_token_window
+
+    B, W = x.shape[:2]
+    positions = cache["lengths"][:, None] + jnp.arange(W)[None]
+    q, k, v = gqa_qkv(p, x, cfg, positions, rns, use_rope=use_rope)
+    k_pages = write_token_window(cache["k_pages"], cache["block_table"],
+                                 cache["lengths"], k)
+    v_pages = write_token_window(cache["v_pages"], cache["block_table"],
+                                 cache["lengths"], v)
+    kd = gather_pages(k_pages, cache["block_table"])
+    vd = gather_pages(v_pages, cache["block_table"])
+    qlen = cache["lengths"][:, None] + 1 + jnp.arange(W)[None]   # [R, W]
+    out, _lse = decode_attention(q, kd, vd, qlen)
+    y = linear(p["wo"], out.reshape(B, W, -1), rns)
+    return y, k_pages, v_pages
+
+
 def cross_decode(p, x, cfg, xkv, *, rns=None):
     """Decode-time cross-attention over a static encoder KV (enc-dec archs).
 
@@ -410,28 +448,29 @@ def mla_attend(p, x, cfg, *, mode: str, positions=None, kv_mask=None,
 
 
 def _mla_decode_proj(p, x, cfg, lengths, rns):
-    """Shared decode-time MLA projections.
+    """Shared decode-time MLA projections (T=1 decode or T=W verify window).
 
-    Returns (q_nope [B,1,H,dn], q_rope [B,1,H,dr] roped, c_kv_t [B,1,r],
-    k_rope_t [B,1,dr] roped) — everything the cache write + absorbed
-    attention need, for either cache layout.
+    Returns (q_nope [B,T,H,dn], q_rope [B,T,H,dr] roped, c_kv_t [B,T,r],
+    k_rope_t [B,T,dr] roped) — everything the cache write + absorbed
+    attention need, for either cache layout.  Token ``i`` of the window
+    sits at absolute position ``lengths + i``.
     """
     from repro.models.layers import rmsnorm
 
     m = cfg.mla
-    B = x.shape[0]
+    B, T = x.shape[:2]
     H = cfg.n_heads
-    positions = lengths[:, None]
+    positions = lengths[:, None] + jnp.arange(T)[None]
     dq, dkv, kr = _multi_proj(x, (p["wdq"], p["wdkv"], p["wkr"]), rns)
     cq = rmsnorm(p["q_norm"], dq)
     q_nope, q_rope = _multi_proj(cq, (p["wuqn"], p["wuqr"]), rns)
-    q_nope = q_nope.reshape(B, 1, H, m.qk_nope_dim)
-    q_rope = q_rope.reshape(B, 1, H, m.qk_rope_dim)
+    q_nope = q_nope.reshape(B, T, H, m.qk_nope_dim)
+    q_rope = q_rope.reshape(B, T, H, m.qk_rope_dim)
     q_rope = rope(q_rope, positions, cfg.rope_theta)
-    c_kv_t = rmsnorm(p["kv_norm"], dkv)                             # [B,1,r]
+    c_kv_t = rmsnorm(p["kv_norm"], dkv)                             # [B,T,r]
     k_rope_t = rope(
         kr[:, :, None, :], positions, cfg.rope_theta
-    )[:, :, 0, :]                                                    # [B,1,dr]
+    )[:, :, 0, :]                                                    # [B,T,dr]
     return q_nope, q_rope, c_kv_t, k_rope_t
 
 
@@ -440,8 +479,10 @@ def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, c_kv, k_rope, lengths,
     """Absorbed-matrix latent attention over a dense [B,S,·] latent view.
 
     W_uk is absorbed into the query and W_uv into the output so attention
-    runs directly in the latent space (MQA-shaped, Hk=1).  Returns
-    (y [B,1,d], lse [B,1,H,1]).
+    runs directly in the latent space (MQA-shaped, Hk=1).  ``lengths``:
+    [B] valid key counts shared by every query (one-token decode), or
+    [B, T] per-query counts (speculative-verify window, query ``i`` sees
+    ``lengths[b, i]`` keys).  Returns (y [B,T,d], lse [B,1,H,T]).
     """
     m = cfg.mla
     B = x.shape[0]
@@ -454,19 +495,24 @@ def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, c_kv, k_rope, lengths,
         jnp.einsum("bthr,bsr->bhts", q_abs, c_kv.astype(jnp.float32))
         + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32),
                      k_rope.astype(jnp.float32))
-    ) * scale                                                        # [B,H,1,S]
+    ) * scale                                                        # [B,H,T,S]
     S = c_kv.shape[1]
-    mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
+    if lengths.ndim == 2:       # per-query valid counts (verify window)
+        mask = (jnp.arange(S)[None, None, :] <
+                lengths[:, :, None])[:, None, :, :]
+    else:
+        mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
     s = jnp.where(mask, s, NEG_INF)
     mx = jnp.max(s, axis=-1)
     pr = jnp.exp(s - mx[..., None])
     l = jnp.sum(pr, axis=-1)
     ctx = jnp.einsum("bhts,bsr->bthr", pr / jnp.maximum(l, 1e-30)[..., None],
-                     c_kv.astype(jnp.float32))                       # [B,1,H,r]
+                     c_kv.astype(jnp.float32))                       # [B,T,H,r]
     wuv = p["wuv"]["w"].reshape(m.kv_lora_rank, H, m.v_dim)
     out = jnp.einsum("bthr,rhd->bthd", ctx, wuv.astype(jnp.float32))
-    y = linear(p["wo"], out.reshape(B, 1, -1).astype(x.dtype), rns)
-    lse = (mx + jnp.log(jnp.maximum(l, 1e-30)))[:, None, :, :]  # [B,1,H,1]
+    T = out.shape[1]
+    y = linear(p["wo"], out.reshape(B, T, -1).astype(x.dtype), rns)
+    lse = (mx + jnp.log(jnp.maximum(l, 1e-30)))[:, None, :, :]  # [B,1,H,T]
     return y, lse
 
 
@@ -510,4 +556,33 @@ def mla_decode_paged(p, x, cfg, cache, *, rns=None):
     k_rope = gather_pages(krope_pages, cache["block_table"])
     y, _lse = _mla_absorbed_attend(
         p, x, cfg, q_nope, q_rope, c_kv, k_rope, cache["lengths"] + 1, rns)
+    return y, ckv_pages, krope_pages
+
+
+def mla_decode_paged_window(p, x, cfg, cache, *, rns=None):
+    """W-token speculative-verify MLA decode against a paged latent cache.
+
+    x [R, W, d]; all W window tokens' latents are scattered at positions
+    lengths..lengths+W-1, then the absorbed attention runs with per-query
+    causal masks (query ``i`` sees ``lengths + i + 1`` latents — its own
+    window predecessors included, later/rejected positions excluded).
+    ``lengths`` is advanced by the engine after accept/reject, not here.
+
+    Returns (y [R, W, d], ckv_pages, krope_pages).
+    """
+    from repro.serve.kv_cache import gather_pages, write_token_window
+
+    W = x.shape[1]
+    q_nope, q_rope, c_kv_t, k_rope_t = _mla_decode_proj(
+        p, x, cfg, cache["lengths"], rns)
+    ckv_pages = write_token_window(cache["ckv_pages"], cache["block_table"],
+                                   cache["lengths"], c_kv_t)
+    krope_pages = write_token_window(cache["krope_pages"],
+                                     cache["block_table"],
+                                     cache["lengths"], k_rope_t)
+    c_kv = gather_pages(ckv_pages, cache["block_table"])
+    k_rope = gather_pages(krope_pages, cache["block_table"])
+    qlen = cache["lengths"][:, None] + 1 + jnp.arange(W)[None]   # [R, W]
+    y, _lse = _mla_absorbed_attend(
+        p, x, cfg, q_nope, q_rope, c_kv, k_rope, qlen, rns)
     return y, ckv_pages, krope_pages

@@ -323,6 +323,43 @@ def decode_step(params, cfg, token, cache, active=None):
     return logits, new_cache
 
 
+def decode_window(params, cfg, tokens, cache, active=None):
+    """Speculative-verify window: tokens [R, W] -> (logits [R, W, V], ys).
+
+    The window is [last_token, draft_1, ..., draft_{W-1}] per row; all W
+    tokens' KV is written at positions lengths..lengths+W-1 (paged caches
+    only) and ``logits[:, i]`` is the model's next-token distribution
+    after consuming window position ``i`` — exactly what W consecutive
+    :func:`decode_step` calls would produce, so a greedy accept/reject
+    over these logits keeps the emitted stream token-identical to vanilla
+    decode.  Cache ``lengths`` are NOT advanced here: the caller sets
+    them to ``length + accepted + 1`` once it knows the accept counts
+    (``ys`` is the raw per-layer cache with the window KV scattered in).
+
+    On the RNS path the token mask is installed ``per_token``: each
+    window position quantizes on its own (row, token) absmax grid — the
+    same grid its solo decode step would compute — instead of a grid
+    coupled to its window neighbours (see core/quantize.token_mask).
+    """
+    from repro.core.quantize import token_mask
+
+    R, W = tokens.shape
+    mask = None
+    if active is not None and cfg.rns is not None:
+        mask = jnp.broadcast_to(active[:, None], (R, W))
+    with token_mask(mask, per_token=True):
+        h = _embed_tokens(params, cfg, tokens)
+        if cfg.pos_emb == "sinusoidal":
+            lengths = _cache_lengths(cache)
+            table = sinusoidal_positions(_cache_smax(cfg, cache), cfg.d_model,
+                                         h.dtype)
+            h = h + table[lengths[:, None] + jnp.arange(W)[None]]
+        h, ys, _ = tf.apply_blocks(params["blocks"], h, cfg, mode="decode",
+                                   cache=cache)
+        logits = _logits(params, cfg, h)
+    return logits, ys
+
+
 def _cache_lengths(cache):
     first = cache[next(iter(cache))]
     return first["lengths"][0]

@@ -127,12 +127,20 @@ def _apply_layer(lp, h, cfg, layer_type, mlp_type, *, mode, positions,
         hn = norm(lp["ln1"], h, cfg.norm)
         if mode == "decode":
             # paged caches (continuous batching) are recognized by their
-            # page-pool keys; the dense layout stays the default
+            # page-pool keys; the dense layout stays the default.  A
+            # multi-token query ([R, W] speculative-verify window) only
+            # exists on the paged path.
+            window = hn.shape[1] > 1
+            if window and "k_pages" not in cache and "ckv_pages" not in cache:
+                raise NotImplementedError(
+                    "multi-token decode windows (speculative verify) need "
+                    "the paged cache layout")
             if layer_type == "attn":
                 if "k_pages" in cache:
-                    y, kp, vp = attn.gqa_decode_paged(
-                        lp["attn"], hn, cfg, cache, rns=rns_a,
-                        use_rope=use_rope)
+                    fn = (attn.gqa_decode_paged_window if window
+                          else attn.gqa_decode_paged)
+                    y, kp, vp = fn(lp["attn"], hn, cfg, cache, rns=rns_a,
+                                   use_rope=use_rope)
                     new_cache = dict(cache, k_pages=kp, v_pages=vp)
                 else:
                     y, kc, vc = attn.gqa_decode(
@@ -141,8 +149,9 @@ def _apply_layer(lp, h, cfg, layer_type, mlp_type, *, mode, positions,
                     new_cache = dict(cache, k=kc, v=vc)
             else:
                 if "ckv_pages" in cache:
-                    y, cp, kp = attn.mla_decode_paged(
-                        lp["attn"], hn, cfg, cache, rns=rns_a)
+                    fn = (attn.mla_decode_paged_window if window
+                          else attn.mla_decode_paged)
+                    y, cp, kp = fn(lp["attn"], hn, cfg, cache, rns=rns_a)
                     new_cache = dict(cache, ckv_pages=cp, krope_pages=kp)
                 else:
                     y, ckv, krope, _lse = attn.mla_decode(

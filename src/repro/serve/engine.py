@@ -81,6 +81,19 @@ class ServeConfig:
     max_seqs: int = 8                # concurrent decode slots
     n_pages: int | None = None       # physical pool (None: max_seqs full seqs)
     prompt_pad: int | None = None    # prefill pad length (None: seq capacity)
+    # copy-on-write prefix caching: sequences sharing a prompt prefix map
+    # their block tables onto shared pages (content-addressed index in
+    # serve/kv_cache.PrefixCache); the prefill blit skips shared blocks
+    # (zero redundant page writes) and a row splits a shared page the
+    # first time it writes into one (COW).
+    prefix_cache: bool = False
+    # self-speculative (n-gram / prompt-lookup) decoding: each step scores
+    # [last_token, draft_1..draft_k] through ONE jitted [R, k+1] verify
+    # call; greedy accept/reject keeps the stream token-identical to
+    # vanilla decode while emitting up to k+1 tokens per step.
+    spec_decode: bool = False
+    spec_k: int = 3                  # draft tokens per step (window = k+1)
+    spec_ngram: int = 3              # max n-gram length for prompt lookup
 
     def __post_init__(self):
         if self.eos_id < -1:
@@ -88,6 +101,12 @@ class ServeConfig:
                 f"eos_id={self.eos_id}: vocabulary ids are non-negative; "
                 "use a valid token id, or -1 (the documented sentinel) to "
                 "disable early stopping")
+        if self.spec_decode and self.spec_k < 1:
+            raise ValueError(
+                f"spec_k={self.spec_k}: speculative decoding needs at "
+                "least one draft token per step")
+        if self.spec_decode and self.spec_ngram < 1:
+            raise ValueError(f"spec_ngram={self.spec_ngram}: need >= 1")
 
 
 def _with_digit_ctx(fn, scfg: ServeConfig):
@@ -207,7 +226,9 @@ class ContinuousEngine:
             raise ValueError(
                 f"prompt_pad {self.prompt_pad} exceeds per-seq cache "
                 f"capacity {self.pcfg.tokens_per_seq}")
-        self.sched = Scheduler(self.pcfg)
+        self.spec_window = scfg.spec_k + 1 if scfg.spec_decode else 1
+        self.sched = Scheduler(self.pcfg, prefix_cache=scfg.prefix_cache,
+                               lookahead=self.spec_window)
         self.cache = kv.make_paged_cache(
             cfg, self.pcfg, dtype=jnp.dtype(scfg.cache_dtype))
 
@@ -226,6 +247,13 @@ class ContinuousEngine:
         # without donation every decoded token copies the whole pool
         self._decode = _with_digit_ctx(
             jax.jit(_decode_fn, donate_argnums=(2,)), scfg)
+        # ONE jitted [R, W] verify step replaces the [R, 1] decode when
+        # speculative decoding is on — same zero-per-length-recompiles
+        # contract (shapes depend only on the slot count, the page
+        # geometry, and the static window width)
+        self._verify = _with_digit_ctx(
+            jax.jit(self._verify_fn, donate_argnums=(2,)), scfg)
+        self._cow = jax.jit(self._cow_fn, donate_argnums=(0,))
         self._ingest = jax.jit(self._ingest_fn, donate_argnums=(0,))
         self._tables_dirty = True
         self._active = np.zeros((self.pcfg.max_seqs,), bool)
@@ -257,6 +285,90 @@ class ContinuousEngine:
             new[f"l{j}"] = z
         return new
 
+    def _verify_fn(self, params, window, cache, active, caps):
+        """Score a [R, W] draft window and accept/reject on device.
+
+        ``window[:, 0]`` is each row's last emitted token, ``window[:,
+        1:]`` its drafts.  Greedy accept: draft i+1 survives iff it
+        equals the argmax after window position i AND every earlier draft
+        survived — so the emitted stream is the model's own greedy chain
+        by construction, token-identical to vanilla decode.  ``caps``
+        bounds acceptance per row (max_new budget; drafts whose KV landed
+        on the trash page).  Cache lengths advance by accepted+1 on
+        device, keeping them in lockstep with the host counters so the
+        table upload stays skippable.
+
+        Returns (greedy [R, W], accepted [R], cache).
+        """
+        logits, ys = M.decode_window(params, self.cfg, window, cache,
+                                     active=active)
+        g = jnp.argmax(logits, axis=-1).astype(jnp.int32)       # [R, W]
+        match = (g[:, :-1] == window[:, 1:]).astype(jnp.int32)  # [R, W-1]
+        a = jnp.minimum(jnp.sum(jnp.cumprod(match, axis=1), axis=1), caps)
+        step = jnp.where(active, a + 1, 0)
+        new_cache = M.set_cache_lengths(ys, M._cache_lengths(ys) + step)
+        return g, a, new_cache
+
+    def _cow_fn(self, cache, src, dst):
+        """Copy-on-write page duplication across every layer's pool."""
+        new = dict(cache)
+        for j in range(self.cfg.period):
+            z = dict(cache[f"l{j}"])
+            for name in list(z):
+                if name.endswith("_pages"):
+                    z[name] = kv.copy_pages(z[name], src, dst)
+            new[f"l{j}"] = z
+        return new
+
+    def _apply_cow(self, cow):
+        """Run the scheduler's COW splits on device (before decode writes).
+
+        Fixed [R] src/dst vectors (TRASH for no-op rows) keep the copy
+        jit at one compile; rounds handle the (rare) case of several
+        splits on one slot.
+        """
+        R = self.pcfg.max_seqs
+        while cow:
+            this_round, rest, seen = [], [], set()
+            for e in cow:
+                if e[0] in seen:
+                    rest.append(e)
+                else:
+                    seen.add(e[0])
+                    this_round.append(e)
+            src = np.full((R,), kv.TRASH_PAGE, np.int32)
+            dst = np.full((R,), kv.TRASH_PAGE, np.int32)
+            for slot, _b, s, d in this_round:
+                src[slot], dst[slot] = s, d
+            self.cache = self._cow(self.cache, jnp.asarray(src),
+                                   jnp.asarray(dst))
+            cow = rest
+
+    def _propose(self, seq) -> np.ndarray:
+        """Prompt-lookup (n-gram) drafting: match the row's trailing
+        n-gram against its own prompt+generation history and propose the
+        k tokens that followed the most recent earlier occurrence.
+        Misses pad with zeros — a padded draft is only ever accepted if
+        it happens to equal the model's greedy choice, so correctness
+        never depends on draft quality."""
+        k = self.scfg.spec_k
+        hist = np.concatenate([seq.req.tokens,
+                               np.asarray(seq.emitted, np.int32)])
+        out = np.zeros((k,), np.int32)
+        for n in range(min(self.scfg.spec_ngram, len(hist) - 1), 0, -1):
+            pat = hist[-n:]
+            base = hist[:-1]                 # candidate starts need a next
+            if len(base) < n:
+                continue
+            wins = np.lib.stride_tricks.sliding_window_view(base, n)
+            hits = np.flatnonzero((wins == pat).all(axis=1))
+            if len(hits):
+                j = int(hits[-1]) + n
+                d = hist[j:j + k]
+                out[: len(d)] = d
+                return out
+        return out
+
     # ------------------------------------------------------------ intake --
     def submit(self, prompt: np.ndarray, max_new: int | None = None) -> int:
         """Queue one request; returns its request id."""
@@ -281,8 +393,11 @@ class ContinuousEngine:
                                    jnp.asarray([T], jnp.int32))
         tok0 = int(jnp.argmax(logits, axis=-1)[0])
         nbp = self.prompt_pad // self.pcfg.page_size
+        # block_row maps prefix-cache-shared blocks to the trash page:
+        # their KV is already resident, the blit skips them entirely
         block_row = self.sched.block_row(seq, nbp)
         self.cache = self._ingest(self.cache, ys, jnp.asarray(block_row))
+        self.sched.register_prefix(seq)
         seq.emitted = [tok0]
         seq.last_token = tok0
         # length stays at T: the decode step writes tok0's KV at position T
@@ -300,10 +415,19 @@ class ContinuousEngine:
         if "decode" not in self._op_cache:
             bt, lengths, active, last = self.sched.tables()
             cache = kv.set_tables(self.cache, bt, lengths)
-            self._op_cache["decode"] = dispatch.trace_op_counts(
-                lambda p, t: M.decode_step(p, self.cfg, t, cache,
-                                           active=jnp.asarray(active)),
-                self.params, jnp.zeros((self.pcfg.max_seqs, 1), jnp.int32))
+            R = self.pcfg.max_seqs
+            if self.scfg.spec_decode:
+                # spec mode replaces the decode step with the verify step
+                self._op_cache["decode"] = dispatch.trace_op_counts(
+                    lambda p, t: self._verify_fn(
+                        p, t, cache, jnp.asarray(active),
+                        jnp.zeros((R,), jnp.int32)),
+                    self.params, jnp.zeros((R, self.spec_window), jnp.int32))
+            else:
+                self._op_cache["decode"] = dispatch.trace_op_counts(
+                    lambda p, t: M.decode_step(p, self.cfg, t, cache,
+                                               active=jnp.asarray(active)),
+                    self.params, jnp.zeros((R, 1), jnp.int32))
             self._op_cache["prefill"] = dispatch.trace_op_counts(
                 lambda p, t: M.prefill_ragged(
                     p, self.cfg, {"tokens": t},
@@ -317,29 +441,98 @@ class ContinuousEngine:
             fused=d.fused + n_prefills * pf.fused,
             fallbacks=d.fallbacks + n_prefills * pf.fallbacks)
 
+    def _decode_vanilla(self, last):
+        """One [R, 1] decode for every running row; returns #new tokens."""
+        nxt, self.cache = self._decode(
+            self.params, jnp.asarray(last[:, None]), self.cache,
+            jnp.asarray(self._active))
+        nxt = np.asarray(nxt, np.int32)
+        n_tokens = 0
+        for seq in list(self.sched.running.values()):
+            tok = int(nxt[seq.slot])
+            seq.emitted.append(tok)
+            seq.last_token = tok
+            seq.length += 1
+            n_tokens += 1
+            if (len(seq.emitted) >= seq.req.max_new
+                    or tok == self.scfg.eos_id
+                    or seq.length + 1 > self.pcfg.tokens_per_seq):
+                self._step_finished.append(seq.rid)
+                self._finish(seq)
+        return n_tokens
+
+    def _decode_spec(self, last):
+        """One [R, W] draft-propose + verify for every running row.
+
+        Emits ``accepted + 1`` tokens per row (the accepted draft run
+        plus the bonus greedy token after it) — between 1 and W per step,
+        token-identical to vanilla decode by the greedy accept rule.
+        """
+        R, W, bs = self.pcfg.max_seqs, self.spec_window, self.pcfg.page_size
+        window = np.zeros((R, W), np.int32)
+        caps = np.zeros((R,), np.int32)
+        for seq in self.sched.running.values():
+            window[seq.slot, 0] = seq.last_token
+            window[seq.slot, 1:] = self._propose(seq)
+            remaining = seq.req.max_new - len(seq.emitted)
+            caps[seq.slot] = max(0, min(
+                W - 1,
+                remaining - 1,                       # a+1 <= max_new budget
+                len(seq.pages) * bs - seq.length - 1))   # KV on real pages
+        g, a, self.cache = self._verify(
+            self.params, jnp.asarray(window), self.cache,
+            jnp.asarray(self._active), jnp.asarray(caps))
+        g, a = np.asarray(g, np.int32), np.asarray(a, np.int32)
+        n_tokens = 0
+        for seq in list(self.sched.running.values()):
+            ar = int(a[seq.slot])
+            toks = list(window[seq.slot, 1:ar + 1]) + [int(g[seq.slot, ar])]
+            if self.scfg.eos_id >= 0 and self.scfg.eos_id in toks:
+                toks = toks[: toks.index(self.scfg.eos_id) + 1]
+            seq.emitted.extend(int(t) for t in toks)
+            seq.last_token = seq.emitted[-1]
+            seq.length += ar + 1        # matches the device-side bump
+            n_tokens += len(toks)
+            self._spec_accepted += ar
+            self._spec_proposed += int(caps[seq.slot]) if W > 1 else 0
+            if (len(seq.emitted) >= seq.req.max_new
+                    or seq.emitted[-1] == self.scfg.eos_id
+                    or seq.length + 1 > self.pcfg.tokens_per_seq):
+                self._step_finished.append(seq.rid)
+                self._finish(seq)
+        return n_tokens
+
     def step(self) -> dict:
-        """One scheduler step: admit/evict, prefill admits, decode all.
+        """One scheduler step: admit/evict, prefill admits, COW-split
+        shared pages, then decode (or draft+verify) every running row.
 
         Returns a stats dict: admitted/preempted/finished rids, tokens
-        generated, page utilization, and the structural ``rns_ops``.
+        generated, page utilization, prefix-cache and speculative
+        counters, and the structural ``rns_ops``.
         """
         t0 = time.perf_counter()
+        self._step_finished: list[int] = []
+        self._spec_accepted = self._spec_proposed = 0
         plan = self.sched.schedule()
-        if plan.admitted or plan.preempted or plan.grew:
+        if plan.admitted or plan.preempted or plan.grew or plan.cow:
             self._tables_dirty = True
         for seq in plan.admitted:
             self._do_prefill(seq)
+        if plan.cow:
+            # duplicate shared pages BEFORE any decode write lands on them
+            self._apply_cow(plan.cow)
         # admission already produced one token per new row: those rows may
         # already be done (max_new=1 or eos on the first token)
-        finished = []
         for seq in list(self.sched.running.values()):
             if seq.emitted and (
                     len(seq.emitted) >= seq.req.max_new
                     or seq.emitted[-1] == self.scfg.eos_id):
-                finished.append(seq.rid)
+                self._step_finished.append(seq.rid)
                 self._finish(seq)
 
         n_tokens = 0
+        decoded = bool(self.sched.running)
+        decode_rows = len(self.sched.running)
         if self.sched.running:
             bt, lengths, active, last = self.sched.tables()
             if self._tables_dirty or not np.array_equal(active, self._active):
@@ -349,31 +542,31 @@ class ContinuousEngine:
                 self.cache = kv.set_tables(self.cache, bt, lengths)
                 self._active = active
                 self._tables_dirty = False
-            nxt, self.cache = self._decode(
-                self.params, jnp.asarray(last[:, None]), self.cache,
-                jnp.asarray(self._active))
-            nxt = np.asarray(nxt, np.int32)
-            for seq in list(self.sched.running.values()):
-                tok = int(nxt[seq.slot])
-                seq.emitted.append(tok)
-                seq.last_token = tok
-                seq.length += 1
-                n_tokens += 1
-                if (len(seq.emitted) >= seq.req.max_new
-                        or tok == self.scfg.eos_id
-                        or seq.length + 1 > self.pcfg.tokens_per_seq):
-                    finished.append(seq.rid)
-                    self._finish(seq)
+            if self.scfg.spec_decode:
+                n_tokens = self._decode_spec(last)
+            else:
+                n_tokens = self._decode_vanilla(last)
         self._step_idx += 1
+        alloc = self.sched.alloc
         return {
             "step": self._step_idx,
             "admitted": [s.rid for s in plan.admitted],
             "preempted": plan.preempted,
-            "finished": finished,
+            "finished": self._step_finished,
             "active": len(self.sched.running),
             "waiting": len(self.sched.waiting),
             "new_tokens": n_tokens,
-            "page_utilization": self.sched.alloc.utilization,
+            "decoded": decoded,
+            "decode_rows": decode_rows,
+            "page_utilization": alloc.utilization,
+            # prefix-cache accounting (cumulative counters + this plan)
+            "cow_splits": len(plan.cow),
+            "cache_hit_tokens": sum(s.cached_tokens for s in plan.admitted),
+            "pages_allocated_total": alloc.pages_allocated,
+            "pages_shared_total": alloc.pages_shared,
+            # speculative accounting (this step)
+            "spec_proposed": self._spec_proposed,
+            "spec_accepted": self._spec_accepted,
             "rns_ops": self._rns_ops(len(plan.admitted)),
             "step_time_s": time.perf_counter() - t0,
         }
@@ -398,6 +591,10 @@ class ContinuousEngine:
         out = {r: self.results.pop(r) for r in done if r in self.results}
         lat = [self.latencies.pop(r) for r in done if r in self.latencies]
         total = sum(len(v) for v in out.values())
+        decode_rows = sum(s["decode_rows"] for s in steps)
+        new_in_decode = sum(s["new_tokens"] for s in steps)
+        proposed = sum(s["spec_proposed"] for s in steps)
+        accepted = sum(s["spec_accepted"] for s in steps)
         stats = {
             "n_requests": len(done),
             "n_steps": len(steps),
@@ -410,6 +607,17 @@ class ContinuousEngine:
                 np.mean([s["page_utilization"] for s in steps])) if steps
             else 0.0,
             "n_preemptions": sum(len(s["preempted"]) for s in steps),
+            # speculative decoding: mean decoded tokens per ROW per decode
+            # step (> 1 iff drafts are being accepted) and the acceptance
+            # rate over eligible (cap-respecting) drafts
+            "tokens_per_step": (new_in_decode / decode_rows
+                                if decode_rows else 0.0),
+            "acceptance_rate": accepted / proposed if proposed else 0.0,
+            # prefix caching: cumulative allocator/COW traffic
+            "cache_hit_tokens": sum(s["cache_hit_tokens"] for s in steps),
+            "cow_splits": sum(s["cow_splits"] for s in steps),
+            "pages_allocated": self.sched.alloc.pages_allocated,
+            "pages_shared": self.sched.alloc.pages_shared,
             "steps": steps,
         }
         return out, stats

@@ -32,20 +32,25 @@ is consumed by ``serve/scheduler.py``.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 __all__ = [
     "TRASH_PAGE",
     "PagedCacheConfig",
     "PageAllocator",
+    "PrefixCache",
     "make_paged_cache",
     "set_tables",
     "gather_pages",
     "write_token",
+    "write_token_window",
     "write_prompt_pages",
+    "copy_pages",
 ]
 
 #: physical page reserved as the write-target / read-source of inactive
@@ -83,15 +88,25 @@ class PagedCacheConfig:
 
 
 class PageAllocator:
-    """Host-side free list over physical pages 1..n_pages-1 (0 = trash).
+    """Refcounted host-side free list over pages 1..n_pages-1 (0 = trash).
 
-    ``free`` is IDEMPOTENT: a page already on the free list is skipped
-    rather than raised on.  The scheduler can preempt a sequence in the
-    same engine step that it finishes (growth runs before the finished
-    check), and the preemption path and the completion path both release
-    pages — releasing twice must not corrupt the free list or hand one
-    physical page to two sequences.  Out-of-range ids still raise: those
-    are real bugs, not benign races.
+    Prefix caching maps several sequences' block tables (plus the prefix
+    index itself) onto one physical page, so every allocated page carries
+    a reference count: :meth:`alloc` hands out pages at refcount 1,
+    :meth:`incref` registers another holder, and :meth:`free` releases
+    ONE holder's reference — the page returns to the free list only when
+    the last holder lets go.
+
+    ``free`` stays IDEMPOTENT for fully-released pages: a page already on
+    the free list is skipped rather than raised on.  The scheduler can
+    preempt a sequence in the same engine step that it finishes (growth
+    runs before the finished check), and the preemption path and the
+    completion path both release pages — releasing twice must not corrupt
+    the free list, hand one physical page to two sequences, or drive a
+    *shared* page's count below its other holders' (the scheduler zeroes
+    a stale state's page list at its first release, so a double release
+    can only ever see an already-free page).  Out-of-range ids still
+    raise: those are real bugs, not benign races.
     """
 
     def __init__(self, n_pages: int):
@@ -99,6 +114,11 @@ class PageAllocator:
         # LIFO reuse keeps the working set of hot pages small
         self._free = list(range(n_pages - 1, TRASH_PAGE, -1))
         self._free_set = set(self._free)    # O(1) idempotence check
+        self._ref: dict[int, int] = {}      # allocated page -> #holders
+        # cumulative traffic counters (the zero-redundant-write assertions
+        # in tests/benchmarks read these)
+        self.pages_allocated = 0            # fresh pages handed out
+        self.pages_shared = 0               # increfs (block-table reuse)
 
     @property
     def n_free(self) -> int:
@@ -109,13 +129,28 @@ class PageAllocator:
         usable = self.n_pages - 1
         return (usable - len(self._free)) / max(usable, 1)
 
+    def refcount(self, pg: int) -> int:
+        """Current holder count (0 for free pages)."""
+        return self._ref.get(pg, 0)
+
     def alloc(self, n: int) -> list[int] | None:
-        """Pop ``n`` pages, or None (and no change) if not enough."""
+        """Pop ``n`` pages at refcount 1, or None (no change) if short."""
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
         self._free_set.difference_update(pages)
+        for pg in pages:
+            self._ref[pg] = 1
+        self.pages_allocated += n
         return pages
+
+    def incref(self, pages: list[int]) -> None:
+        """Register another holder of already-allocated pages."""
+        for pg in pages:
+            if self._ref.get(pg, 0) < 1:
+                raise ValueError(f"incref of unallocated page {pg}")
+            self._ref[pg] += 1
+        self.pages_shared += len(pages)
 
     def free(self, pages: list[int]) -> None:
         for pg in pages:
@@ -123,8 +158,150 @@ class PageAllocator:
                 raise ValueError(f"bad page id {pg}")
             if pg in self._free_set:
                 continue                    # already free: idempotent
+            self._ref[pg] -= 1
+            if self._ref[pg] > 0:
+                continue                    # other holders keep it alive
+            del self._ref[pg]
             self._free.append(pg)
             self._free_set.add(pg)
+
+
+class PrefixCache:
+    """Content-addressed prefix -> physical-page index (host side).
+
+    Causal attention makes a page's KV a pure function of the token
+    prefix ending at that page, so a page can be keyed by the *exact
+    bytes* of that prefix: ``key(i) = tokens[: (i+1)*page_size]`` for a
+    full block, ``key = tokens[:T]`` for a prompt's partial last block.
+    Exact byte keys mean lookups can never alias distinct prefixes — two
+    different prefixes have different keys, full stop (no hashing
+    collisions to reason about; python's dict hashing is an
+    implementation detail behind exact key equality).
+
+    Entries hold one allocator reference each (the index is a holder like
+    any sequence), so a cached page survives its producer and is
+    reclaimed by :meth:`evict` (LRU) when the pool runs dry.  Partial
+    entries expose ``valid`` tokens; an adopting sequence reads only
+    positions < ``valid`` (masked by its lengths) and COW-splits the page
+    on its first write into it (see serve/scheduler.py).
+    """
+
+    def __init__(self, alloc: PageAllocator, page_size: int):
+        self.alloc = alloc
+        self.bs = page_size
+        # key -> (page, valid_tokens); ordered = LRU (oldest first)
+        self._entries: collections.OrderedDict[bytes, tuple[int, int]] = (
+            collections.OrderedDict())
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        #: bumped whenever the entry set changes — peek results are only
+        #: valid within one generation (the scheduler memoizes on it)
+        self.generation = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @staticmethod
+    def _bytes(tokens: np.ndarray, n: int) -> bytes:
+        return np.ascontiguousarray(tokens[:n], np.int32).tobytes()
+
+    def _get(self, key: bytes):
+        e = self._entries.get(key)
+        if e is not None:
+            self._entries.move_to_end(key)      # LRU touch
+        return e
+
+    def lookup(self, tokens: np.ndarray):
+        """Per-block share map for a prompt: ([page_or_None per block],
+        n_cached_tokens).  Blocks are independent — the key of block i
+        embeds the whole prefix, so a later block can hit even if an
+        earlier one was evicted (the admitting sequence recomputes and
+        blits the misses; the hits are adopted read-only).  The last
+        partial block hits only on an exact whole-prompt match.  Pages
+        are returned WITHOUT a reference; the adopter increfs.
+        """
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        T = len(tokens)
+        shared: list[int | None] = []
+        n_cached = 0
+        for i in range(T // self.bs):
+            e = self._get(self._bytes(tokens, (i + 1) * self.bs))
+            shared.append(e[0] if e is not None else None)
+            if e is not None:
+                n_cached += self.bs
+                self.hits += 1
+            else:
+                self.misses += 1
+        if T % self.bs:
+            e = self._get(self._bytes(tokens, T))
+            shared.append(e[0] if e is not None else None)
+            if e is not None:
+                n_cached += T % self.bs
+                self.hits += 1
+            else:
+                self.misses += 1
+        return shared, n_cached
+
+    def peek_cached_tokens(self, tokens: np.ndarray) -> int:
+        """Cached-token count for a prompt WITHOUT touching LRU order or
+        the hit/miss counters — the scheduler's admission-preference scan
+        probes every waiting request and must not pollute either."""
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        T = len(tokens)
+        n = 0
+        for i in range(T // self.bs):
+            if self._bytes(tokens, (i + 1) * self.bs) in self._entries:
+                n += self.bs
+        if T % self.bs and self._bytes(tokens, T) in self._entries:
+            n += T % self.bs
+        return n
+
+    def insert(self, tokens: np.ndarray, pages: list[int]) -> int:
+        """Register a prefilled prompt's blocks; returns #new entries.
+
+        Every full block (and the partial tail, if any) is keyed by its
+        prefix bytes and increfs its page.  Keys that already exist are
+        left alone — by content addressing the existing page holds the
+        identical KV.
+        """
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        T = len(tokens)
+        added = 0
+        ends = [(i + 1) * self.bs for i in range(T // self.bs)]
+        if T % self.bs:
+            ends.append(T)
+        for i, end in enumerate(ends):
+            key = self._bytes(tokens, end)
+            if key in self._entries or i >= len(pages):
+                continue
+            self.alloc.incref([pages[i]])
+            self._entries[key] = (pages[i], end)
+            self._entries.move_to_end(key)
+            added += 1
+        if added:
+            self.generation += 1
+        return added
+
+    def evict(self, n_pages: int) -> int:
+        """Release up to ``n_pages`` LRU entries whose page would
+        actually return to the pool (refcount 1 — index-only holders);
+        entries still shared by running sequences are kept (hot).
+        Returns the number of pages freed."""
+        freed = 0
+        for key in list(self._entries):
+            if freed >= n_pages:
+                break
+            page, _ = self._entries[key]
+            if self.alloc.refcount(page) != 1:
+                continue
+            del self._entries[key]
+            self.alloc.free([page])
+            self.evictions += 1
+            freed += 1
+        if freed:
+            self.generation += 1
+        return freed
 
 
 # ------------------------------------------------------- device pytrees ---
@@ -219,6 +396,36 @@ def write_token(pages, block_table, lengths, vals):
     page = jnp.take_along_axis(block_table, blk[:, None], axis=1,
                                mode="fill", fill_value=TRASH_PAGE)[:, 0]
     return pages.at[page, lengths % bs].set(vals.astype(pages.dtype))
+
+
+def write_token_window(pages, block_table, lengths, vals):
+    """Scatter W consecutive tokens per row starting at its length.
+
+    ``vals`` [R, W, ...] (a speculative-verify window): token i of row r
+    goes to logical position ``lengths[r] + i``.  Like
+    :func:`write_token`, positions past the row's table (block index >=
+    nb) or on unallocated blocks redirect to the trash page, so draft
+    tokens past a row's pages lose their KV harmlessly — the engine caps
+    acceptance to what landed on real pages.
+    """
+    bs = pages.shape[1]
+    W = vals.shape[1]
+    pos = lengths[:, None] + jnp.arange(W)[None]            # [R, W]
+    page = jnp.take_along_axis(block_table, pos // bs, axis=1,
+                               mode="fill", fill_value=TRASH_PAGE)
+    return pages.at[page, pos % bs].set(vals.astype(pages.dtype))
+
+
+def copy_pages(pages, src, dst):
+    """Copy page contents src[i] -> dst[i] (periods-stacked pool).
+
+    ``pages`` [n_periods, P, bs, ...]; ``src``/``dst`` [m] int32.  The
+    copy-on-write split: a sequence about to write into a shared page
+    first duplicates it onto a fresh page and repoints its block table.
+    No-op rows pass ``src = dst = TRASH_PAGE`` (trash copies onto trash),
+    which keeps the jitted copy's shapes fixed — one compile ever.
+    """
+    return pages.at[:, dst].set(pages[:, src])
 
 
 def write_prompt_pages(pages, block_row, planes):

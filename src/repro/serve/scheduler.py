@@ -1,23 +1,48 @@
 """Continuous-batching request scheduler (host-side policy, no jax).
 
 One :class:`Scheduler` owns the page pool and the slot map and makes the
-three in-flight-batching decisions each engine step:
+in-flight-batching decisions each engine step:
 
-  * **growth** — running sequences get their next page just before the
-    decode step that will write into it; running rows always outrank
-    new admissions for pages.
+  * **growth** — running sequences get the page(s) the tokens they write
+    next will land in; with speculative decoding the write window is
+    ``lookahead`` tokens wide, so the first page is preemption-backed
+    (required for the guaranteed one-token-per-step progress) and the
+    rest are best-effort (draft KV past the allocated pages goes to the
+    trash page and the engine caps acceptance).  Running rows always
+    outrank new admissions for pages.
+  * **copy-on-write** — a row about to write into a *shared* page
+    (refcount > 1: the prefix index and/or other rows hold it) first
+    splits it: a fresh page is allocated, the engine copies the contents
+    on device (``kv_cache.copy_pages``), and the row's block table is
+    repointed.  The shared original stays frozen for its other holders.
   * **preemption** — when the pool is exhausted, the *youngest* running
     sequence (LIFO, the vLLM recompute policy) is evicted: its pages are
     freed and the request returns to the *front* of the waiting queue.
     Re-admission re-prefills from the original prompt; greedy decoding
     makes the regenerated tokens identical to the uninterrupted run
-    (asserted in tests/test_serve_continuous.py).
-  * **admission** — FCFS from the waiting queue while a slot is free and
-    the pool can hold the prompt plus one decode token.
+    (asserted in tests/test_serve_continuous.py).  A sequence preempted
+    ``preempt_shield`` times becomes immune: victim selection skips it
+    while any unshielded candidate exists, which bounds how often
+    page-growth priority can bounce the same request (starvation guard).
+  * **admission** — while a slot is free and the pool can hold the
+    prompt plus one decode token.  With the prefix cache on, the waiting
+    request with the longest cached prefix is admitted first (its shared
+    pages cost nothing); strict FCFS resumes whenever the queue head was
+    preempted before or has waited ``starvation_limit`` steps — the
+    cache preference must not starve the head (second starvation guard).
+
+With ``prefix_cache=True`` the scheduler also maintains the
+content-addressed :class:`~repro.serve.kv_cache.PrefixCache`: admissions
+adopt cached pages block-by-block (the engine's prefill blit skips them
+— zero redundant page writes), prefilled full-prompt blocks are
+registered immediately, and a finishing/preempted row stashes its
+partial last prompt block before releasing its pages (registering it any
+earlier would force the producer itself to COW its own tail).
 
 The scheduler never touches device memory: it hands the engine numpy
-block tables / lengths / active masks (:meth:`tables`) and lists of
-sequences to prefill.  All device work lives in ``serve/engine.py``.
+block tables / lengths / active masks (:meth:`tables`), lists of
+sequences to prefill, and COW (slot, block, src, dst) splits to copy.
+All device work lives in ``serve/engine.py``.
 """
 
 from __future__ import annotations
@@ -27,7 +52,12 @@ import dataclasses
 
 import numpy as np
 
-from repro.serve.kv_cache import TRASH_PAGE, PagedCacheConfig, PageAllocator
+from repro.serve.kv_cache import (
+    TRASH_PAGE,
+    PageAllocator,
+    PagedCacheConfig,
+    PrefixCache,
+)
 
 __all__ = ["Request", "SeqState", "StepPlan", "Scheduler"]
 
@@ -38,6 +68,8 @@ class Request:
     tokens: np.ndarray          # [T] int32 prompt
     max_new: int
     submit_time: float = 0.0
+    wait_steps: int = 0         # scheduler steps spent waiting (starvation)
+    n_preempts: int = 0         # times evicted (preemption shield)
 
 
 @dataclasses.dataclass
@@ -51,6 +83,8 @@ class SeqState:
     emitted: list[int]          # generated token ids (greedy)
     last_token: int = 0
     admit_seq: int = -1         # admission order (LIFO preemption key)
+    cached_tokens: int = 0      # prompt tokens served by the prefix cache
+    shared_blocks: set[int] = dataclasses.field(default_factory=set)
 
     @property
     def rid(self) -> int:
@@ -64,16 +98,30 @@ class StepPlan:
     admitted: list[SeqState]    # need a prefill + page blit
     preempted: list[int]        # rids evicted back to the queue
     grew: bool = False          # some running row got a new page
+    # copy-on-write splits: device copies src -> dst the engine must run
+    # BEFORE this step's decode writes (block tables already repointed)
+    cow: list[tuple[int, int, int, int]] = dataclasses.field(
+        default_factory=list)           # (slot, block, src, dst)
 
 
 class Scheduler:
-    def __init__(self, pcfg: PagedCacheConfig):
+    def __init__(self, pcfg: PagedCacheConfig, *, prefix_cache: bool = False,
+                 lookahead: int = 1, starvation_limit: int = 8,
+                 preempt_shield: int = 2):
         self.pcfg = pcfg
         self.alloc = PageAllocator(pcfg.n_pages)
+        self.prefix = (PrefixCache(self.alloc, pcfg.page_size)
+                       if prefix_cache else None)
+        self.lookahead = max(1, lookahead)
+        self.starvation_limit = starvation_limit
+        self.preempt_shield = preempt_shield
         self.waiting: collections.deque[Request] = collections.deque()
         self.running: dict[int, SeqState] = {}          # slot -> seq
         self._free_slots = list(range(pcfg.max_seqs - 1, -1, -1))
         self._admit_clock = 0
+        self._peek_memo: dict[int, tuple[int, int]] = {}   # rid -> (gen, n)
+        self.cow_splits = 0
+        self.cache_hit_tokens = 0
 
     # ------------------------------------------------------------ intake --
     def submit(self, req: Request) -> None:
@@ -96,16 +144,51 @@ class Scheduler:
         return bool(self.waiting or self.running)
 
     # ------------------------------------------------------------ policy --
+    def _alloc(self, n: int) -> list[int] | None:
+        """Allocate, reclaiming LRU prefix-cache pages before giving up."""
+        pages = self.alloc.alloc(n)
+        if pages is None and self.prefix is not None:
+            self.prefix.evict(n - self.alloc.n_free)
+            pages = self.alloc.alloc(n)
+        return pages
+
+    def _stash_prefix(self, seq: SeqState) -> None:
+        """Register a departing row's prompt blocks (incl. partial tail).
+
+        Full blocks were registered at prefill; the partial tail is only
+        stashed now, when the producer stops writing into it — from here
+        on the page is frozen and any adopter COW-splits before writing.
+
+        A row evicted before its prefill ran (admitted and preempted in
+        the same schedule() call) has nothing to stash: its pages were
+        never blitted, and registering them would poison the index with
+        never-written KV that a readmission would then silently adopt.
+        """
+        if self.prefix is not None and seq.pages and seq.emitted:
+            self.prefix.insert(seq.req.tokens, seq.pages)
+
     def _preempt_youngest(self) -> int | None:
-        """Evict the most recently admitted running seq; return its rid."""
+        """Evict the most recently admitted unshielded running seq.
+
+        Rows preempted ``preempt_shield`` times are skipped while any
+        other candidate exists — page-growth priority must not bounce the
+        same request forever (readmission is bounded; see the adversarial
+        trace in tests/test_serve_continuous.py).  Returns the rid.
+        """
         if not self.running:
             return None
-        victim = max(self.running.values(), key=lambda s: s.admit_seq)
+        cands = [s for s in self.running.values()
+                 if s.req.n_preempts < self.preempt_shield]
+        victim = max(cands or self.running.values(),
+                     key=lambda s: s.admit_seq)
+        victim.req.n_preempts += 1
+        self._stash_prefix(victim)
         self.alloc.free(victim.pages)
         # clear the stale SeqState's pages: the engine may still hold a
         # reference (e.g. it preempts a sequence the same step it
         # finishes) and must not re-free them through complete()
         victim.pages = []
+        victim.shared_blocks = set()
         self._free_slots.append(victim.slot)
         del self.running[victim.slot]
         # back to the FRONT: it has the oldest arrival among waiting peers
@@ -113,15 +196,22 @@ class Scheduler:
         return victim.rid
 
     def _grow(self, preempted: list[int]) -> bool:
-        """Give every running row a page for the token it writes next."""
+        """Give every running row page(s) for the tokens it writes next.
+
+        The first page (position ``length``) is required — preemption
+        backs it so every surviving row emits at least one token per
+        step.  Lookahead pages (speculative-draft writes) are best-effort
+        only: a missing one just sends that draft's KV to the trash page
+        and the engine caps acceptance accordingly.
+        """
         bs = self.pcfg.page_size
         grew = False
         for seq in sorted(self.running.values(), key=lambda s: s.admit_seq):
-            if seq.slot not in self.running:        # preempted below us
+            if self.running.get(seq.slot) is not seq:   # preempted below us
                 continue
-            needed_blocks = seq.length // bs + 1
-            while len(seq.pages) < needed_blocks:
-                got = self.alloc.alloc(1)
+            required = seq.length // bs + 1
+            while len(seq.pages) < required:
+                got = self._alloc(1)
                 if got is not None:
                     seq.pages.extend(got)
                     grew = True
@@ -132,33 +222,159 @@ class Scheduler:
                         preempted.append(rid)
                     break                           # seq itself evicted
                 preempted.append(rid)
+            desired = min((seq.length + self.lookahead - 1) // bs + 1,
+                          self.pcfg.max_blocks)
+            while (self.running.get(seq.slot) is seq
+                   and len(seq.pages) < desired):
+                got = self._alloc(1)
+                if got is None:
+                    break                           # best-effort only
+                seq.pages.extend(got)
+                grew = True
         return grew
+
+    def _cow_split(self, preempted: list[int]) -> list[tuple[int, int, int, int]]:
+        """Split every shared page in a row's upcoming write window.
+
+        A page with refcount > 1 is frozen (the prefix index and/or other
+        rows read it); the row about to write positions
+        ``length .. length+lookahead-1`` gets a fresh copy and drops its
+        reference on the original.  The engine runs the device copies
+        before the decode step.
+        """
+        cow: list[tuple[int, int, int, int]] = []
+        bs = self.pcfg.page_size
+        for seq in sorted(self.running.values(), key=lambda s: s.admit_seq):
+            if self.running.get(seq.slot) is not seq:
+                continue
+            b0 = seq.length // bs
+            b1 = min((seq.length + self.lookahead - 1) // bs,
+                     len(seq.pages) - 1)
+            for b in range(b0, b1 + 1):
+                if self.running.get(seq.slot) is not seq:
+                    break                           # evicted mid-split
+                src = seq.pages[b]
+                if self.alloc.refcount(src) <= 1:
+                    continue
+                fresh = self._alloc(1)
+                while fresh is None:
+                    rid = self._preempt_youngest()
+                    if rid is None:
+                        break
+                    preempted.append(rid)
+                    if rid == seq.rid:
+                        break                       # seq itself evicted
+                    fresh = self._alloc(1)
+                if fresh is None or self.running.get(seq.slot) is not seq:
+                    break
+                dst = fresh[0]
+                cow.append((seq.slot, b, src, dst))
+                seq.pages[b] = dst
+                seq.shared_blocks.discard(b)
+                self.alloc.free([src])              # drop OUR ref only
+                self.cow_splits += 1
+        return cow
+
+    def _pick_next(self) -> int:
+        """Index into ``waiting`` of the next admission candidate.
+
+        Prefix-cache preference: the request with the longest cached
+        prefix goes first (its shared blocks cost no pages and no
+        writes).  Strict FCFS resumes when the queue head was preempted
+        or has waited ``starvation_limit`` steps — preference must not
+        starve it.
+        """
+        if self.prefix is None or len(self.waiting) <= 1:
+            return 0
+        head = self.waiting[0]
+        if head.n_preempts > 0 or head.wait_steps >= self.starvation_limit:
+            return 0
+        best, best_cached = 0, -1
+        gen = self.prefix.generation
+        for i, req in enumerate(self.waiting):
+            # memoized per (request, index generation): the probe hashes
+            # O(T^2/page_size) prefix bytes, and this scan runs for the
+            # whole queue on every admission attempt — without the memo
+            # that cost multiplies by queue length x steps
+            memo = self._peek_memo.get(req.rid)
+            if memo is not None and memo[0] == gen:
+                n_cached = memo[1]
+            else:
+                n_cached = self.prefix.peek_cached_tokens(req.tokens)
+                self._peek_memo[req.rid] = (gen, n_cached)
+            if n_cached > best_cached:
+                best, best_cached = i, n_cached
+        return best
 
     def _admit(self) -> list[SeqState]:
         bs = self.pcfg.page_size
         admitted = []
         while self.waiting and self._free_slots:
-            req = self.waiting[0]
+            idx = self._pick_next()
+            req = self.waiting[idx]
             n_blocks = -(-(len(req.tokens) + 1) // bs)
-            pages = self.alloc.alloc(n_blocks)
-            if pages is None:
-                break                               # head-of-line blocks: FCFS
-            self.waiting.popleft()
+            shared: list[int | None] = [None] * n_blocks
+            n_cached = 0
+            if self.prefix is not None:
+                hit, n_cached = self.prefix.lookup(req.tokens)
+                shared[: len(hit)] = hit
+            share_map = {b: pg for b, pg in enumerate(shared)
+                         if pg is not None}
+            # incref the adopted pages BEFORE the fresh allocation: _alloc
+            # may evict LRU index entries, and an index-only hit page
+            # (refcount 1) is exactly what eviction frees — without our
+            # reference it could be freed and handed straight back as one
+            # of the "fresh" pages below (one physical page, two blocks)
+            self.alloc.incref(list(share_map.values()))
+            fresh = self._alloc(n_blocks - len(share_map))
+            if fresh is None:
+                self.alloc.free(list(share_map.values()))   # undo adoption
+                break                               # head-of-line blocks
+            fi = iter(fresh)
+            pages = [share_map[b] if b in share_map else next(fi)
+                     for b in range(n_blocks)]
+            del self.waiting[idx]
+            self._peek_memo.pop(req.rid, None)
+            req.wait_steps = 0
             slot = self._free_slots.pop()
             seq = SeqState(req=req, slot=slot, pages=pages,
                            length=len(req.tokens), emitted=[],
-                           admit_seq=self._admit_clock)
+                           admit_seq=self._admit_clock,
+                           cached_tokens=n_cached,
+                           shared_blocks=set(share_map))
             self._admit_clock += 1
             self.running[slot] = seq
             admitted.append(seq)
+            self.cache_hit_tokens += n_cached
         return admitted
 
     def schedule(self) -> StepPlan:
-        """Growth (with LIFO preemption) then FCFS admission."""
+        """Growth (with LIFO preemption), admission, then COW splits."""
+        for req in self.waiting:
+            req.wait_steps += 1
         preempted: list[int] = []
         grew = self._grow(preempted)
         admitted = self._admit()
-        return StepPlan(admitted=admitted, preempted=preempted, grew=grew)
+        # COW runs last so it also covers rows admitted THIS step (their
+        # first decode write can land in an adopted partial block)
+        cow = self._cow_split(preempted)
+        admitted = [s for s in admitted
+                    if self.running.get(s.slot) is s]   # COW may evict
+        return StepPlan(admitted=admitted, preempted=preempted, grew=grew,
+                        cow=cow)
+
+    def register_prefix(self, seq: SeqState) -> None:
+        """Called by the engine right after a prefill blit: the prompt's
+        FULL blocks now hold final KV and become discoverable.  The
+        partial tail stays private until the row departs
+        (:meth:`_stash_prefix`) — the producer keeps writing into it."""
+        if self.prefix is None:
+            return
+        T = len(seq.req.tokens)
+        n_full = T // self.pcfg.page_size
+        if n_full:
+            self.prefix.insert(seq.req.tokens[: n_full * self.pcfg.page_size],
+                               seq.pages[:n_full])
 
     def complete(self, seq: SeqState) -> None:
         """Finished row: free its pages and slot immediately.
@@ -170,8 +386,10 @@ class Scheduler:
         """
         if self.running.get(seq.slot) is not seq:
             return
+        self._stash_prefix(seq)
         self.alloc.free(seq.pages)
         seq.pages = []
+        seq.shared_blocks = set()
         self._free_slots.append(seq.slot)
         del self.running[seq.slot]
 
@@ -192,8 +410,17 @@ class Scheduler:
         return bt, lengths, active, last
 
     def block_row(self, seq: SeqState, n_blocks: int) -> np.ndarray:
-        """[n_blocks] physical pages for a prompt blit (trash-padded)."""
+        """[n_blocks] physical pages for a prompt blit (trash-padded).
+
+        Blocks adopted from the prefix cache map to the TRASH page: their
+        KV is already resident in the shared page, and blitting it again
+        would be a redundant write into a frozen page.  This is the
+        zero-redundant-page-writes half of the prefix-cache contract
+        (the allocator's ``pages_shared`` counter is the other)."""
         row = np.full((n_blocks,), TRASH_PAGE, np.int32)
         k = min(len(seq.pages), n_blocks)
         row[:k] = seq.pages[:k]
+        for b in seq.shared_blocks:
+            if b < n_blocks:
+                row[b] = TRASH_PAGE
         return row

@@ -72,6 +72,65 @@ def test_tune_real_bench_smoke(tmp_cache, monkeypatch):
     assert tmp_cache.exists()
 
 
+@pytest.mark.parametrize("payload", [
+    "{not json",                                         # invalid JSON
+    "[1, 2, 3]",                                         # wrong top level
+    '{"version": 99, "entries": {}}',                    # future version
+    '{"version": 1, "entries": 5}',                      # entries wrong type
+    '{"version": 1, "entries": {"k": "junk"}}',          # row wrong type
+    '{"version": 1, "entries": {"k": {"us": 1.0}}}',     # row missing blocks
+    '{"version": 1, "entries": {"k": {"blocks": ["bm"]}}}',
+    '{"version": 1, "entries": {"k": {"blocks": {"bm": "big"}}}}',
+    '{"version": 1, "entries": {"k": {"blocks": {"evil": 8}}}}',
+    '{"version": 1, "entries": {"k": {"blocks": {"bm": -8}}}}',
+    '{"version": 1, "entries": {"k": {"blocks": {"bm": true}}}}',
+])
+def test_corrupt_cache_falls_back_to_defaults(tmp_cache, payload):
+    """A poisoned/corrupt/mismatched cache file must never crash a
+    lookup and never leak junk tile sizes into a kernel launch — every
+    malformed shape degrades to the hardcoded defaults."""
+    tmp_cache.write_text(payload)
+    autotune.clear_cache()
+    blk = autotune.get_blocks("rns_matmul", "rns9", (64, 256, 64))
+    assert blk == autotune.DEFAULTS["rns_matmul"]
+    assert autotune.get_blocks("rns_normalize", "rns9", (100,)) == \
+        autotune.DEFAULTS["rns_normalize"]
+
+
+def test_corrupt_cache_survives_partial_poisoning(tmp_cache):
+    """Valid rows next to junk rows: the junk is dropped, the good row
+    still serves (per-row validation, not all-or-nothing)."""
+    good_key = autotune._key("rns_matmul", "rns9", (64, 256, 64), "cpu")
+    tmp_cache.write_text(json.dumps({
+        "version": 1,
+        "entries": {
+            good_key: {"blocks": {"bm": 64, "bn": 256, "bk": 256}},
+            "bad-row": {"blocks": {"bm": "nope"}},
+            3: {"blocks": {"bm": 64}},
+        }}))
+    autotune.clear_cache()
+    blk = autotune.get_blocks("rns_matmul", "rns9", (64, 256, 64),
+                              backend="cpu")
+    assert blk == {"bm": 64, "bn": 256, "bk": 256}
+
+
+def test_tune_rewrites_corrupt_cache(tmp_cache):
+    """tune() over a corrupt file persists a fresh valid file (the
+    measure -> persist path self-heals)."""
+    tmp_cache.write_text("{definitely not json")
+    autotune.clear_cache()
+    want = {"bm": 64, "bn": 128, "bk": 256}
+    autotune.tune("rns_matmul", "rns9", (32, 64, 32),
+                  bench_fn=lambda b: 0.0 if b == want else 1.0, repeats=1)
+    data = json.loads(tmp_cache.read_text())     # valid JSON again
+    assert data["version"] == 1
+    (entry,) = data["entries"].values()
+    assert entry["blocks"] == want
+    autotune.clear_cache()
+    got = autotune.get_blocks("rns_matmul", "rns9", (32, 64, 32))
+    assert {k: got[k] for k in want} == want
+
+
 def test_wrappers_consult_tuned_blocks(tmp_cache):
     """A tuned row changes the wrapper's compiled tiling (observable via
     the jit cache) without changing results."""

@@ -1,0 +1,97 @@
+"""Backend-differential serve matrix: every scenario, bit-identical.
+
+Demirkiran et al. (2023) argue RNS datapaths live or die by exactness at
+the boundaries; this matrix pins it operationally — the SAME serving
+scenario run through the jnp reference, the Pallas kernels (interpret),
+and the fused composite kernels (interpret) must produce token-identical
+streams AND the identical structural (converts, matmuls, normalizes)
+op-count triple, scenario by scenario:
+
+  * ragged prefill + mixed-length batched decode,
+  * recompute preemption + readmission under a tiny pool,
+  * copy-on-write prefix sharing,
+  * speculative (n-gram) draft + verify windows.
+
+``fused``/``fallbacks`` tallies legitimately differ per backend (they
+count composite launches and visible downgrades); the structural triple
+may not.  The CI backend-matrix job runs this file standalone.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import get_config
+from repro.core.rns_matmul import RnsDotConfig
+from repro.models import model as M
+from repro.serve.engine import ContinuousEngine, ServeConfig
+
+BACKENDS = ("reference", "pallas_interpret", "pallas_fused_interpret")
+
+SCENARIOS = {
+    # scenario -> (prompt lens, engine kwargs, min expected preemptions)
+    "ragged_prefill_mixed_decode": dict(
+        lens=(5, 12), kw=dict(max_seqs=2)),
+    "preempt_readmit": dict(
+        lens=(10, 9, 6), kw=dict(max_seqs=3, n_pages=8, page_size=4,
+                                 max_new_tokens=6),
+        preempts=True),
+    "prefix_share_cow": dict(
+        lens=(10, 10, 13), same_prefix=True,
+        kw=dict(max_seqs=1, prefix_cache=True)),
+    "spec_decode": dict(
+        lens=(5, 12), kw=dict(max_seqs=2, spec_decode=True, spec_k=3)),
+}
+
+
+@pytest.fixture(scope="module")
+def rns_model():
+    cfg = dataclasses.replace(get_config("smollm-135m", smoke=True),
+                              rns=RnsDotConfig(profile="rns9", qx=8, qw=8),
+                              rns_targets="mlp")
+    return cfg, M.init_model(jax.random.PRNGKey(0), cfg)[0]
+
+
+def _prompts(spec, vocab):
+    rng = np.random.default_rng(17)
+    lens = spec["lens"]
+    if spec.get("same_prefix"):
+        base = rng.integers(1, vocab, (max(lens),)).astype(np.int32)
+        return [np.concatenate([base[:L - 3],
+                                rng.integers(1, vocab, (3,)).astype(np.int32)])
+                if i == len(lens) - 1 else base[:L].copy()
+                for i, L in enumerate(lens)]
+    return [rng.integers(1, vocab, (L,)).astype(np.int32) for L in lens]
+
+
+def _run(cfg, params, spec, backend):
+    kw = dict(spec["kw"])
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_new_tokens", 3)
+    eng = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=24, rns_backend=backend, **kw))
+    res, stats = eng.run(_prompts(spec, cfg.vocab))
+    ops = stats["steps"][-1]["rns_ops"]
+    triple = (ops.converts, ops.matmuls, ops.normalizes)
+    return {r: v.tolist() for r, v in res.items()}, triple, stats
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_backend_matrix_token_identical(rns_model, scenario):
+    cfg, params = rns_model
+    spec = SCENARIOS[scenario]
+    ref_res, ref_ops, ref_stats = _run(cfg, params, spec, "reference")
+    if spec.get("preempts"):
+        assert ref_stats["n_preemptions"] > 0    # scenario really fired
+    if spec.get("same_prefix"):
+        assert ref_stats["cache_hit_tokens"] > 0
+        assert ref_stats["cow_splits"] > 0
+    if "spec_decode" in spec["kw"]:
+        assert ref_stats["tokens_per_step"] >= 1.0
+    for backend in BACKENDS[1:]:
+        res, ops, _ = _run(cfg, params, spec, backend)
+        assert res == ref_res, (scenario, backend)
+        assert ops == ref_ops, (scenario, backend)
