@@ -182,6 +182,78 @@ def bench_mlp_block_normalizes(report):
                f"converts={c.converts}")
 
 
+def bench_resident_weights(report):
+    """Tentpole claim (PR 6): resident residue-domain weights delete the
+    per-matmul weight conversion.  Structural: weight_converts drops to
+    zero.  HLO-costed on the 128x512x128 acceptance shape: fewer HBM
+    bytes (no re-materialized [K, 512, 128] weight residues) at identical
+    dot FLOPs.  Wall time is the CPU proxy."""
+    from repro.launch.hlo_cost import analyze_hlo
+    from repro.core.rns_matmul import rns_resident_dot
+    from repro.models.resident import _encode_one
+
+    rng = np.random.default_rng(8)
+    cfg = RnsDotConfig(profile="rns9", qx=8, qw=8)
+    x = jnp.asarray(rng.standard_normal((128, 512)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((512, 128)) / 24, jnp.float32)
+    w_res = _encode_one(w, "rns9", 8, 7.0)
+
+    re_fn = jax.jit(lambda x, w: rns_dot(x, w, cfg))
+    res_fn = jax.jit(lambda x, r: rns_resident_dot(x, r, cfg))
+    c_re = analyze_hlo(re_fn.lower(x, w).compile().as_text())
+    c_res = analyze_hlo(res_fn.lower(x, w_res).compile().as_text())
+    o_re = dispatch.trace_op_counts(lambda x: rns_dot(x, w, cfg), x)
+    o_res = dispatch.trace_op_counts(
+        lambda x: rns_resident_dot(x, w_res, cfg), x)
+    t_re = _t(re_fn, x, w, n=5)
+    t_res = _t(res_fn, x, w_res, n=5)
+    report("resident_dot_128x512x128_reencode", t_re,
+           f"weight_converts={o_re.weight_converts} "
+           f"converts={o_re.converts} hbm_bytes={c_re['hbm_bytes']:.0f} "
+           f"flops={c_re['flops']:.0f}")
+    report("resident_dot_128x512x128_resident", t_res,
+           f"weight_converts={o_res.weight_converts} "
+           f"converts={o_res.converts} hbm_bytes={c_res['hbm_bytes']:.0f} "
+           f"flops={c_res['flops']:.0f} "
+           f"hbm_saved={c_re['hbm_bytes'] - c_res['hbm_bytes']:.0f}B "
+           f"speedup={t_re / t_res:.2f}x")
+
+
+def bench_resident_mlp_block(report):
+    """Block-level structural budget: a gated MLP forward schedules 5
+    conversions (2 activation + 3 weight) on the re-encode path and 2 on
+    the resident path; per-layer narrow profiles additionally shrink the
+    digit count the narrow layers move."""
+    from repro.models.layers import init_mlp, mlp
+    from repro.models.resident import encode_resident, resident_profiles
+
+    class _Cfg:
+        rns_targets = "mlp"
+        rns = RnsDotConfig(profile="rns9", qx=8, qw=8)
+
+    rng = np.random.default_rng(9)
+    p, _ = init_mlp(jax.random.PRNGKey(1), 64, 128, gated=True)
+    x = jnp.asarray(rng.standard_normal((4, 8, 64)), jnp.float32)
+    variants = [("reencode", p)]
+    for tag, kw in (("resident", {}),
+                    ("resident_narrow", {"per_layer_profiles": True})):
+        variants.append(
+            (tag, encode_resident({"mlp": p}, _Cfg(), **kw)["mlp"]))
+    for tag, pp in variants:
+        c = dispatch.trace_op_counts(
+            lambda x, pp=pp: mlp(pp, x, gated=True, act="silu",
+                                 rns=_Cfg.rns), x)
+        us = _t(jax.jit(
+            lambda x, pp=pp: mlp(pp, x, gated=True, act="silu",
+                                 rns=_Cfg.rns)), x, n=3)
+        profs = sorted(set(resident_profiles({"mlp": pp}).values())) or ["-"]
+        report(f"resident_mlp_block_{tag}", us,
+               f"converts={c.converts} weight_converts={c.weight_converts} "
+               f"activation_converts={c.activation_converts} "
+               f"matmuls={c.matmuls} normalizes={c.normalizes} "
+               f"profiles={','.join(profs)}")
+
+
 def bench_paged_gather(report):
     """Serving-path overhead: the paged cache's block-table gather vs a
     dense cache read (the price of decoupling cache memory from batch).
@@ -234,3 +306,5 @@ def run_all(report):
     bench_mlp_block_normalizes(report)
     bench_paged_gather(report)
     bench_rns_matmul_wall(report)
+    bench_resident_weights(report)
+    bench_resident_mlp_block(report)

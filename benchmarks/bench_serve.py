@@ -169,6 +169,45 @@ def bench_rns_serving(report, arch="smollm-135m"):
                f"matmuls={ops.matmuls} converts={ops.converts}")
 
 
+def bench_resident_serving(report, arch="smollm-135m"):
+    """PR-6 tentpole at the serve level: resident residue-domain weights
+    (encode once at engine build) vs per-matmul re-encode, same traffic,
+    same tokens.  weight_converts must be zero on the resident rows; the
+    per-layer variant additionally reports the auto-selected narrow
+    profiles."""
+    import dataclasses
+
+    from repro.core.rns_matmul import RnsDotConfig
+    from repro.models.resident import resident_profiles
+
+    cfg = dataclasses.replace(get_config(arch, smoke=True),
+                              rns=RnsDotConfig(profile="rns9", qx=8, qw=8),
+                              rns_targets="mlp")
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(6)
+    prompts = [rng.integers(1, cfg.vocab, (L,)).astype(np.int32)
+               for L in (7, 33)]
+    variants = (("reencode", {}),
+                ("resident", dict(resident_weights=True)),
+                ("resident_narrow", dict(resident_weights=True,
+                                         per_layer_profiles=True)))
+    toks = {}
+    for tag, knobs in variants:
+        eng = ContinuousEngine(params, cfg, ServeConfig(
+            max_cache=64, max_new_tokens=8, page_size=16, max_seqs=2,
+            **knobs))
+        res, stats = eng.run(prompts)
+        toks[tag] = {r: v.tolist() for r, v in res.items()}
+        ops = stats["steps"][-1]["rns_ops"]
+        profs = sorted(set(resident_profiles(eng.params).values())) or ["-"]
+        report(f"serve_resident_{tag}", stats["wall_s"] * 1e6,
+               f"tok_s={stats['tokens_per_s']:.1f} "
+               f"weight_converts={ops.weight_converts} "
+               f"activation_converts={ops.activation_converts} "
+               f"profiles={','.join(profs)}")
+        assert toks[tag] == toks["reencode"], tag  # tokens must not move
+
+
 def _shared_prefix_traffic(vocab, n_req, prefix_len=48, tail=8, seed=7):
     """Multi-turn-style workload: every request extends one system
     prompt; the tails repeat a short pattern so n-gram lookup has
@@ -238,5 +277,6 @@ def run_all(report):
     bench_traffic_warm(report)
     bench_preemption(report)
     bench_rns_serving(report)
+    bench_resident_serving(report)
     bench_prefix_cache(report)
     bench_spec_decode(report)

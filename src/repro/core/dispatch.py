@@ -162,6 +162,12 @@ class OpCounts:
     ``fused`` entry per composite kernel launch.  ``fallbacks`` counts
     requested-backend downgrades (e.g. a normalize whose inv_scale
     escapes float32 range), which used to masquerade as pallas ops.
+
+    ``weight_converts`` is the subset of ``converts`` spent re-encoding
+    *static weights* (call sites pass ``convert(..., weight=True)``).
+    On the resident-weight path it is zero — weights are encoded once at
+    build time — so "resident equals re-encode minus weight converts" is
+    a structural assertion: compare ``activation_converts`` across paths.
     """
 
     converts: int = 0
@@ -169,10 +175,15 @@ class OpCounts:
     normalizes: int = 0
     fused: int = 0
     fallbacks: int = 0
+    weight_converts: int = 0
 
     @property
     def normalizes_per_matmul(self) -> float:
         return self.normalizes / max(self.matmuls, 1)
+
+    @property
+    def activation_converts(self) -> int:
+        return self.converts - self.weight_converts
 
 
 def _counters() -> list[OpCounts]:
@@ -345,15 +356,21 @@ def _sharded_normalize(p, res, inv_scale, dtype, ds):
 
 
 # ---------------------------------------------------------- primitives ----
-def convert(profile, x, scale, *, bits: int = 16, backend: str | None = None):
+def convert(profile, x, scale, *, bits: int = 16, backend: str | None = None,
+            weight: bool = False):
     """Quantize ``x`` by ``scale`` and encode to residues [K, ...].
 
     Returns int8 digit planes when the profile is int8-safe (the Pallas
-    matmul kernel's operand dtype), else int32.
+    matmul kernel's operand dtype), else int32.  ``weight=True`` marks
+    the conversion of a static weight operand (tally bookkeeping only —
+    the computation is identical); the resident-weight path eliminates
+    exactly these.
     """
     from repro.core.moduli import get_profile
 
     _tally("converts")
+    if weight:
+        _tally("weight_converts")
     be = resolve_backend(backend)
     be = _FUSED_TO_UNFUSED.get(be, be)
     ds, p = _digit_ctx(profile)

@@ -22,6 +22,7 @@ __all__ = [
     "RnsProfile",
     "get_profile",
     "PROFILES",
+    "narrowest_profile",
     "required_digits",
 ]
 
@@ -56,10 +57,27 @@ class RnsProfile:
 
     def __post_init__(self):
         ms = self.moduli
+        if not ms:
+            raise ValueError(f"profile {self.name!r}: empty moduli set")
+        for m in ms:
+            if m < 2:
+                raise ValueError(
+                    f"profile {self.name!r}: modulus {m} < 2 (a unit modulus "
+                    "contributes no range and breaks the CRT basis)")
+        seen = set()
+        for m in ms:
+            if m in seen:
+                raise ValueError(
+                    f"profile {self.name!r}: duplicate modulus {m} (the CRT "
+                    "map is only a bijection for pairwise-coprime moduli — "
+                    "a duplicated digit would silently corrupt MRC)")
+            seen.add(m)
         for i in range(len(ms)):
             for j in range(i + 1, len(ms)):
                 if math.gcd(ms[i], ms[j]) != 1:
-                    raise ValueError(f"moduli not coprime: {ms[i]}, {ms[j]}")
+                    raise ValueError(
+                        f"profile {self.name!r}: moduli not coprime: "
+                        f"{ms[i]}, {ms[j]}")
         if not (0 < self.frac_digits < len(ms)):
             raise ValueError("frac_digits must be in (0, n_digits)")
 
@@ -157,6 +175,32 @@ def get_profile(name: str) -> RnsProfile:
         return PROFILES[name]
     except KeyError:
         raise KeyError(f"unknown RNS profile {name!r}; have {sorted(PROFILES)}")
+
+
+def narrowest_profile(min_signed_bits: float,
+                      cap: str | RnsProfile = "rns9") -> RnsProfile:
+    """Narrowest registered profile whose exact signed range covers
+    ``min_signed_bits``, never wider than ``cap``.
+
+    Used by the resident-weight encoder (models/resident.py) to pick
+    per-layer moduli profiles: a layer whose magnitude-ledger requirement
+    (from its weights' quantized column-sum statistics) fits a smaller
+    moduli set runs on fewer digit slices — fewer residue planes moved
+    and multiplied, same exact integers.  Candidates are the registered
+    ``PROFILES`` only (so :class:`RnsTensor`'s by-name profile lookup
+    round-trips) and keep the Pallas ``int8_safe`` property of ``cap``;
+    if nothing narrower suffices, ``cap`` itself is returned.
+    """
+    cap = get_profile(cap) if isinstance(cap, str) else cap
+    cands = sorted(
+        (p for p in PROFILES.values()
+         if (p.int8_safe or not cap.int8_safe)
+         and p.range_bits <= cap.range_bits),
+        key=lambda p: p.range_bits)
+    for p in cands:
+        if p.signed_bits >= min_signed_bits:
+            return p
+    return cap
 
 
 def required_digits(n_terms: int, qa: int, qw: int, limit: int = 128) -> int:

@@ -43,6 +43,8 @@ __all__ = [
     "rns_dot",
     "rns_dot_fwd_only",
     "rns_multi_dot",
+    "rns_resident_dot",
+    "rns_resident_multi_dot",
 ]
 
 
@@ -136,12 +138,14 @@ def rns_matmul_res(profile, a_res, b_res):
     return modular_matmul(a_res, b_res, m, p.lazy_chunk)
 
 
-def _encode_operand(cfg: RnsDotConfig, x, bits: int, backend: str):
+def _encode_operand(cfg: RnsDotConfig, x, bits: int, backend: str,
+                    weight: bool = False):
     # residues < 128 by construction for int8-safe profiles: int8 storage
     # means any collective that touches encoded operands moves 9x1B, not
     # 9x4B (§Perf rns)
     s = absmax_scale(x, bits)
-    res = dispatch.convert(cfg.profile, x, s, bits=bits, backend=backend)
+    res = dispatch.convert(cfg.profile, x, s, bits=bits, backend=backend,
+                           weight=weight)
     return res, s
 
 
@@ -175,15 +179,20 @@ def _fused_path(cfg: RnsDotConfig, be: str) -> bool:
     return dispatch.fusion_active(cfg.profile, be) and not cfg.slice_parallel
 
 
-def _rns_matmul_float(cfg: RnsDotConfig, x, w, qa: int, qb: int):
-    """Non-differentiable float->float RNS matmul core."""
+def _rns_matmul_float(cfg: RnsDotConfig, x, w, qa: int, qb: int,
+                      w_static: bool = True):
+    """Non-differentiable float->float RNS matmul core.
+
+    ``w_static``: whether ``w`` is a model weight (tally bookkeeping for
+    the resident-weight comparison; the backward's activation-gradient
+    contraction passes False for its cotangent operand)."""
     _check_capacity(cfg, x.shape[-1], qa, qb)
     be = cfg.resolved_backend()
     if _fused_path(cfg, be):
         # ONE kernel: encode -> digit matmul -> MRC normalize; activation
         # residues and the int32 accumulator never round-trip HBM
         sx = absmax_scale(x, qa)
-        b_res, sw = _encode_operand(cfg, w, qb, be)
+        b_res, sw = _encode_operand(cfg, w, qb, be, weight=w_static)
         y = dispatch.fused_dot(cfg.profile, x, sx, b_res, bits=qa, backend=be)
         return y * (1.0 / (sx * sw))
     # NOTE §Perf rns iter 6: pinning the residue sharding (so reshards land
@@ -193,7 +202,7 @@ def _rns_matmul_float(cfg: RnsDotConfig, x, w, qa: int, qb: int):
     # rns_convert), where residues live only in VMEM — the software analogue
     # of the paper's Fig. 5 edge-of-array conversion pipelines.
     a_res, sx = _encode_operand(cfg, x, qa, be)
-    b_res, sw = _encode_operand(cfg, w, qb, be)
+    b_res, sw = _encode_operand(cfg, w, qb, be, weight=w_static)
     y_res = _res_matmul(cfg, be, a_res, b_res)
     # deferred normalization: ONE MRC per output element (the only point
     # where slice-parallel digits communicate — paper Fig. 5)
@@ -222,7 +231,8 @@ def _rns_dot_bwd(cfg: RnsDotConfig, resids, g):
     gf = g.reshape(-1, g.shape[-1])            # [T, N]
     if cfg.backward_rns:
         gx = _rns_matmul_float(cfg, gf, w.T, cfg.qg, cfg.qw)      # [T, D]
-        gw = _rns_matmul_float(cfg, xf.T, gf, cfg.qx, cfg.qg)     # [D, N]
+        gw = _rns_matmul_float(cfg, xf.T, gf, cfg.qx, cfg.qg,
+                               w_static=False)                    # [D, N]
     else:
         gx = gf @ w.T
         gw = xf.T @ gf
@@ -257,7 +267,7 @@ def _rns_multi_impl(cfg: RnsDotConfig, x, ws):
         sx = absmax_scale(x, cfg.qx)
         outs = []
         for i, w in enumerate(ws):
-            b_res, sw = _encode_operand(cfg, w, cfg.qw, be)
+            b_res, sw = _encode_operand(cfg, w, cfg.qw, be, weight=True)
             y = dispatch.fused_dot(cfg.profile, x, sx, b_res, bits=cfg.qx,
                                    backend=be, shared_encode=i > 0)
             outs.append(y * (1.0 / (sx * sw)))
@@ -265,10 +275,84 @@ def _rns_multi_impl(cfg: RnsDotConfig, x, ws):
     a_res, sx = _encode_operand(cfg, x, cfg.qx, be)
     outs = []
     for w in ws:
-        b_res, sw = _encode_operand(cfg, w, cfg.qw, be)
+        b_res, sw = _encode_operand(cfg, w, cfg.qw, be, weight=True)
         y_res = _res_matmul(cfg, be, a_res, b_res)
         y = dispatch.normalize(cfg.profile, y_res, backend=be)
         outs.append(y * (1.0 / (sx * sw)))
+    return tuple(outs)
+
+
+# --------------------------------------------- resident-weight forwards ----
+def _for_resident(cfg: RnsDotConfig, w_res) -> RnsDotConfig:
+    """Align cfg.profile with the resident weight's (possibly narrower,
+    per-layer-selected) profile so every helper below sees ONE profile."""
+    if cfg.profile != w_res.profile:
+        cfg = dataclasses.replace(cfg, profile=w_res.profile)
+    return cfg
+
+
+def rns_resident_dot(x, w_res, cfg: RnsDotConfig, *, bits: int | None = None):
+    """y = x @ w_res for a pre-encoded resident weight (forward-only).
+
+    Mirrors :func:`rns_dot`'s forward arithmetic exactly — same
+    quantization grids, same primitive schedule, same scale algebra
+    (``y * (1.0 / (sx * sw))``) — with the weight conversion already paid
+    at build time, so the trace tallies zero ``weight_converts``.  The
+    exactness guard is the magnitude ledger (``w_res.mag_bits``), which
+    admits per-layer narrow profiles the generic capacity formula would
+    reject.  Differentiation is the caller's job (models/layers.py wraps
+    this in the STE custom_vjps); ``w_res.digits`` are integers, so no
+    gradient ever flows through them.
+    """
+    from repro.core.tensor import _encode_out_bits
+
+    cfg = _for_resident(cfg, w_res)
+    qa = cfg.qx if bits is None else bits
+    p = get_profile(cfg.profile)
+    _encode_out_bits(p, qa, w_res, x.shape[-1])     # raises on overflow
+    be = cfg.resolved_backend()
+    sx = absmax_scale(x, qa)
+    if _fused_path(cfg, be):
+        y = dispatch.fused_dot(cfg.profile, x, sx, w_res.digits, bits=qa,
+                               backend=be)
+        return y * (1.0 / (sx * w_res.scale))
+    a_res = dispatch.convert(cfg.profile, x, sx, bits=qa, backend=be)
+    y_res = _res_matmul(cfg, be, a_res, w_res.digits)
+    y = dispatch.normalize(cfg.profile, y_res, backend=be)
+    return y * (1.0 / (sx * w_res.scale))
+
+
+def rns_resident_multi_dot(x, ws_res: tuple, cfg: RnsDotConfig):
+    """(x @ w for w in ws_res) with one shared forward conversion of x.
+
+    The resident mirror of :func:`rns_multi_dot`'s forward: identical
+    grids and scale algebra, zero weight conversions.  Forward-only, like
+    :func:`rns_resident_dot`.
+    """
+    from repro.core.tensor import _encode_out_bits
+
+    cfg = _for_resident(cfg, ws_res[0])
+    p = get_profile(cfg.profile)
+    for w_res in ws_res:
+        if w_res.profile != cfg.profile:
+            raise ValueError("resident fan-out weights must share a profile "
+                             "(one shared conversion of x feeds them all)")
+        _encode_out_bits(p, cfg.qx, w_res, x.shape[-1])
+    be = cfg.resolved_backend()
+    sx = absmax_scale(x, cfg.qx)
+    if _fused_path(cfg, be):
+        outs = []
+        for i, w_res in enumerate(ws_res):
+            y = dispatch.fused_dot(cfg.profile, x, sx, w_res.digits,
+                                   bits=cfg.qx, backend=be, shared_encode=i > 0)
+            outs.append(y * (1.0 / (sx * w_res.scale)))
+        return tuple(outs)
+    a_res = dispatch.convert(cfg.profile, x, sx, bits=cfg.qx, backend=be)
+    outs = []
+    for w_res in ws_res:
+        y_res = _res_matmul(cfg, be, a_res, w_res.digits)
+        y = dispatch.normalize(cfg.profile, y_res, backend=be)
+        outs.append(y * (1.0 / (sx * w_res.scale)))
     return tuple(outs)
 
 
@@ -303,7 +387,8 @@ def _rns_multi_bwd(cfg: RnsDotConfig, resids, gs):
         if cfg.backward_rns:
             _check_capacity(cfg, gf.shape[-1], cfg.qg, cfg.qw)
             g_res, sg = _encode_operand(cfg, gf, cfg.qg, be)   # [K, T, N]
-            wt_res, sw = _encode_operand(cfg, w.T, cfg.qw, be)  # [K, N, D]
+            wt_res, sw = _encode_operand(cfg, w.T, cfg.qw, be,
+                                         weight=True)       # [K, N, D]
             gx_i = dispatch.normalize(
                 cfg.profile, _res_matmul(cfg, be, g_res, wt_res), backend=be
             ) * (1.0 / (sg * sw))

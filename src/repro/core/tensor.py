@@ -51,6 +51,7 @@ __all__ = [
     "rt_renormalize",
     "rt_device_put",
     "rt_digit_sharding",
+    "rt_stack",
     "rt_encode_matmul",
     "rt_matmul_decode",
     "rt_dot",
@@ -118,19 +119,23 @@ def _digits32(rt: RnsTensor) -> jax.Array:
 
 
 # ------------------------------------------------------------ mesh layout --
-def rt_digit_sharding(rt: RnsTensor):
+def rt_digit_sharding(rt: RnsTensor, *, digit_axis: int = 0):
     """The NamedSharding the installed digit mesh assigns to ``rt.digits``
     ([K, ...] partitioned over the ``model`` axis), or None when no digit
-    context is installed / the profile doesn't divide the axis."""
+    context is installed / the profile doesn't divide the axis.
+
+    ``digit_axis``: position of the K digit axis in ``rt.digits`` — 0 for
+    the plain layout, 1 for period-major stacked resident weights
+    (``[P, K, ...]``, see :func:`rt_stack`)."""
     from repro.distributed.sharding import digit_sharding
 
     ds = digit_sharding()
     if ds is None or not ds.shards(rt.rns_profile.n_digits):
         return None
-    return ds.digit_sharding(rt.digits.ndim)
+    return ds.digit_sharding(rt.digits.ndim, axis_pos=digit_axis)
 
 
-def rt_device_put(rt: RnsTensor) -> RnsTensor:
+def rt_device_put(rt: RnsTensor, *, digit_axis: int = 0) -> RnsTensor:
     """Place an encoded tensor into the digit-sharded layout (host->mesh).
 
     Tensors *produced* under the digit context already carry this layout
@@ -138,24 +143,48 @@ def rt_device_put(rt: RnsTensor) -> RnsTensor:
     e.g. weights encoded once at engine build time — so the per-step jit
     consumes them without a layout change.
     """
-    sh = rt_digit_sharding(rt)
+    sh = rt_digit_sharding(rt, digit_axis=digit_axis)
     if sh is None:
         return rt
     return dataclasses.replace(rt, digits=jax.device_put(rt.digits, sh))
 
 
+def rt_stack(rts) -> RnsTensor:
+    """Stack per-period tensors period-MAJOR: digits [P, K, ...], scale [P].
+
+    The period axis leads (not the digit axis) so a ``lax.scan`` over the
+    stacked pytree slices out one valid RnsTensor per period — scan
+    consumes leading axes of *leaves*, and an RnsTensor's leaves are
+    exactly (digits, scale) while (profile, mag_bits, frac_exp) stay
+    static aux shared by every period.  This is the layout resident
+    weights live in inside the scanned transformer stack.
+    """
+    rts = list(rts)
+    p0, fe0 = rts[0].profile, rts[0].frac_exp
+    if any(r.profile != p0 or r.frac_exp != fe0 for r in rts):
+        raise ValueError("rt_stack needs one shared profile and frac_exp "
+                         "(they are static aux — scan shares them)")
+    return RnsTensor(
+        jnp.stack([r.digits for r in rts], axis=0),
+        jnp.stack([jnp.reshape(r.scale, ()) for r in rts], axis=0),
+        p0, max(r.mag_bits for r in rts), fe0)
+
+
 # ------------------------------------------------------------- encoding ---
 def rt_encode(x, profile, *, bits: int = 16, scale=None,
-              backend: str | None = None) -> RnsTensor:
+              backend: str | None = None, weight: bool = False) -> RnsTensor:
     """Quantize a float tensor and forward-convert it (cheap PAC work).
 
     ``scale`` defaults to the per-tensor absmax scale for ``bits``; pass an
     explicit scale to pin the fixed-point grid (e.g. for exact oracles).
+    ``weight=True`` marks a static-weight conversion in the op tallies
+    (see :class:`~repro.core.dispatch.OpCounts.weight_converts`).
     """
     p = get_profile(profile) if isinstance(profile, str) else profile
     if scale is None:
         scale = absmax_scale(x, bits)
-    digits = dispatch.convert(p, x, scale, bits=bits, backend=backend)
+    digits = dispatch.convert(p, x, scale, bits=bits, backend=backend,
+                              weight=weight)
     return RnsTensor(digits, jnp.asarray(scale, jnp.float32), p.name,
                      float(bits - 1))
 

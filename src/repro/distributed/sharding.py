@@ -202,14 +202,19 @@ class DigitSharding:
     def auto_axes(self) -> frozenset:
         return frozenset(a for a in self.mesh.axis_names if a != self.axis)
 
-    def digit_spec(self, ndim: int) -> P:
-        """PartitionSpec of a ``[K, ...]`` residue tensor (shard_map spec:
-        manual on the digit axis, replicated-per-shard elsewhere)."""
-        return P(self.axis, *([None] * (ndim - 1)))
+    def digit_spec(self, ndim: int, axis_pos: int = 0) -> P:
+        """PartitionSpec of a residue tensor (shard_map spec: manual on
+        the digit axis, replicated-per-shard elsewhere).  ``axis_pos`` is
+        where the K digit axis sits: 0 for the plain ``[K, ...]`` layout,
+        1 for period-major stacked resident weights (``[P, K, ...]`` —
+        scan-sliceable, see core/tensor.rt_stack)."""
+        spec = [None] * ndim
+        spec[axis_pos] = self.axis
+        return P(*spec)
 
-    def digit_sharding(self, ndim: int) -> NamedSharding:
+    def digit_sharding(self, ndim: int, axis_pos: int = 0) -> NamedSharding:
         """NamedSharding for placing a ``[K, ...]`` residue tensor."""
-        return NamedSharding(self.mesh, self.digit_spec(ndim))
+        return NamedSharding(self.mesh, self.digit_spec(ndim, axis_pos))
 
 
 # per-thread, like core/quantize's token-mask stack: two engines traced

@@ -9,11 +9,17 @@ Continuous batching over the paged KV cache (mixed-length traffic):
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
         --continuous --requests 12 --prompt-lens 7,33,120 --new 16
+
+Residue-domain MLP datapath with resident (encode-once) weights:
+
+    PYTHONPATH=src python -m repro.launch.serve --continuous --rns rns9 \
+        --resident-weights --per-layer-profiles --requests 4 --new 8
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -38,7 +44,9 @@ def _digit_mesh(args):
 def _bucketed(args, cfg, params):
     engine = Engine(params, cfg, ServeConfig(
         max_cache=args.prompt_len + args.new + 8, max_new_tokens=args.new,
-        rns_backend=args.rns_backend, mesh=_digit_mesh(args)))
+        rns_backend=args.rns_backend, mesh=_digit_mesh(args),
+        resident_weights=args.resident_weights,
+        per_layer_profiles=args.per_layer_profiles))
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
     frontend = None
@@ -67,7 +75,15 @@ def _continuous(args, cfg, params):
         page_size=args.page_size, max_seqs=args.max_seqs,
         n_pages=args.n_pages, rns_backend=args.rns_backend,
         prefix_cache=args.prefix_cache, spec_decode=args.spec_decode,
-        spec_k=args.spec_k, mesh=_digit_mesh(args)))
+        spec_k=args.spec_k, mesh=_digit_mesh(args),
+        resident_weights=args.resident_weights,
+        per_layer_profiles=args.per_layer_profiles))
+    if args.resident_weights:
+        from repro.models.resident import resident_profiles
+
+        profs = sorted(set(resident_profiles(engine.params).values()))
+        print(f"resident weights: encoded once at build "
+              f"(profiles {profs or ['-']})")
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab, (lens[i % len(lens)],)).astype(
         np.int32) for i in range(args.requests)]
@@ -120,10 +136,21 @@ def main():
                          "to vanilla decode)")
     ap.add_argument("--spec-k", type=int, default=3,
                     help="draft tokens per speculative step")
+    ap.add_argument("--rns", metavar="PROFILE", default=None,
+                    help="run the MLP datapath in residues on PROFILE "
+                         "(e.g. rns9); required for --rns-backend/"
+                         "--resident-weights to have any effect")
     ap.add_argument("--rns-backend", default=None,
                     help="RNS execution backend override for either engine "
                          "(reference|pallas|pallas_fused|...; pallas_fused "
                          "runs the fused encode->matmul->normalize kernels)")
+    ap.add_argument("--resident-weights", action="store_true",
+                    help="encode RNS MLP weights once at engine build "
+                         "(resident residue-domain weights: zero per-step "
+                         "weight conversions, token-identical output)")
+    ap.add_argument("--per-layer-profiles", action="store_true",
+                    help="with --resident-weights: narrow layers encode "
+                         "on fewer/smaller moduli (ledger-proved exact)")
     ap.add_argument("--digit-shard", action="store_true",
                     help="shard RNS residue channels over all local "
                          "devices (either engine; needs an RNS arch "
@@ -131,6 +158,12 @@ def main():
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
+    if args.rns:
+        from repro.core.rns_matmul import RnsDotConfig
+
+        cfg = dataclasses.replace(
+            cfg, rns=RnsDotConfig(profile=args.rns, qx=8, qw=8),
+            rns_targets="mlp")
     params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
     if args.continuous:
         _continuous(args, cfg, params)

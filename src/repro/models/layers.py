@@ -21,13 +21,20 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import weakref
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dispatch
-from repro.core.rns_matmul import RnsDotConfig, rns_dot, rns_multi_dot
+from repro.core.rns_matmul import (
+    RnsDotConfig,
+    rns_dot,
+    rns_multi_dot,
+    rns_resident_dot,
+    rns_resident_multi_dot,
+)
 from repro.core.tensor import (
     RnsTensor,
     rt_decode,
@@ -58,9 +65,49 @@ def init_linear(key, d_in, d_out, *, axes: Axes, bias=False, dtype=jnp.float32,
     return p, s
 
 
+# Eager weight-encode cache.  Outside jit every forward re-encodes the same
+# param array; residue digits are pure functions of (values, profile, qw,
+# backend, digit layout), so keying on the array's identity is sound as long
+# as the entry dies with the array (weakref) — params are never mutated
+# in place, only replaced.  Tracers bypass the cache entirely: inside jit
+# the compiler already CSEs the encode, and tracer ids are meaningless.
+_ENCODE_CACHE: dict = {}
+_ENCODE_CACHE_MAX = 256
+
+
+def _cached_encode(w, profile: str, qw: int, backend) -> RnsTensor:
+    if isinstance(w, jax.core.Tracer):
+        return rt_encode(w.astype(jnp.float32), profile, bits=qw,
+                         backend=backend, weight=True)
+    from repro.distributed.sharding import digit_sharding
+
+    key = (id(w), profile, qw, backend, digit_sharding())
+    hit = _ENCODE_CACHE.get(key)
+    if hit is not None and hit[0]() is w:
+        return hit[1]
+    res = rt_encode(w.astype(jnp.float32), profile, bits=qw, backend=backend,
+                    weight=True)
+    try:
+        ref = weakref.ref(w)
+    except TypeError:
+        return res
+    if len(_ENCODE_CACHE) >= _ENCODE_CACHE_MAX:
+        _ENCODE_CACHE.clear()
+    _ENCODE_CACHE[key] = (ref, res)
+    return res
+
+
 def _encode_weight(p, rns: RnsDotConfig) -> RnsTensor:
-    return rt_encode(p["w"].astype(jnp.float32), rns.profile, bits=rns.qw,
-                     backend=rns.resolved_backend())
+    res = p.get("w_res")
+    if isinstance(res, RnsTensor):
+        if res.profile == rns.profile:
+            return res          # resident: encoded once at build time
+        if "w" not in p:
+            raise ValueError(
+                f"resident weight is encoded on profile {res.profile!r} but "
+                f"the config asks for {rns.profile!r}, and the float master "
+                "was dropped — re-encode is impossible")
+    return _cached_encode(p["w"], rns.profile, rns.qw, rns.resolved_backend())
 
 
 def linear(p, x, rns: RnsDotConfig | None = None):
@@ -79,6 +126,14 @@ def linear(p, x, rns: RnsDotConfig | None = None):
                 "fixed-point grid; decode first or drop the bias")
         return rt_matmul(x, _encode_weight(p, rns),
                          backend=rns.resolved_backend(), renorm_bits=rns.qx)
+    res = p.get("w_res")
+    if rns is not None and isinstance(res, RnsTensor):
+        if rns.profile != res.profile:
+            rns = dataclasses.replace(rns, profile=res.profile)
+        y = rns_resident_dot(x.astype(jnp.float32), res, rns).astype(x.dtype)
+        if "b" in p:
+            y = y + p["b"].astype(y.dtype)
+        return y
     w = p["w"]
     if rns is not None:
         y = rns_dot(x.astype(jnp.float32), w.astype(jnp.float32), rns)
@@ -107,7 +162,7 @@ def rns_linear_chain(x, ws: tuple, cfg: RnsDotConfig):
     ht = rt_encode(x.astype(jnp.float32), cfg.profile, bits=cfg.qx, backend=be)
     for w in ws:
         wt = rt_encode(w.astype(jnp.float32), cfg.profile, bits=cfg.qw,
-                       backend=be)
+                       backend=be, weight=True)
         ht = rt_matmul(ht, wt, backend=be, renorm_bits=cfg.qx)
     return rt_decode(ht, backend=be).astype(x.dtype)
 
@@ -278,9 +333,52 @@ def _mlp_deferred_bwd(gated, act, cfg, resids, g):
 mlp_rns_deferred.defvjp(_mlp_deferred_fwd, _mlp_deferred_bwd)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def mlp_rns_resident_perop(p, x, gated: bool, act: str, cfg: RnsDotConfig):
+    """Per-op-normalized MLP on resident weights: zero weight conversions.
+
+    Arithmetic is a bit-identical mirror of the re-encode per-op path
+    (``rns_multi_dot`` + ``linear``): same activation grids, same primitive
+    schedule, same intermediate dtype casts — only the weight conversions
+    vanish, because the operands arrive as residues.  Backward is the
+    float-reference vjp over the masters (straight-through quantizer
+    grads); integer digit leaves get symbolic-zero cotangents.
+    """
+    xf = x.astype(jnp.float32)
+    if gated:
+        hi, hg = rns_resident_multi_dot(
+            xf, (p["wi"]["w_res"], p["wg"]["w_res"]), cfg)
+        h = (_act(act)(hg) * hi).astype(x.dtype)
+    else:
+        h = _act(act)(rns_resident_dot(xf, p["wi"]["w_res"], cfg)
+                      .astype(x.dtype))
+    y = rns_resident_dot(h.astype(jnp.float32), p["wo"]["w_res"], cfg)
+    return y.astype(x.dtype)
+
+
+def _mlp_resident_fwd(p, x, gated, act, cfg):
+    return mlp_rns_resident_perop(p, x, gated, act, cfg), (p, x)
+
+
+def _mlp_resident_bwd(gated, act, cfg, resids, g):
+    p, x = resids
+    _, vjp = jax.vjp(
+        lambda p, x: _mlp_float_ref(p, x.astype(jnp.float32), gated, act), p, x)
+    gp, gx = vjp(g.astype(jnp.float32))
+    return gp, gx.astype(x.dtype)
+
+
+mlp_rns_resident_perop.defvjp(_mlp_resident_fwd, _mlp_resident_bwd)
+
+
 def _mlp_no_bias(p, gated):
     return ("b" not in p["wi"] and "b" not in p["wo"]
             and (not gated or "b" not in p.get("wg", {})))
+
+
+def _mlp_resident(p, gated):
+    names = ("wi", "wg", "wo") if gated else ("wi", "wo")
+    return all(isinstance(p.get(n), dict) and "w_res" in p[n] for n in names)
 
 
 def mlp(p, x, *, gated=True, act="silu", rns=None):
@@ -296,6 +394,16 @@ def mlp(p, x, *, gated=True, act="silu", rns=None):
             "is set; falling back to per-op normalization", stacklevel=2)
         rns = dataclasses.replace(rns, defer=False)
     if rns is not None and _mlp_no_bias(p, gated):
+        if _mlp_resident(p, gated):
+            # resident weights: thread the layer's (possibly narrower)
+            # encode-time profile through the whole chain so every helper
+            # that consults cfg.profile agrees with the resident digits
+            res_prof = p["wi"]["w_res"].profile
+            if rns.profile != res_prof:
+                rns = dataclasses.replace(rns, profile=res_prof)
+            if rns.defer:
+                return mlp_rns_deferred(p, x, gated, act, rns)
+            return mlp_rns_resident_perop(p, x, gated, act, rns)
         if rns.defer:
             return mlp_rns_deferred(p, x, gated, act, rns)
         if gated:

@@ -1,0 +1,281 @@
+"""Resident residue-domain weights: encode once at build time, serve forever.
+
+The paper's premise is that weights *live* in the residue domain on an
+RNS TPU — converted at the boundary once (Olsen's Rez-9 RALU makes the
+same argument from the hardware side), not re-quantized and re-encoded on
+every forward matmul the way ``models/layers._encode_weight`` does on the
+re-encode path.  This module performs that boundary conversion:
+
+* :func:`encode_resident` (eager, build time) walks a params tree, finds
+  every RNS-target MLP weight (``wi``/``wg``/``wo``), and attaches a
+  pre-encoded :class:`~repro.core.tensor.RnsTensor` under ``"w_res"``
+  next to the float master ``"w"``.  Stacked per-period weights
+  (``[P, d_in, d_out]``, the scanned-transformer layout) become
+  period-major stacked residents (digits ``[P, K, d_in, d_out]``, scale
+  ``[P]``) so ``lax.scan`` slices out one valid RnsTensor per period —
+  see :func:`~repro.core.tensor.rt_stack` for why the period axis leads.
+  Per-period quantization grids are bit-identical to what the re-encode
+  path computes (the absmax reduction is exact), so serving output is
+  token-identical, minus every weight conversion.
+
+* **Per-layer moduli profiles** (``per_layer_profiles=True``): at encode
+  time the *quantized* weights' maximum column abs-sums are known, so the
+  worst case of each layer's product summations can be bounded tightly —
+  ``|sum_d q_x[d] * q_w[d, j]| <= 2**(qx-1) * max_j sum_d |q_w[d, j]|``
+  — instead of generically (``2**(qx-1) * 2**(qw-1) * D``).  The layer
+  chain's tight bound picks the narrowest registered profile whose exact
+  signed range still covers it (``core/moduli.narrowest_profile``):
+  narrow layers run on fewer/smaller moduli — fewer residue planes moved
+  and multiplied — while the magnitude ledger proof keeps the integers
+  exact.  The bound is carried into the ledger by storing the resident
+  ``mag_bits`` *amortized over the contraction*: ``log2(colsum) -
+  log2(D)``, so the existing ledger formula ``a.mag + w.mag + log2(D)``
+  reconstructs exactly ``(qx-1) + log2(colsum)``.
+
+* :func:`attach_resident` (traceable) is the train-step variant: same
+  tree surgery under jit, encoding from the (traced) float masters each
+  step so the optimizer keeps updating masters while the forward runs on
+  residues.  Profile selection needs concrete weights, so it is
+  eager-only.
+
+Scope: MLP weights (the default ``rns_targets="mlp"`` datapath — every
+RNS matmul in the serving configs).  Attention projections still
+re-encode; making ``models/attention`` resident-aware is a ROADMAP item.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dispatch
+from repro.core.moduli import get_profile, narrowest_profile
+from repro.core.quantize import absmax_scale, quantize_with_scale
+from repro.core.tensor import RnsTensor
+
+__all__ = [
+    "encode_resident",
+    "attach_resident",
+    "strip_resident",
+    "has_resident",
+    "resident_profiles",
+]
+
+#: must match core/tensor._SAFETY_BITS — the ledger headroom the encode
+#: side has to leave so rt_* never renormalizes on a selected profile.
+_SAFETY_BITS = 1.0
+
+_MLP_WEIGHTS = ("wi", "wg", "wo")
+
+
+def _is_mlp(tree) -> bool:
+    return (isinstance(tree, dict) and "wi" in tree and "wo" in tree
+            and isinstance(tree.get("wi"), dict) and "w" in tree["wi"])
+
+
+def _walk_mlps(tree, fn, path=()):
+    """Rebuild ``tree`` with ``fn(mlp_dict, path)`` applied to every MLP
+    param dict (identified structurally: has ``wi``/``wo`` linears)."""
+    if isinstance(tree, dict):
+        if _is_mlp(tree):
+            return fn(tree, path)
+        return {k: _walk_mlps(v, fn, path + (k,)) for k, v in tree.items()}
+    return tree
+
+
+def _mlp_has_bias(mlp) -> bool:
+    return any("b" in mlp[n] for n in _MLP_WEIGHTS if n in mlp)
+
+
+def _encode_one(w, profile: str, qw: int, mag_bits: float) -> RnsTensor:
+    """Encode one master weight — ``[d, n]`` plain or ``[P, d, n]``
+    stacked — into a resident RnsTensor on the reference conversion path
+    (bit-identical to every backend's convert; the kernel exactness tests
+    pin that).  Stacked masters get per-period grids: exactly the scale
+    the re-encode path computes for each period's slice."""
+    p = get_profile(profile)
+    wf = jnp.asarray(w, jnp.float32)
+    if wf.ndim == 3:                                   # [P, d, n] stacked
+        s = absmax_scale(wf, qw, axis=(1, 2))          # [P, 1, 1]
+        digits = dispatch.convert(p, wf, s, bits=qw, backend="reference",
+                                  weight=True)         # [K, P, d, n]
+        return RnsTensor(jnp.moveaxis(digits, 0, 1),   # [P, K, d, n]
+                         s.reshape(-1), p.name, float(mag_bits), 0)
+    s = absmax_scale(wf, qw)
+    digits = dispatch.convert(p, wf, s, bits=qw, backend="reference",
+                              weight=True)             # [K, d, n]
+    return RnsTensor(digits, jnp.asarray(s, jnp.float32), p.name,
+                     float(mag_bits), 0)
+
+
+def _colsum_bits(w, qw: int) -> float:
+    """log2 of the max column abs-sum of the qw-bit quantized weight —
+    the tight per-layer bound on one activation row's product summation
+    (worst case over periods for stacked masters).  Concrete (eager)
+    weights only."""
+    wf = jnp.asarray(w, jnp.float32)
+    axis = (1, 2) if wf.ndim == 3 else None
+    s = absmax_scale(wf, qw, axis=axis)
+    q = quantize_with_scale(wf, s, qw)
+    col = int(jnp.max(jnp.sum(jnp.abs(q), axis=-2)))   # sum over d_in
+    return math.log2(max(col, 1))
+
+
+def _select_profile(mlp, rns, gated: bool):
+    """Pick the narrowest registered profile covering this layer's
+    deferred chain, and the amortized per-weight ledger bounds.
+
+    Gated chain worst case (defer on — it dominates the per-op path):
+      encode(x, qx)          ->  qx-1
+      @ wi                   ->  (qx-1) + cb_wi
+      * encode(gate, qx)     ->  + (qx-1)
+      @ wo                   ->  + cb_wo
+    with ``cb_* = log2(max colsum of the quantized weight)``; the decoded
+    gate branch needs ``(qx-1) + cb_wg`` on its own.
+    """
+    qx = rns.qx
+    cb = {n: _colsum_bits(mlp[n]["w"], rns.qw)
+          for n in _MLP_WEIGHTS if n in mlp}
+    x_bits = float(qx - 1)
+    if gated and "wg" in cb:
+        chain = x_bits + cb["wi"] + x_bits + cb["wo"]
+        need = max(chain, x_bits + cb["wg"])
+    else:
+        need = max(x_bits + cb["wi"], x_bits + cb["wo"])
+    prof = narrowest_profile(need + _SAFETY_BITS, cap=rns.profile)
+    mags = {n: cb[n] - math.log2(max(mlp[n]["w"].shape[-2], 1)) for n in cb}
+    return prof.name, mags
+
+
+def _rns_mlp_cfg(cfg):
+    """The model's MLP-target RnsDotConfig, or None (nothing to encode)."""
+    if cfg.rns is None or cfg.rns_targets not in ("all", "mlp"):
+        return None
+    return cfg.rns
+
+
+def encode_resident(params, cfg, *, per_layer_profiles: bool = False,
+                    drop_masters: bool = False, mesh=None,
+                    digit_axis: str = "model"):
+    """Encode every RNS-target MLP weight once (eager, build time).
+
+    Returns a new params tree with ``"w_res"`` residents next to (or,
+    with ``drop_masters=True`` — serving, where the floats would only
+    burn HBM — instead of) each float master ``"w"``.  With ``mesh`` set
+    the resident digits are placed into the digit-sharded layout
+    (``[P, K, ...]``: digit axis 1 over ``digit_axis``) so the per-step
+    jit consumes them without a layout change.
+    """
+    rns = _rns_mlp_cfg(cfg)
+    if rns is None:
+        return params
+    ds = None
+    if mesh is not None:
+        from repro.distributed.sharding import DigitSharding
+
+        ds = DigitSharding(mesh, digit_axis)
+
+    def encode_mlp(mlp, path):
+        if _mlp_has_bias(mlp):
+            return mlp        # biased MLPs keep the float per-op path
+        gated = "wg" in mlp
+        if per_layer_profiles:
+            if any(isinstance(mlp[n]["w"], jax.core.Tracer)
+                   for n in _MLP_WEIGHTS if n in mlp):
+                raise ValueError(
+                    "per-layer profile selection needs concrete weights "
+                    "(eager encode_resident, not a traced attach)")
+            prof, mags = _select_profile(mlp, rns, gated)
+        else:
+            prof = rns.profile
+            mags = {n: float(rns.qw - 1) for n in _MLP_WEIGHTS if n in mlp}
+        out = {}
+        for name, p_lin in mlp.items():
+            if name in _MLP_WEIGHTS and isinstance(p_lin, dict) \
+                    and "w" in p_lin:
+                res = _encode_one(p_lin["w"], prof, rns.qw, mags[name])
+                if ds is not None and ds.shards(res.rns_profile.n_digits):
+                    axis_pos = 1 if res.digits.ndim == 4 else 0
+                    res = RnsTensor(
+                        jax.device_put(res.digits, ds.digit_sharding(
+                            res.digits.ndim, axis_pos=axis_pos)),
+                        res.scale, res.profile, res.mag_bits, res.frac_exp)
+                new = dict(p_lin, w_res=res)
+                if drop_masters:
+                    new.pop("w")
+                out[name] = new
+            else:
+                out[name] = p_lin
+        return out
+
+    return _walk_mlps(params, encode_mlp)
+
+
+def attach_resident(params, cfg):
+    """Traceable resident attach for the train step: encode residents
+    from the (traced) float masters with the config profile.  Masters
+    stay in the tree — the optimizer updates them, the custom_vjp STE
+    backward reads them, and no gradient flows through the integer
+    digits.  Per-layer profile selection is eager-only; use
+    :func:`encode_resident` for that."""
+    rns = _rns_mlp_cfg(cfg)
+    if rns is None:
+        return params
+
+    def encode_mlp(mlp, path):
+        if _mlp_has_bias(mlp):
+            return mlp
+        out = {}
+        for name, p_lin in mlp.items():
+            if name in _MLP_WEIGHTS and isinstance(p_lin, dict) \
+                    and "w" in p_lin:
+                res = _encode_one(p_lin["w"], rns.profile, rns.qw,
+                                  float(rns.qw - 1))
+                out[name] = dict(p_lin, w_res=res)
+            else:
+                out[name] = p_lin
+        return out
+
+    return _walk_mlps(params, encode_mlp)
+
+
+def strip_resident(params):
+    """Drop every ``"w_res"`` entry (checkpointing float masters only,
+    or forcing the re-encode path for an A/B comparison)."""
+
+    def strip_mlp(mlp, path):
+        return {k: ({kk: vv for kk, vv in v.items() if kk != "w_res"}
+                    if isinstance(v, dict) else v)
+                for k, v in mlp.items()}
+
+    return _walk_mlps(params, strip_mlp)
+
+
+def has_resident(params) -> bool:
+    found = []
+
+    def probe(mlp, path):
+        found.extend(k for k in _MLP_WEIGHTS
+                     if k in mlp and isinstance(mlp[k], dict)
+                     and "w_res" in mlp[k])
+        return mlp
+
+    _walk_mlps(params, probe)
+    return bool(found)
+
+
+def resident_profiles(params) -> dict:
+    """{'/'.join(path): profile name} for every resident MLP (one entry
+    per layer slot — wi/wg/wo share the slot's profile)."""
+    out = {}
+
+    def probe(mlp, path):
+        if "wi" in mlp and isinstance(mlp["wi"], dict) \
+                and "w_res" in mlp["wi"]:
+            out["/".join(map(str, path))] = mlp["wi"]["w_res"].profile
+        return mlp
+
+    _walk_mlps(params, probe)
+    return out

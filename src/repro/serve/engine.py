@@ -71,6 +71,15 @@ class ServeConfig:
     # kernels (kernels/rns_fused); step stats gain nonzero rns_ops.fused.
     rns_backend: str | None = None   # see core/dispatch.BACKENDS | auto
     rns_defer: bool | None = None    # residue-domain MLP chaining
+    # resident residue-domain weights: encode every RNS-target MLP weight
+    # ONCE at engine build (models/resident.encode_resident) so the
+    # per-step jits consume pre-encoded residues — weight conversions drop
+    # to zero while the token stream stays bit-identical to re-encode.
+    resident_weights: bool = False
+    # per-layer moduli profiles (requires resident_weights): narrow layers
+    # are encoded on fewer/smaller moduli, chosen from quantized-weight
+    # column-sum statistics with a magnitude-ledger exactness proof.
+    per_layer_profiles: bool = False
     # residue-channel sharding: a jax Mesh whose ``digit_axis`` partitions
     # the RNS digit axis (one group of moduli per device; digits meet only
     # at MRC normalization).  None: single-device layout, unchanged.
@@ -107,6 +116,10 @@ class ServeConfig:
                 "least one draft token per step")
         if self.spec_decode and self.spec_ngram < 1:
             raise ValueError(f"spec_ngram={self.spec_ngram}: need >= 1")
+        if self.per_layer_profiles and not self.resident_weights:
+            raise ValueError(
+                "per_layer_profiles selects moduli at weight-encode time; "
+                "it requires resident_weights=True")
 
 
 def _with_digit_ctx(fn, scfg: ServeConfig):
@@ -144,12 +157,23 @@ def _apply_rns_policy(model_cfg, scfg: ServeConfig):
     return dataclasses.replace(model_cfg, rns=rns)
 
 
+def _maybe_resident(params, cfg, scfg: ServeConfig):
+    """Encode resident weights at engine build time when asked to."""
+    if not scfg.resident_weights or cfg.rns is None:
+        return params
+    from repro.models.resident import encode_resident
+
+    return encode_resident(params, cfg,
+                           per_layer_profiles=scfg.per_layer_profiles,
+                           mesh=scfg.mesh, digit_axis=scfg.digit_axis)
+
+
 class Engine:
     """Bucketed batching: equal-length prompts, batch runs to completion."""
 
     def __init__(self, params, model_cfg, scfg: ServeConfig):
-        self.params = params
         self.cfg = _apply_rns_policy(model_cfg, scfg)
+        self.params = _maybe_resident(params, self.cfg, scfg)
         self.scfg = scfg
         self._prefill = _with_digit_ctx(jax.jit(
             functools.partial(M.prefill, cfg=self.cfg, S_max=scfg.max_cache,
@@ -210,7 +234,7 @@ class ContinuousEngine:
         if not cfg.causal:
             raise NotImplementedError("continuous batching requires causal "
                                       "attention (padded prefill relies on it)")
-        self.params = params
+        self.params = _maybe_resident(params, cfg, scfg)
         self.cfg = cfg
         self.scfg = scfg
 
@@ -439,7 +463,9 @@ class ContinuousEngine:
             matmuls=d.matmuls + n_prefills * pf.matmuls,
             normalizes=d.normalizes + n_prefills * pf.normalizes,
             fused=d.fused + n_prefills * pf.fused,
-            fallbacks=d.fallbacks + n_prefills * pf.fallbacks)
+            fallbacks=d.fallbacks + n_prefills * pf.fallbacks,
+            weight_converts=(d.weight_converts
+                             + n_prefills * pf.weight_converts))
 
     def _decode_vanilla(self, last):
         """One [R, 1] decode for every running row; returns #new tokens."""

@@ -34,16 +34,33 @@ def init_train_state(key, cfg):
     return state, state_specs
 
 
-def make_train_step(cfg, opt_cfg: AdamWConfig, *, compress_dci: bool = False):
+def make_train_step(cfg, opt_cfg: AdamWConfig, *, compress_dci: bool = False,
+                    resident_weights: bool = False):
     """compress_dci: int8+error-feedback quantization of the gradients that
     cross the slow pod-to-pod hop (distributed/compression.py).  The
     residual re-enters next step, so the long-run update is unbiased; state
-    gains an "ef" tree when enabled."""
+    gains an "ef" tree when enabled.
+
+    resident_weights: run the forward on resident residue-domain MLP
+    weights (models/resident.attach_resident).  The attach happens INSIDE
+    the grad closure over the float masters, so the differentiated tree
+    stays all-float: the optimizer updates masters, the custom_vjp
+    straight-through backward reads masters, and the integer digits are a
+    forward-only recompute each step (under jit the encode is hoisted and
+    shared across the whole forward — the step still performs one encode
+    per weight, but never one per matmul)."""
     accum = max(1, getattr(cfg, "grad_accum", 1))
+
+    def loss_of(p, batch):
+        if resident_weights:
+            from repro.models.resident import attach_resident
+
+            p = attach_resident(p, cfg)
+        return M.loss_fn(p, cfg, batch)
 
     def grads_of(params, batch):
         (loss, parts), grads = jax.value_and_grad(
-            lambda p: M.loss_fn(p, cfg, batch), has_aux=True)(params)
+            lambda p: loss_of(p, batch), has_aux=True)(params)
         return loss, parts, grads
 
     def train_step(state, batch):
@@ -103,7 +120,8 @@ def make_eval_step(cfg):
 
 # ------------------------------------------------------ mesh composition ---
 def make_dp_train_step(cfg, opt_cfg: AdamWConfig, mesh, *,
-                       compress_dci: bool = False, digit_shard: bool = True):
+                       compress_dci: bool = False, digit_shard: bool = True,
+                       resident_weights: bool = False):
     """Data-parallel train step composed with a digit-sharded forward.
 
     Two orthogonal parallelisms on one mesh:
@@ -129,7 +147,8 @@ def make_dp_train_step(cfg, opt_cfg: AdamWConfig, mesh, *,
 
     from repro.distributed import sharding as SH
 
-    base = make_train_step(cfg, opt_cfg, compress_dci=compress_dci)
+    base = make_train_step(cfg, opt_cfg, compress_dci=compress_dci,
+                           resident_weights=resident_weights)
     jitted = jax.jit(base, donate_argnums=(0,))
     bspec = NamedSharding(mesh, SH.batch_spec(mesh))
 

@@ -44,6 +44,11 @@ SCENARIOS = {
         kw=dict(max_seqs=1, prefix_cache=True)),
     "spec_decode": dict(
         lens=(5, 12), kw=dict(max_seqs=2, spec_decode=True, spec_k=3)),
+    "resident_weights": dict(
+        lens=(5, 12), kw=dict(max_seqs=2, resident_weights=True)),
+    "resident_per_layer": dict(
+        lens=(5, 12), kw=dict(max_seqs=2, resident_weights=True,
+                              per_layer_profiles=True)),
 }
 
 
@@ -95,3 +100,25 @@ def test_backend_matrix_token_identical(rns_model, scenario):
         res, ops, _ = _run(cfg, params, spec, backend)
         assert res == ref_res, (scenario, backend)
         assert ops == ref_ops, (scenario, backend)
+
+
+@pytest.mark.parametrize("defer", [False, True])
+def test_resident_vs_reencode_token_identical(rns_model, defer):
+    """Resident serving must be a pure re-layout of the re-encode path:
+    identical token streams and identical structural op counts once the
+    (now absent) weight conversions are subtracted out."""
+    cfg, params = rns_model
+    spec = dict(lens=(5, 12), kw=dict(max_seqs=2, rns_defer=defer))
+    base_res, _, base_stats = _run(cfg, params, spec, "reference")
+    base_ops = base_stats["steps"][-1]["rns_ops"]
+    assert base_ops.weight_converts > 0          # re-encode really converts
+    for extra in (dict(resident_weights=True),
+                  dict(resident_weights=True, per_layer_profiles=True)):
+        spec_r = dict(lens=spec["lens"], kw=dict(spec["kw"], **extra))
+        res, _, stats = _run(cfg, params, spec_r, "reference")
+        ops = stats["steps"][-1]["rns_ops"]
+        assert res == base_res, extra
+        assert ops.weight_converts == 0, extra
+        assert ((ops.activation_converts, ops.matmuls, ops.normalizes)
+                == (base_ops.activation_converts, base_ops.matmuls,
+                    base_ops.normalizes)), extra

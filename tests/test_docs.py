@@ -35,6 +35,33 @@ def test_serving_doctests():
     assert results.failed == 0
 
 
+def test_architecture_doctests():
+    """The resident-weight pipeline (encode once, serve forever) is
+    taught as runnable examples on the architecture page."""
+    results = doctest.testfile(
+        str(DOCS / "architecture.md"), module_relative=False, verbose=False)
+    assert results.attempted >= 8, "architecture.md lost its examples"
+    assert results.failed == 0
+
+
+def test_architecture_references_real_resident_symbols():
+    from repro.models.resident import (  # noqa: F401
+        attach_resident,
+        encode_resident,
+        has_resident,
+        strip_resident,
+    )
+    from repro.serve.engine import ServeConfig
+
+    text = (DOCS / "architecture.md").read_text()
+    for name in ("encode_resident", "resident_weights", "w_res",
+                 "rns_resident_dot", "per_layer_profiles",
+                 "narrowest_profile"):
+        assert name in text, name
+    assert ServeConfig(resident_weights=True,
+                       per_layer_profiles=True).resident_weights
+
+
 def test_docs_cross_links_resolve():
     for page in DOCS.glob("*.md"):
         text = page.read_text()

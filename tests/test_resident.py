@@ -1,0 +1,352 @@
+"""Resident residue-domain weights: exactness, ledger proofs, perf deltas.
+
+The tentpole contract, pinned operationally:
+
+  * resident forwards are BIT-identical to the re-encode path (per-op,
+    deferred, gated/ungated, stacked-scan) — the weights' residues are the
+    same integers either way, so the only legal difference is *where* the
+    conversion happens (build time vs trace time);
+  * per-layer narrow profiles stay exact: the quantized-weight column-sum
+    ledger bound is checked against a python-int oracle running the same
+    chain in unbounded integers;
+  * the perf claim is HLO-visible: on the 128x512x128 kernel shape the
+    resident program costs measurably fewer FLOPs and HBM bytes than the
+    re-encode program (hlo_cost);
+  * resident engines keep the zero-per-length-recompile contract
+    (``_cache_size() == 1``) and resident params round-trip the
+    checkpointer bit-identically.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.core import dispatch
+from repro.core.moduli import get_profile
+from repro.core.quantize import absmax_scale, quantize_with_scale
+from repro.core.rns_matmul import RnsDotConfig, rns_dot, rns_resident_dot
+from repro.core.tensor import RnsTensor
+from repro.models import model as M
+from repro.models import resident as R
+from repro.models.layers import mlp
+from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
+
+RNS8 = RnsDotConfig(profile="rns9", qx=8, qw=8)
+
+
+def _mlp_params(key, d=32, ff=64, gated=True, periods=None):
+    ks = jax.random.split(key, 3)
+    shp = lambda a, b: (periods, a, b) if periods else (a, b)
+    p = {"wi": {"w": jax.random.normal(ks[0], shp(d, ff)) * 0.05},
+         "wo": {"w": jax.random.normal(ks[2], shp(ff, d)) * 0.05}}
+    if gated:
+        p["wg"] = {"w": jax.random.normal(ks[1], shp(d, ff)) * 0.05}
+    return p
+
+
+class _Cfg:
+    """Minimal model-config stand-in for encode_resident/attach_resident."""
+    rns_targets = "mlp"
+
+    def __init__(self, rns):
+        self.rns = rns
+
+
+# ------------------------------------------------------------ exactness ---
+@pytest.mark.parametrize("gated", [True, False])
+@pytest.mark.parametrize("defer", [False, True])
+@pytest.mark.parametrize("per_layer", [False, True])
+def test_resident_mlp_bit_identical(gated, defer, per_layer):
+    p = _mlp_params(jax.random.PRNGKey(0), gated=gated)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32))
+    rns = dataclasses.replace(RNS8, defer=defer)
+    y0 = mlp(p, x, gated=gated, act="silu", rns=rns)
+    pr = R.encode_resident({"mlp": p}, _Cfg(rns),
+                           per_layer_profiles=per_layer)["mlp"]
+    assert R.has_resident({"mlp": pr})
+    y1 = mlp(pr, x, gated=gated, act="silu", rns=rns)
+    assert jnp.array_equal(y0, y1)
+
+
+def test_resident_stacked_scan_bit_identical():
+    """Period-major stacked residents slice through lax.scan into valid
+    per-period RnsTensors — the scanned-transformer layout."""
+    p = _mlp_params(jax.random.PRNGKey(2), periods=3)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 32))
+    step = lambda h, lp: (mlp(lp, h, gated=True, act="silu", rns=RNS8), None)
+    y0, _ = jax.lax.scan(step, x, p)
+    pr = R.encode_resident({"mlp": p}, _Cfg(RNS8))["mlp"]
+    assert pr["wi"]["w_res"].digits.ndim == 4        # [P, K, d, ff]
+    assert pr["wi"]["w_res"].scale.shape == (3,)     # per-period grids
+    y1, _ = jax.lax.scan(step, x, pr)
+    assert jnp.array_equal(y0, y1)
+    # jit round-trip with the resident pytree as an argument
+    y2, _ = jax.jit(lambda xx, pp: jax.lax.scan(step, xx, pp))(x, pr)
+    assert jnp.array_equal(y0, y2)
+
+
+def test_drop_masters_serves_without_floats():
+    p = _mlp_params(jax.random.PRNGKey(4))
+    x = jax.random.normal(jax.random.PRNGKey(5), (4, 32))
+    y0 = mlp(p, x, gated=True, act="silu", rns=RNS8)
+    pr = R.encode_resident({"mlp": p}, _Cfg(RNS8), drop_masters=True)["mlp"]
+    assert "w" not in pr["wi"]
+    y1 = mlp(pr, x, gated=True, act="silu", rns=RNS8)
+    assert jnp.array_equal(y0, y1)
+
+
+def test_strip_resident_restores_reencode_path():
+    p = _mlp_params(jax.random.PRNGKey(6))
+    pr = R.encode_resident({"mlp": p}, _Cfg(RNS8))
+    ps = R.strip_resident(pr)
+    assert not R.has_resident(ps)
+    assert jnp.array_equal(ps["mlp"]["wi"]["w"], p["wi"]["w"])
+
+
+# -------------------------------------------------- per-layer narrow path --
+def test_narrow_profile_vs_python_int_oracle():
+    """The narrow-profile resident chain must equal unbounded python-int
+    arithmetic on the same quantized operands — the ledger's exactness
+    claim, checked end to end through a narrow moduli set."""
+    p = _mlp_params(jax.random.PRNGKey(7), d=16, ff=24, gated=False)
+    x = jax.random.normal(jax.random.PRNGKey(8), (3, 16))
+    cfg = _Cfg(RNS8)
+    pr = R.encode_resident({"mlp": p}, cfg, per_layer_profiles=True)["mlp"]
+    prof = get_profile(pr["wi"]["w_res"].profile)
+    assert prof.range_bits < get_profile("rns9").range_bits  # really narrow
+
+    sx = absmax_scale(x, 8)
+    sw = absmax_scale(p["wi"]["w"], 8)
+    qx = np.asarray(quantize_with_scale(x, sx, 8), object)
+    qw = np.asarray(quantize_with_scale(p["wi"]["w"], sw, 8), object)
+    exact = qx @ qw                                  # unbounded python ints
+    assert all(abs(int(v)) * 2 < prof.M for v in exact.ravel())
+    y = rns_resident_dot(x, pr["wi"]["w_res"],
+                         dataclasses.replace(RNS8, profile=prof.name))
+    # mirror the datapath's float32 rescale op for op (bit-identity needs
+    # the same IEEE operations, not just the same real value)
+    recip = np.float32(1.0) / (np.float32(sx) * np.float32(sw))
+    want = exact.astype(np.float64).astype(np.float32) * recip
+    np.testing.assert_array_equal(np.asarray(y), want)
+
+
+def test_amortized_ledger_bound_is_safe_and_tight():
+    """Resident mag_bits reconstruct the column-sum bound through the
+    existing ledger formula, and the selected profile covers it."""
+    import math
+
+    p = _mlp_params(jax.random.PRNGKey(9))
+    pr = R.encode_resident({"mlp": p}, _Cfg(RNS8),
+                           per_layer_profiles=True)["mlp"]
+    for name in ("wi", "wg", "wo"):
+        res = pr[name]["w_res"]
+        w = pr[name]["w"]
+        s = absmax_scale(w, 8)
+        q = np.asarray(quantize_with_scale(w, s, 8), np.int64)
+        colsum = int(np.abs(q).sum(axis=-2).max())
+        D = w.shape[-2]
+        # ledger reconstruction: a.mag + w.mag + log2(D) == (qx-1)+log2(colsum)
+        got = 7.0 + res.mag_bits + math.log2(D)
+        want = 7.0 + math.log2(colsum)
+        assert got == pytest.approx(want, abs=1e-9)
+        prof = get_profile(res.profile)
+        assert want + 1.0 <= prof.signed_bits        # headroom survives
+
+
+def test_resident_profile_mismatch_without_master_raises():
+    p = _mlp_params(jax.random.PRNGKey(10))
+    pr = R.encode_resident({"mlp": p}, _Cfg(RNS8), per_layer_profiles=True,
+                           drop_masters=True)["mlp"]
+    from repro.models.layers import _encode_weight
+
+    wide = dataclasses.replace(RNS8, profile="rns16")
+    with pytest.raises(ValueError, match="float master was dropped"):
+        _encode_weight(pr["wi"], wide)
+
+
+def test_per_layer_requires_resident_in_serve_config():
+    with pytest.raises(ValueError, match="requires resident_weights"):
+        ServeConfig(per_layer_profiles=True)
+
+
+# --------------------------------------------------------- encode cache ---
+def test_eager_encode_cache_hits_on_param_identity():
+    from repro.models import layers as L
+
+    L._ENCODE_CACHE.clear()
+    w = jax.random.normal(jax.random.PRNGKey(11), (16, 16))
+    p = {"w": w}
+    r1 = L._encode_weight(p, RNS8)
+    r2 = L._encode_weight(p, RNS8)
+    assert r1 is r2                                  # identity-keyed hit
+    r3 = L._encode_weight({"w": w + 0}, RNS8)        # new array, new encode
+    assert r3 is not r1
+    assert jnp.array_equal(r3.digits, r1.digits)
+    # different profile/bits never collide
+    r4 = L._encode_weight(p, dataclasses.replace(RNS8, profile="rns6"))
+    assert r4.profile == "rns6"
+    assert L._encode_weight(p, RNS8) is r1
+
+
+def test_eager_encode_cache_bypasses_tracers():
+    from repro.models import layers as L
+
+    L._ENCODE_CACHE.clear()
+    w = jax.random.normal(jax.random.PRNGKey(12), (8, 8))
+
+    @jax.jit
+    def f(w):
+        return L._encode_weight({"w": w}, RNS8).digits
+
+    f(w)
+    assert not L._ENCODE_CACHE                       # tracer never cached
+
+
+# ---------------------------------------------------------- train path ----
+def test_train_step_resident_weights_updates_masters():
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.train_step import init_train_state, make_train_step
+
+    cfg = dataclasses.replace(get_config("smollm-135m", smoke=True),
+                              rns=RNS8, rns_targets="mlp")
+    state, _ = init_train_state(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.ones((2, 8), jnp.int32)}
+    step = make_train_step(cfg, AdamWConfig(lr=1e-3), resident_weights=True)
+    new_state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    w0 = state["params"]["blocks"]["l0"]["mlp"]["wi"]["w"]
+    w1 = new_state["params"]["blocks"]["l0"]["mlp"]["wi"]["w"]
+    assert not jnp.array_equal(w0, w1)               # masters really moved
+    assert not R.has_resident(new_state["params"])   # digits never persisted
+
+
+# ------------------------------------------------------------- hlo cost ---
+def test_hlo_cost_resident_beats_reencode_128x512x128():
+    """The acceptance shape: resident encode(x)-only programs must cost
+    measurably fewer FLOPs and HBM bytes than encode(x)+encode(w)."""
+    from repro.launch.hlo_cost import analyze_hlo
+
+    x = jax.random.normal(jax.random.PRNGKey(13), (128, 512))
+    w = jax.random.normal(jax.random.PRNGKey(14), (512, 128)) * 0.05
+    w_res = R._encode_one(w, "rns9", 8, 7.0)
+
+    def lowered(fn, *args):
+        return jax.jit(fn).lower(*args).compile().as_text()
+
+    h_re = lowered(lambda x, w: rns_dot(x, w, RNS8), x, w)
+    h_res = lowered(lambda x, r: rns_resident_dot(x, r, RNS8), x, w_res)
+    c_re, c_res = analyze_hlo(h_re), analyze_hlo(h_res)
+    # the dot FLOPs are identical by construction (same matmuls, same
+    # digits); what residency deletes is the weight conversion — the
+    # quantize float ops over the [512, 128] weight and the HBM traffic
+    # of re-materializing its residues every call
+    assert c_res["flops"] <= c_re["flops"], (c_res, c_re)
+    assert c_res["hbm_bytes"] < c_re["hbm_bytes"], (c_res, c_re)
+    assert c_res["hbm_write_bytes"] < c_re["hbm_write_bytes"], (c_res, c_re)
+
+    def weight_quantize_ops(hlo):
+        return sum("round" in l and "512,128" in l for l in hlo.splitlines())
+
+    assert weight_quantize_ops(h_re) > 0      # re-encode quantizes w inline
+    assert weight_quantize_ops(h_res) == 0    # resident never touches w
+
+
+# ------------------------------------------------------- serving engines ---
+@pytest.fixture(scope="module")
+def serve_model():
+    cfg = dataclasses.replace(get_config("smollm-135m", smoke=True),
+                              rns=RNS8, rns_targets="mlp")
+    return cfg, M.init_model(jax.random.PRNGKey(0), cfg)[0]
+
+
+def test_continuous_engine_resident_compile_pin(serve_model):
+    cfg, params = serve_model
+    eng = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=24, max_new_tokens=4, max_seqs=2,
+        rns_backend="reference", resident_weights=True))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, (l,)).astype(np.int32)
+               for l in (5, 9, 3)]
+    res, stats = eng.run(prompts)
+    assert eng._prefill._cache_size() == 1
+    assert eng._decode._cache_size() == 1
+    ops = stats["steps"][-1]["rns_ops"]
+    assert ops.weight_converts == 0
+    assert ops.activation_converts > 0
+
+
+def test_bucketed_engine_resident_token_identical(serve_model):
+    cfg, params = serve_model
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab, (2, 6)).astype(np.int32)
+    kw = dict(max_cache=16, max_new_tokens=4, rns_backend="reference")
+    out0 = Engine(params, cfg, ServeConfig(**kw)).generate(prompts)
+    eng = Engine(params, cfg, ServeConfig(resident_weights=True, **kw))
+    assert R.has_resident(eng.params)
+    out1 = eng.generate(prompts)
+    np.testing.assert_array_equal(out0, out1)
+    ops = eng.rns_op_counts(B=2, T=6)
+    assert ops.weight_converts == 0
+
+
+# --------------------------------------------------------- checkpointing ---
+def test_checkpoint_roundtrip_resident_params(tmp_path, serve_model):
+    from repro.checkpoint import checkpointer as C
+
+    cfg, params = serve_model
+    pr = R.encode_resident(params, cfg, per_layer_profiles=True)
+    step_dir = C.save(str(tmp_path), 7, pr)
+    restored, extra, step = C.restore(step_dir, jax.eval_shape(lambda: pr))
+    assert step == 7
+
+    flat0 = jax.tree_util.tree_flatten_with_path(pr)[0]
+    flat1 = {jax.tree_util.keystr(k): v
+             for k, v in jax.tree_util.tree_flatten_with_path(restored)[0]}
+    n_res = 0
+    for k, v in flat0:
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(flat1[jax.tree_util.keystr(k)]),
+                                      err_msg=jax.tree_util.keystr(k))
+        n_res += "w_res" in jax.tree_util.keystr(k)
+    assert n_res > 0                                 # residents were in play
+
+    def probe(tree, path=()):
+        if isinstance(tree, dict):
+            for k, v in tree.items():
+                yield from probe(v, path + (k,))
+        elif isinstance(tree, RnsTensor):
+            yield path, tree
+
+    res0 = dict(probe(pr))
+    res1 = dict(probe(restored))
+    assert set(res0) == set(res1) and res0
+    for k in res0:
+        # static aux (profile name, ledger state) rides the treedef
+        assert res1[k].profile == res0[k].profile
+        assert res1[k].mag_bits == res0[k].mag_bits
+        assert res1[k].frac_exp == res0[k].frac_exp
+        assert jnp.array_equal(res1[k].digits, res0[k].digits)
+        assert jnp.array_equal(res1[k].scale, res0[k].scale)
+
+
+# ------------------------------------------------------- digit sharding ---
+def test_resident_digit_sharded_token_identical(serve_model):
+    from jax.sharding import Mesh
+
+    cfg, params = serve_model
+    mesh = Mesh(np.array(jax.devices()[:1]), ("model",))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, (l,)).astype(np.int32)
+               for l in (5, 9)]
+    kw = dict(max_cache=24, max_new_tokens=4, max_seqs=2,
+              rns_backend="reference")
+    res0, _ = ContinuousEngine(params, cfg, ServeConfig(**kw)).run(prompts)
+    eng = ContinuousEngine(params, cfg, ServeConfig(
+        mesh=mesh, resident_weights=True, **kw))
+    res1, _ = eng.run(prompts)
+    assert all(np.array_equal(res0[k], res1[k]) for k in res0)

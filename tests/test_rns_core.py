@@ -34,6 +34,48 @@ class TestModuli:
         assert ds == sorted(ds)
         assert required_digits(4096, 8, 8) < required_digits(4096, 24, 24)
 
+    # construction-time validation: a bad basis must fail loudly, not
+    # silently corrupt MRC reconstructions downstream
+    def test_rejects_empty_moduli(self):
+        from repro.core.moduli import RnsProfile
+
+        with pytest.raises(ValueError, match="empty moduli"):
+            RnsProfile("bad_empty", (), 0)
+
+    def test_rejects_modulus_below_two(self):
+        from repro.core.moduli import RnsProfile
+
+        with pytest.raises(ValueError, match="contributes no range"):
+            RnsProfile("bad_one", (1, 127), 0)
+
+    def test_rejects_duplicate_modulus(self):
+        from repro.core.moduli import RnsProfile
+
+        with pytest.raises(ValueError, match="duplicated"):
+            RnsProfile("bad_dup", (127, 127), 0)
+
+    def test_rejects_non_coprime_pair(self):
+        from repro.core.moduli import RnsProfile
+
+        with pytest.raises(ValueError, match="not coprime"):
+            RnsProfile("bad_gcd", (6, 9), 0)
+
+    def test_narrowest_profile_selection(self):
+        from repro.core.moduli import narrowest_profile
+
+        # tiny need -> smallest registered int8-safe profile
+        small = narrowest_profile(10.0, cap="rns9")
+        assert small.signed_bits >= 10.0
+        assert small.range_bits <= get_profile("rns9").range_bits
+        # need just over a narrow profile's range climbs to the next one
+        for name in ("rns5", "rns6", "rns7", "rns8"):
+            p = get_profile(name)
+            chosen = narrowest_profile(p.signed_bits + 0.5, cap="rns9")
+            assert chosen.signed_bits >= p.signed_bits + 0.5
+            assert chosen.range_bits > p.range_bits
+        # impossible need falls back to the cap itself
+        assert narrowest_profile(10_000.0, cap="rns9").name == "rns9"
+
 
 @given(st.lists(st.integers(-HALF + 1, HALF - 1), min_size=1, max_size=16))
 def test_exact_roundtrip(vals):
