@@ -14,6 +14,11 @@ Residue-domain MLP datapath with resident (encode-once) weights:
 
     PYTHONPATH=src python -m repro.launch.serve --continuous --rns rns9 \
         --resident-weights --per-layer-profiles --requests 4 --new 8
+
+Chunked prefill (packed mixed-phase steps, no prefill/decode barrier):
+
+    PYTHONPATH=src python -m repro.launch.serve --continuous \
+        --chunked-prefill --token-budget 64 --requests 8 --new 8
 """
 
 from __future__ import annotations
@@ -77,7 +82,9 @@ def _continuous(args, cfg, params):
         prefix_cache=args.prefix_cache, spec_decode=args.spec_decode,
         spec_k=args.spec_k, mesh=_digit_mesh(args),
         resident_weights=args.resident_weights,
-        per_layer_profiles=args.per_layer_profiles))
+        per_layer_profiles=args.per_layer_profiles,
+        chunked_prefill=args.chunked_prefill,
+        token_budget=args.token_budget, chunk_size=args.chunk_size))
     if args.resident_weights:
         from repro.models.resident import resident_profiles
 
@@ -104,10 +111,19 @@ def _continuous(args, cfg, params):
               f"pages_shared={stats['pages_shared']} "
               f"pages_allocated={stats['pages_allocated']} "
               f"cow_splits={stats['cow_splits']}")
-    decode_jit = engine._verify if args.spec_decode else engine._decode
-    print(f"compiles: prefill={engine._prefill._cache_size()} "
-          f"{'verify' if args.spec_decode else 'decode'}="
-          f"{decode_jit._cache_size()} (per-length recompiles: 0)")
+    if args.chunked_prefill:
+        mixed = sum(1 for s in stats["steps"]
+                    if s["prefill_tokens"] > 0 and s["decode_tokens"] > 0)
+        print(f"chunked prefill: budget={engine.scfg.token_budget} lanes "
+              f"ttft p50={stats['ttft_p50_s']:.3f}s "
+              f"p95={stats['ttft_p95_s']:.3f}s  mixed steps={mixed}")
+        print(f"compiles: mixed={engine._mixed._cache_size()} "
+              f"(per-mix recompiles: 0)")
+    else:
+        decode_jit = engine._verify if args.spec_decode else engine._decode
+        print(f"compiles: prefill={engine._prefill._cache_size()} "
+              f"{'verify' if args.spec_decode else 'decode'}="
+              f"{decode_jit._cache_size()} (per-length recompiles: 0)")
     print("sample:", res[0][:16])
 
 
@@ -136,6 +152,16 @@ def main():
                          "to vanilla decode)")
     ap.add_argument("--spec-k", type=int, default=3,
                     help="draft tokens per speculative step")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="packed mixed-phase batching: prefill chunks and "
+                         "decode rows share ONE jitted step over a fixed "
+                         "token budget (continuous engine only; tokens "
+                         "stay identical to whole-prompt prefill)")
+    ap.add_argument("--token-budget", type=int, default=64,
+                    help="packed lanes per mixed step (--chunked-prefill)")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="max prefill tokens per row per mixed step; must "
+                         "be a multiple of --page-size")
     ap.add_argument("--rns", metavar="PROFILE", default=None,
                     help="run the MLP datapath in residues on PROFILE "
                          "(e.g. rns9); required for --rns-backend/"

@@ -344,6 +344,45 @@ def gqa_decode_paged_window(p, x, cfg, cache, *, rns=None, use_rope=True):
     return y, k_pages, v_pages
 
 
+def gqa_decode_packed(p, x, cfg, cache, seg, pos, *, rns=None, use_rope=True):
+    """Packed mixed-phase step: N tokens, each with explicit (segment,
+    position) coordinates, against a paged KV cache.
+
+    ``x`` [1, N, d]: token i belongs to row ``seg[i]`` at absolute
+    position ``pos[i]`` — any mix of prefill-chunk tokens and decode
+    rows, padding-free (pad lanes carry ``seg = -1`` and write to the
+    trash page).  All N tokens' K/V are scattered *before* the gather,
+    so a chunk token attends both earlier chunks' KV pages and its own
+    chunk predecessors; the per-token causal mask is ``pos + 1`` keys.
+
+    Exactness: every token runs :func:`decode_attention` over its row's
+    gathered pages, which is bitwise the solo math for both token kinds
+    — for decode rows it IS the solo path (``gqa_decode_paged``
+    modulo layout), and for chunk tokens it equals the single-chunk
+    online softmax of :func:`chunked_attention` (the ``m0 = -inf``
+    correction underflows to an exact 0.0 and masked keys contribute
+    exact zeros), valid while a row's gathered context fits one KV chunk
+    (``max_blocks * page_size <= 1024`` — smoke/serve scales here).
+
+    Returns (y [1, N, d], k_pages, v_pages).
+    """
+    from repro.serve.kv_cache import gather_pages, write_packed_tokens
+
+    N = x.shape[1]
+    q, k, v = gqa_qkv(p, x, cfg, pos[None], rns, use_rope=use_rope)
+    k_pages = write_packed_tokens(cache["k_pages"], cache["block_table"],
+                                  seg, pos, k[0])
+    v_pages = write_packed_tokens(cache["v_pages"], cache["block_table"],
+                                  seg, pos, v[0])
+    R = cache["block_table"].shape[0]
+    segc = jnp.clip(seg, 0, R - 1)
+    kd = gather_pages(k_pages, cache["block_table"])[segc]   # [N, S, Hk, D]
+    vd = gather_pages(v_pages, cache["block_table"])[segc]
+    out, _lse = decode_attention(q[0][:, None], kd, vd, pos + 1)
+    y = linear(p["wo"], out.reshape(1, N, -1), rns)
+    return y, k_pages, v_pages
+
+
 def cross_decode(p, x, cfg, xkv, *, rns=None):
     """Decode-time cross-attention over a static encoder KV (enc-dec archs).
 
@@ -447,20 +486,21 @@ def mla_attend(p, x, cfg, *, mode: str, positions=None, kv_mask=None,
     return linear(p["wo"], out.reshape(B, T, -1), rns), latent
 
 
-def _mla_decode_proj(p, x, cfg, lengths, rns):
-    """Shared decode-time MLA projections (T=1 decode or T=W verify window).
+def _mla_proj_at(p, x, cfg, positions, rns):
+    """Decode-time MLA projections at explicit absolute ``positions`` [B,T].
 
     Returns (q_nope [B,T,H,dn], q_rope [B,T,H,dr] roped, c_kv_t [B,T,r],
     k_rope_t [B,T,dr] roped) — everything the cache write + absorbed
-    attention need, for either cache layout.  Token ``i`` of the window
-    sits at absolute position ``lengths + i``.
+    attention need, for either cache layout.  Per token this is the same
+    math as :func:`mla_qkv` up to (and excluding) the k/v expansion, so
+    the latents written to the cache are bitwise those a whole-prompt
+    prefill would produce.
     """
     from repro.models.layers import rmsnorm
 
     m = cfg.mla
     B, T = x.shape[:2]
     H = cfg.n_heads
-    positions = lengths[:, None] + jnp.arange(T)[None]
     dq, dkv, kr = _multi_proj(x, (p["wdq"], p["wdkv"], p["wkr"]), rns)
     cq = rmsnorm(p["q_norm"], dq)
     q_nope, q_rope = _multi_proj(cq, (p["wuqn"], p["wuqr"]), rns)
@@ -474,18 +514,26 @@ def _mla_decode_proj(p, x, cfg, lengths, rns):
     return q_nope, q_rope, c_kv_t, k_rope_t
 
 
-def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, c_kv, k_rope, lengths,
-                         rns):
-    """Absorbed-matrix latent attention over a dense [B,S,·] latent view.
+def _mla_decode_proj(p, x, cfg, lengths, rns):
+    """MLA projections for T=1 decode or a T=W verify window: token ``i``
+    sits at absolute position ``lengths + i`` (see :func:`_mla_proj_at`)."""
+    T = x.shape[1]
+    positions = lengths[:, None] + jnp.arange(T)[None]
+    return _mla_proj_at(p, x, cfg, positions, rns)
+
+
+def _mla_absorbed_ctx(p, cfg, q_nope, q_rope, c_kv, k_rope, lengths):
+    """Absorbed-matrix latent attention core (everything before ``wo``).
 
     W_uk is absorbed into the query and W_uv into the output so attention
     runs directly in the latent space (MQA-shaped, Hk=1).  ``lengths``:
     [B] valid key counts shared by every query (one-token decode), or
     [B, T] per-query counts (speculative-verify window, query ``i`` sees
-    ``lengths[b, i]`` keys).  Returns (y [B,T,d], lse [B,1,H,T]).
+    ``lengths[b, i]`` keys).  Returns (out [B,T,H,v_dim] float32,
+    lse [B,1,H,T]) — the packed mixed step selects between this and the
+    expanded (prefill-math) context per token before the shared ``wo``.
     """
     m = cfg.mla
-    B = x.shape[0]
     H = cfg.n_heads
     wuk = p["wuk"]["w"].reshape(m.kv_lora_rank, H, m.qk_nope_dim)
     q_abs = jnp.einsum("bthd,rhd->bthr", q_nope.astype(jnp.float32),
@@ -510,9 +558,19 @@ def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, c_kv, k_rope, lengths,
                      c_kv.astype(jnp.float32))                       # [B,T,H,r]
     wuv = p["wuv"]["w"].reshape(m.kv_lora_rank, H, m.v_dim)
     out = jnp.einsum("bthr,rhd->bthd", ctx, wuv.astype(jnp.float32))
+    lse = (mx + jnp.log(jnp.maximum(l, 1e-30)))[:, None, :, :]  # [B,1,H,T]
+    return out, lse
+
+
+def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, c_kv, k_rope, lengths,
+                         rns):
+    """:func:`_mla_absorbed_ctx` + the output projection.  Returns
+    (y [B,T,d], lse [B,1,H,T])."""
+    B = x.shape[0]
+    out, lse = _mla_absorbed_ctx(p, cfg, q_nope, q_rope, c_kv, k_rope,
+                                 lengths)
     T = out.shape[1]
     y = linear(p["wo"], out.reshape(B, T, -1).astype(x.dtype), rns)
-    lse = (mx + jnp.log(jnp.maximum(l, 1e-30)))[:, None, :, :]  # [B,1,H,T]
     return y, lse
 
 
@@ -585,4 +643,62 @@ def mla_decode_paged_window(p, x, cfg, cache, *, rns=None):
     qlen = cache["lengths"][:, None] + 1 + jnp.arange(W)[None]   # [R, W]
     y, _lse = _mla_absorbed_attend(
         p, x, cfg, q_nope, q_rope, c_kv, k_rope, qlen, rns)
+    return y, ckv_pages, krope_pages
+
+
+def mla_decode_packed(p, x, cfg, cache, seg, pos, dec, *, rns=None):
+    """Packed mixed-phase MLA step against a paged latent cache.
+
+    Same packed layout as :func:`gqa_decode_packed` (``x`` [1, N, d],
+    per-token ``seg``/``pos``), plus a per-token kind mask ``dec`` [N]
+    bool.  MLA's two deployment forms are NOT bitwise interchangeable —
+    solo prefill runs *expanded* attention (latents up-projected through
+    ``wuk``/``wuv``, one dot over dn+dr) while solo decode runs
+    *absorbed* attention (two latent-space einsums summed) — so the
+    packed step computes BOTH contexts over the gathered latents and
+    selects per token: absorbed where ``dec`` (decode rows), expanded
+    where not (prefill-chunk tokens).  Re-expanding the *gathered*
+    latents is exact because the latent cache is float32 and the
+    expansion matmul treats every (token, position) row independently.
+
+    The expansion's ``rns`` grid cannot be reproduced for gathered
+    latents (the solo per-token grid info is gone), so the engine
+    rejects chunked MLA with ``rns_targets="all"``; with attention off
+    the RNS path (``rns is None`` here) both kinds are bitwise solo.
+
+    Returns (y [1, N, d], ckv_pages, krope_pages).
+    """
+    from repro.serve.kv_cache import gather_pages, write_packed_tokens
+
+    m = cfg.mla
+    N = x.shape[1]
+    H = cfg.n_heads
+    q_nope, q_rope, c_kv_t, k_rope_t = _mla_proj_at(p, x, cfg, pos[None],
+                                                    rns)
+    ckv_pages = write_packed_tokens(cache["ckv_pages"], cache["block_table"],
+                                    seg, pos, c_kv_t[0])
+    krope_pages = write_packed_tokens(cache["krope_pages"],
+                                      cache["block_table"],
+                                      seg, pos, k_rope_t[0])
+    R = cache["block_table"].shape[0]
+    segc = jnp.clip(seg, 0, R - 1)
+    c_kv = gather_pages(ckv_pages, cache["block_table"])[segc]      # [N,S,r]
+    k_rope = gather_pages(krope_pages, cache["block_table"])[segc]  # [N,S,dr]
+    qn = q_nope[0][:, None]                                     # [N,1,H,dn]
+    qr = q_rope[0][:, None]
+    # absorbed context: bitwise the solo decode math per row
+    abs_out, _ = _mla_absorbed_ctx(p, cfg, qn, qr, c_kv, k_rope, pos + 1)
+    # expanded context: bitwise the solo prefill math per chunk token
+    S = c_kv.shape[1]
+    k_nope, v = _multi_proj(c_kv, (p["wuk"], p["wuv"]), rns)
+    k_nope = k_nope.reshape(N, S, H, m.qk_nope_dim)
+    v = v.reshape(N, S, H, m.v_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (N, S, H, m.qk_rope_dim))], axis=-1)
+    q = jnp.concatenate([qn, qr], axis=-1)
+    exp_out, _lse = decode_attention(q, k, v, pos + 1)          # [N,1,H,vd]
+    out = jnp.where(dec[:, None, None, None], abs_out,
+                    exp_out.astype(jnp.float32))
+    y = linear(p["wo"], out.reshape(1, N, -1).astype(x.dtype), rns)
     return y, ckv_pages, krope_pages

@@ -196,21 +196,37 @@ def prefill(params, cfg, batch, S_max, *, cache_dtype=jnp.bfloat16):
     """Run the prompt (equal lengths per batch), build the decode cache.
 
     batch: tokens [B,T] (+ frontend).  Returns (last_logits [B,V], cache).
+
+    RNS grids: decoder-only text prompts install an all-ones *per-token*
+    quantization mask, so every prompt token gets its own absmax grid —
+    the same grid :func:`prefill_ragged` and chunked prefill
+    (:func:`mixed_step`) compute for that token, which is what keeps all
+    three prefill paths token-identical.  Frontend/enc-dec prompts mix
+    non-token positions into the stack and keep the legacy whole-tensor
+    grid (the continuous engine rejects them anyway).
     """
+    from repro.core.quantize import token_mask
+
     tokens = batch["tokens"]
     B, T = tokens.shape
-    h = _embed_tokens(params, cfg, tokens)
     enc_out = None
     F = 0
-    if cfg.enc_dec:
-        enc_out = _encode(params, cfg, batch["frontend"])
-    elif cfg.frontend is not None and "frontend" in batch:
-        F = batch["frontend"].shape[1]
-        h = jnp.concatenate([batch["frontend"].astype(h.dtype), h], axis=1)
-    h = _add_abs_pos(cfg, h)
-    h, ys, _aux = tf.apply_blocks(params["blocks"], h, cfg, mode="prefill",
-                                  enc_out=enc_out)
-    logits_last = _logits(params, cfg, h[:, -1:])[:, 0]
+    mixes_frontend = cfg.enc_dec or (cfg.frontend is not None
+                                     and "frontend" in batch)
+    mask = (jnp.ones((B, T), bool)
+            if cfg.rns is not None and not mixes_frontend else None)
+    with token_mask(mask, per_token=True):
+        h = _embed_tokens(params, cfg, tokens)
+        if cfg.enc_dec:
+            enc_out = _encode(params, cfg, batch["frontend"])
+        elif cfg.frontend is not None and "frontend" in batch:
+            F = batch["frontend"].shape[1]
+            h = jnp.concatenate([batch["frontend"].astype(h.dtype), h],
+                                axis=1)
+        h = _add_abs_pos(cfg, h)
+        h, ys, _aux = tf.apply_blocks(params["blocks"], h, cfg,
+                                      mode="prefill", enc_out=enc_out)
+        logits_last = _logits(params, cfg, h[:, -1:])[:, 0]
 
     Tc = T + F
     lengths = jnp.full((B,), Tc, jnp.int32)
@@ -271,9 +287,13 @@ def prefill_ragged(params, cfg, batch, lengths):
     RNS exactness under padding: a per-tensor absmax grid over the padded
     activations would couple each row's quantization to pad garbage, so a
     :class:`~repro.core.quantize.token_mask` context is installed for the
-    whole stack — every sequence's scale reduces over its real tokens
-    only, which makes the RNS path token-identical to a solo (unpadded)
-    run of the same prompt.  The float path never consults the mask.
+    whole stack.  The mask is ``per_token``: every prompt token quantizes
+    on its own (row, token) absmax grid, which is invariant to padding,
+    to batch composition, *and* to how the prompt is split into chunks —
+    the property chunked prefill (``mixed_step``) needs to stay
+    token-identical to a whole-prompt run.  The bucketed :func:`prefill`
+    installs the same per-token grid, so both prefill paths agree
+    bit-for-bit.  The float path never consults the mask.
 
     Decoder-only, causal, no frontend (the continuous engine validates).
     """
@@ -282,7 +302,7 @@ def prefill_ragged(params, cfg, batch, lengths):
     tokens = batch["tokens"]
     B, Tpad = tokens.shape
     valid = jnp.arange(Tpad)[None, :] < lengths[:, None]
-    with token_mask(valid if cfg.rns is not None else None):
+    with token_mask(valid if cfg.rns is not None else None, per_token=True):
         h = _embed_tokens(params, cfg, tokens)
         h = _add_abs_pos(cfg, h)
         h, ys, _aux = tf.apply_blocks(params["blocks"], h, cfg,
@@ -357,6 +377,43 @@ def decode_window(params, cfg, tokens, cache, active=None):
         h, ys, _ = tf.apply_blocks(params["blocks"], h, cfg, mode="decode",
                                    cache=cache)
         logits = _logits(params, cfg, h)
+    return logits, ys
+
+
+def mixed_step(params, cfg, tokens, seg, pos, dec, valid, cache):
+    """ONE packed chunked-prefill + decode step (paged caches only).
+
+    ``tokens``/``seg``/``pos`` [N] int32, ``dec``/``valid`` [N] bool:
+    lane i carries the token for row ``seg[i]`` at absolute position
+    ``pos[i]`` — a decode row's next token (``dec``) or one token of a
+    prefill chunk (``~dec``).  Pad lanes (``~valid``) carry ``seg = -1``:
+    their KV lands on the trash page and their logits are garbage the
+    engine discards.  N is the engine's fixed ``token_budget``, so ONE
+    compilation serves every prefill/decode mix.
+
+    Returns (logits [N, V], updated cache).  ``logits[i]`` is the
+    next-token distribution after consuming lane i — meaningful for
+    decode lanes and for each chunk's last token (TTFT!).  Cache
+    ``lengths`` are not advanced; the engine owns them host-side and
+    pushes fresh tables before every step.
+
+    Token identity: per-token quantization grids (see
+    :func:`prefill_ragged`), write-then-gather packed attention
+    (models/attention.py ``*_decode_packed``), and a float32 page pool
+    make each lane's math bitwise its solo bucketed counterpart.
+    """
+    from repro.core.quantize import token_mask
+
+    mask = valid[None] if cfg.rns is not None else None
+    with token_mask(mask, per_token=True):
+        h = _embed_tokens(params, cfg, tokens[None])
+        if cfg.pos_emb == "sinusoidal":
+            table = sinusoidal_positions(_cache_smax(cfg, cache), cfg.d_model,
+                                         h.dtype)
+            h = h + table[pos][None]
+        h, ys, _ = tf.apply_blocks(params["blocks"], h, cfg, mode="decode",
+                                   cache=cache, packed=(seg, pos, dec))
+        logits = _logits(params, cfg, h)[0]
     return logits, ys
 
 

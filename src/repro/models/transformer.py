@@ -115,8 +115,14 @@ def init_blocks(key, cfg, *, enc: bool = False):
 
 # ---------------------------------------------------------- layer apply ----
 def _apply_layer(lp, h, cfg, layer_type, mlp_type, *, mode, positions,
-                 kv_mask, enc_out, cache, chunk=1024):
-    """Returns (h, new_cache_entry, prefill_kv, aux)."""
+                 kv_mask, enc_out, cache, chunk=1024, packed=None):
+    """Returns (h, new_cache_entry, prefill_kv, aux).
+
+    ``packed`` (decode mode, paged caches only): a ``(seg, pos, dec)``
+    triple of [N] arrays giving every token of the [1, N, d] stream its
+    own row, absolute position, and phase (decode vs prefill chunk) —
+    the mixed chunked-prefill/decode step's layout.
+    """
     rns_a = _rns_for(cfg, "attn")
     rns_m = _rns_for(cfg, "mlp")
     aux = jnp.zeros((), jnp.float32)
@@ -131,11 +137,25 @@ def _apply_layer(lp, h, cfg, layer_type, mlp_type, *, mode, positions,
             # multi-token query ([R, W] speculative-verify window) only
             # exists on the paged path.
             window = hn.shape[1] > 1
-            if window and "k_pages" not in cache and "ckv_pages" not in cache:
+            if packed is not None:
+                if "k_pages" not in cache and "ckv_pages" not in cache:
+                    raise NotImplementedError(
+                        "packed mixed steps need the paged cache layout")
+                seg, pos, dec = packed
+                if layer_type == "attn":
+                    y, kp, vp = attn.gqa_decode_packed(
+                        lp["attn"], hn, cfg, cache, seg, pos, rns=rns_a,
+                        use_rope=use_rope)
+                    new_cache = dict(cache, k_pages=kp, v_pages=vp)
+                else:
+                    y, cp, kp = attn.mla_decode_packed(
+                        lp["attn"], hn, cfg, cache, seg, pos, dec, rns=rns_a)
+                    new_cache = dict(cache, ckv_pages=cp, krope_pages=kp)
+            elif window and "k_pages" not in cache and "ckv_pages" not in cache:
                 raise NotImplementedError(
                     "multi-token decode windows (speculative verify) need "
                     "the paged cache layout")
-            if layer_type == "attn":
+            elif layer_type == "attn":
                 if "k_pages" in cache:
                     fn = (attn.gqa_decode_paged_window if window
                           else attn.gqa_decode_paged)
@@ -228,8 +248,13 @@ def _apply_layer(lp, h, cfg, layer_type, mlp_type, *, mode, positions,
 
 # ------------------------------------------------------------- the stack ---
 def apply_blocks(blocks, h, cfg, *, mode, positions=None, kv_mask=None,
-                 enc_out=None, cache=None, enc: bool = False, chunk=1024):
-    """Scan the stacked periods.  Returns (h, new_cache_or_prefill, aux)."""
+                 enc_out=None, cache=None, enc: bool = False, chunk=1024,
+                 packed=None):
+    """Scan the stacked periods.  Returns (h, new_cache_or_prefill, aux).
+
+    ``packed``: optional ``(seg, pos, dec)`` per-token coordinates for
+    the mixed chunked-prefill/decode step (decode mode, paged caches).
+    """
     L = cfg.n_enc_layers if enc else cfg.n_layers
     ltypes = ("attn",) * L if enc else cfg.layer_types
     mtypes = ("__enc__",) * L if enc else cfg.mlp_types
@@ -249,7 +274,8 @@ def apply_blocks(blocks, h, cfg, *, mode, positions=None, kv_mask=None,
             c_j = cslice[f"l{j}"] if cslice is not None else None
             h, nc, pkv, a = _apply_layer(
                 bp[f"l{j}"], h, cfg, lt, mt, mode=mode, positions=positions,
-                kv_mask=kv_mask, enc_out=enc_out, cache=c_j, chunk=chunk)
+                kv_mask=kv_mask, enc_out=enc_out, cache=c_j, chunk=chunk,
+                packed=packed)
             aux = aux + a
             if nc is not None:
                 new_cs[f"l{j}"] = nc

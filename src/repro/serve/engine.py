@@ -103,6 +103,17 @@ class ServeConfig:
     spec_decode: bool = False
     spec_k: int = 3                  # draft tokens per step (window = k+1)
     spec_ngram: int = 3              # max n-gram length for prompt lookup
+    # chunked prefill + packed mixed-phase batching (ContinuousEngine):
+    # ONE jitted step consumes up to ``token_budget`` packed lanes per
+    # iteration — decode rows (spec_k+1 lanes each when spec_decode is
+    # on) and prefill chunks of at most ``chunk_size`` tokens (None: no
+    # per-row cap beyond the budget).  While any row is prefilling,
+    # ``prefill_reserve`` lanes are reserved for chunks (None: half the
+    # budget), bounding time-to-first-token under decode load.
+    chunked_prefill: bool = False
+    token_budget: int = 64           # packed lanes per mixed step
+    chunk_size: int | None = None    # max prefill tokens per row per step
+    prefill_reserve: int | None = None   # lanes reserved for chunks
 
     def __post_init__(self):
         if self.eos_id < -1:
@@ -120,6 +131,53 @@ class ServeConfig:
             raise ValueError(
                 "per_layer_profiles selects moduli at weight-encode time; "
                 "it requires resident_weights=True")
+        # cross-feature coherence for the chunked mixed step: every
+        # incoherent combination is named by the fields that conflict.
+        if self.chunked_prefill:
+            if self.token_budget < 1:
+                raise ValueError(
+                    f"token_budget={self.token_budget}: chunked_prefill "
+                    "needs at least one packed lane per step")
+            if self.spec_decode and self.token_budget < self.spec_k + 1:
+                raise ValueError(
+                    f"token_budget={self.token_budget} < spec_k+1="
+                    f"{self.spec_k + 1}: a speculative decode row needs "
+                    "spec_k+1 lanes in one mixed step; raise token_budget "
+                    "or lower spec_k")
+            if self.cache_dtype != "float32":
+                raise ValueError(
+                    f"cache_dtype={self.cache_dtype!r}: chunked prefill "
+                    "re-reads earlier chunks' KV from the page pool, so "
+                    "the cache must be lossless (float32) to stay "
+                    "token-identical to whole-prompt prefill")
+        if self.chunk_size is not None:
+            if not self.chunked_prefill:
+                raise ValueError(
+                    "chunk_size is only meaningful with "
+                    "chunked_prefill=True")
+            if self.chunk_size < 1:
+                raise ValueError(f"chunk_size={self.chunk_size}: need >= 1")
+            if self.chunk_size % self.page_size:
+                raise ValueError(
+                    f"chunk_size={self.chunk_size} is not a multiple of "
+                    f"page_size={self.page_size}: chunk boundaries must "
+                    "align with KV pages so completed blocks register "
+                    "with the prefix cache as chunks land")
+            if self.chunk_size > self.token_budget:
+                raise ValueError(
+                    f"chunk_size={self.chunk_size} > token_budget="
+                    f"{self.token_budget}: a chunk can never exceed the "
+                    "packed lanes available in one step")
+        if self.prefill_reserve is not None:
+            if not self.chunked_prefill:
+                raise ValueError(
+                    "prefill_reserve is only meaningful with "
+                    "chunked_prefill=True")
+            if not 0 <= self.prefill_reserve < self.token_budget:
+                raise ValueError(
+                    f"prefill_reserve={self.prefill_reserve}: must be in "
+                    f"[0, token_budget={self.token_budget}) so decode "
+                    "rows keep making progress")
 
 
 def _with_digit_ctx(fn, scfg: ServeConfig):
@@ -251,8 +309,23 @@ class ContinuousEngine:
                 f"prompt_pad {self.prompt_pad} exceeds per-seq cache "
                 f"capacity {self.pcfg.tokens_per_seq}")
         self.spec_window = scfg.spec_k + 1 if scfg.spec_decode else 1
+        self.chunked = scfg.chunked_prefill
+        if self.chunked and cfg.rns is not None and cfg.rns_targets == "all" \
+                and "mla" in cfg.layer_types:
+            raise NotImplementedError(
+                "chunked_prefill with rns_targets='all' on an MLA model: "
+                "packed chunk tokens re-expand gathered latents, and the "
+                "original per-token quantization grids of earlier chunks "
+                "are not recoverable from the cache; use rns_targets='mlp'")
+        reserve = scfg.prefill_reserve
+        if reserve is None:
+            reserve = max(1, scfg.token_budget // 2)
         self.sched = Scheduler(self.pcfg, prefix_cache=scfg.prefix_cache,
-                               lookahead=self.spec_window)
+                               lookahead=self.spec_window,
+                               chunked=self.chunked,
+                               token_budget=scfg.token_budget,
+                               chunk_size=scfg.chunk_size,
+                               prefill_reserve=reserve if self.chunked else 0)
         self.cache = kv.make_paged_cache(
             cfg, self.pcfg, dtype=jnp.dtype(scfg.cache_dtype))
 
@@ -279,6 +352,11 @@ class ContinuousEngine:
             jax.jit(self._verify_fn, donate_argnums=(2,)), scfg)
         self._cow = jax.jit(self._cow_fn, donate_argnums=(0,))
         self._ingest = jax.jit(self._ingest_fn, donate_argnums=(0,))
+        # ONE jitted mixed step: every iteration consumes the same fixed
+        # [token_budget] packed lanes regardless of how many chunks vs
+        # decode rows fill them, so the phase mix never recompiles
+        self._mixed = _with_digit_ctx(
+            jax.jit(self._mixed_fn, donate_argnums=(6,)), scfg)
         self._tables_dirty = True
         self._active = np.zeros((self.pcfg.max_seqs,), bool)
 
@@ -286,6 +364,7 @@ class ContinuousEngine:
         self._step_idx = 0
         self.results: dict[int, np.ndarray] = {}
         self.latencies: dict[int, float] = {}    # submit -> finish, seconds
+        self.ttfts: dict[int, float] = {}        # submit -> first token
         self._op_cache: dict[str, dispatch.OpCounts] = {}
 
     # ----------------------------------------------------------- ingest ---
@@ -332,6 +411,19 @@ class ContinuousEngine:
         step = jnp.where(active, a + 1, 0)
         new_cache = M.set_cache_lengths(ys, M._cache_lengths(ys) + step)
         return g, a, new_cache
+
+    def _mixed_fn(self, params, tokens, seg, pos, dec, valid, cache):
+        """One packed mixed-phase step over [token_budget] lanes.
+
+        Each lane is (token, owning slot, absolute position, is-decode,
+        is-valid); prefill chunks and decode/spec windows share the one
+        program.  Returns per-lane greedy argmaxes — the host walks the
+        segment map to turn them into first tokens (chunk tails) or
+        accept decisions (spec windows).
+        """
+        logits, cache = M.mixed_step(params, self.cfg, tokens, seg, pos,
+                                     dec, valid, cache)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
 
     def _cow_fn(self, cache, src, dst):
         """Copy-on-write page duplication across every layer's pool."""
@@ -398,10 +490,10 @@ class ContinuousEngine:
         """Queue one request; returns its request id."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         max_new = max_new or self.scfg.max_new_tokens
-        if len(prompt) > self.prompt_pad:
+        if not self.chunked and len(prompt) > self.prompt_pad:
             raise ValueError(
                 f"prompt length {len(prompt)} > prompt_pad {self.prompt_pad}; "
-                "raise ServeConfig.prompt_pad (chunked prefill is future work)")
+                "raise ServeConfig.prompt_pad or turn on chunked_prefill")
         rid = self._next_rid
         self._next_rid += 1
         self.sched.submit(Request(rid=rid, tokens=prompt, max_new=max_new,
@@ -424,6 +516,9 @@ class ContinuousEngine:
         self.sched.register_prefix(seq)
         seq.emitted = [tok0]
         seq.last_token = tok0
+        ttft = time.perf_counter() - seq.req.submit_time
+        self.ttfts[seq.rid] = ttft
+        self._step_ttfts.append(ttft)
         # length stays at T: the decode step writes tok0's KV at position T
 
     def _finish(self, seq):
@@ -436,6 +531,19 @@ class ContinuousEngine:
         """Structural convert/matmul/normalize counts for this step."""
         if self.cfg.rns is None:
             return dispatch.OpCounts()
+        if self.chunked:
+            # the mixed step's structure is phase-mix invariant: fixed
+            # [token_budget] lanes, one trace serves every step
+            if "mixed" not in self._op_cache:
+                bt, lengths, active, last = self.sched.tables()
+                cache = kv.set_tables(self.cache, bt, lengths)
+                zi = jnp.zeros((self.scfg.token_budget,), jnp.int32)
+                zb = jnp.zeros((self.scfg.token_budget,), bool)
+                self._op_cache["mixed"] = dispatch.trace_op_counts(
+                    lambda p, t: M.mixed_step(p, self.cfg, t, zi, zi, zb,
+                                              zb, cache),
+                    self.params, zi)
+            return self._op_cache["mixed"]
         if "decode" not in self._op_cache:
             bt, lengths, active, last = self.sched.tables()
             cache = kv.set_tables(self.cache, bt, lengths)
@@ -528,6 +636,143 @@ class ContinuousEngine:
                 self._finish(seq)
         return n_tokens
 
+    def _step_mixed(self) -> dict:
+        """One packed mixed-phase step: admit, COW-split, then ONE jitted
+        call over [token_budget] lanes carrying prefill chunks and
+        decode/spec windows together.
+
+        The host packs segments (decode rows first — round-robin, with
+        ``prefill_reserve`` lanes held back for chunks — then FCFS prefill
+        chunks), runs ``self._mixed`` once, and walks the segment map:
+        the tail lane of a prompt's last chunk yields its first token
+        (TTFT), decode windows go through the same greedy accept rule as
+        the batched verify step.
+        """
+        t0 = time.perf_counter()
+        self._step_finished: list[int] = []
+        self._step_ttfts: list[float] = []
+        self._spec_accepted = self._spec_proposed = 0
+        plan = self.sched.schedule()
+        if plan.cow:
+            # duplicate shared pages BEFORE any packed write lands on them
+            self._apply_cow(plan.cow)
+        segs = self.sched.plan_mixed(self.spec_window)
+        N, W, bs = self.scfg.token_budget, self.spec_window, self.pcfg.page_size
+        tok = np.zeros((N,), np.int32)
+        sg = np.full((N,), -1, np.int32)
+        ps = np.zeros((N,), np.int32)
+        dc = np.zeros((N,), bool)
+        vd = np.zeros((N,), bool)
+        caps: dict[int, int] = {}
+        off = 0
+        prefill_tokens = decode_lanes = 0
+        for s in segs:
+            s.offset, n = off, s.n
+            sg[off:off + n] = s.seq.slot
+            ps[off:off + n] = s.positions
+            vd[off:off + n] = True
+            if s.kind == "decode":
+                dc[off:off + n] = True
+                tok[off] = s.seq.last_token
+                if W > 1:
+                    tok[off + 1:off + W] = self._propose(s.seq)
+                remaining = s.seq.req.max_new - len(s.seq.emitted)
+                caps[s.seq.slot] = max(0, min(
+                    W - 1,
+                    remaining - 1,
+                    len(s.seq.pages) * bs - s.seq.length - 1))
+                decode_lanes += n
+            else:
+                tok[off:off + n] = s.tokens
+                prefill_tokens += n
+            off += n
+        n_tokens = 0
+        if segs:
+            # tables go up every step: block tables shift under admission
+            # / growth / COW, and the packed step reads positions directly
+            # (cache lengths are advanced host-side only)
+            bt, lengths, active, last = self.sched.tables()
+            self.cache = kv.set_tables(self.cache, bt, lengths)
+            self._active = active
+            self._tables_dirty = False
+            g, self.cache = self._mixed(
+                self.params, jnp.asarray(tok), jnp.asarray(sg),
+                jnp.asarray(ps), jnp.asarray(dc), jnp.asarray(vd),
+                self.cache)
+            g = np.asarray(g, np.int32)
+            now = time.perf_counter()
+            for s in segs:
+                seq = s.seq
+                if s.kind == "chunk":
+                    if s.last:
+                        tok0 = int(g[s.offset + s.n - 1])
+                        seq.emitted = [tok0]
+                        seq.last_token = tok0
+                        ttft = now - seq.req.submit_time
+                        self.ttfts[seq.rid] = ttft
+                        self._step_ttfts.append(ttft)
+                        n_tokens += 1
+                    # full blocks become prefix-cache hits as they land,
+                    # not only once the whole prompt is in
+                    self.sched.register_chunks(seq)
+                    if seq.emitted and (
+                            len(seq.emitted) >= seq.req.max_new
+                            or seq.emitted[-1] == self.scfg.eos_id):
+                        self._step_finished.append(seq.rid)
+                        self._finish(seq)
+                else:
+                    w = tok[s.offset:s.offset + s.n]
+                    gr = g[s.offset:s.offset + s.n]
+                    cap = caps[seq.slot]
+                    ar = 0
+                    while ar < cap and w[ar + 1] == gr[ar]:
+                        ar += 1
+                    toks = [int(t) for t in w[1:ar + 1]] + [int(gr[ar])]
+                    if self.scfg.eos_id >= 0 and self.scfg.eos_id in toks:
+                        toks = toks[: toks.index(self.scfg.eos_id) + 1]
+                    seq.emitted.extend(toks)
+                    seq.last_token = seq.emitted[-1]
+                    seq.length += ar + 1
+                    n_tokens += len(toks)
+                    if W > 1:
+                        self._spec_accepted += ar
+                        self._spec_proposed += cap
+                    if (len(seq.emitted) >= seq.req.max_new
+                            or seq.emitted[-1] == self.scfg.eos_id
+                            or seq.length + 1 > self.pcfg.tokens_per_seq):
+                        self._step_finished.append(seq.rid)
+                        self._finish(seq)
+        elif self.sched.running:
+            raise RuntimeError("mixed step planned no segments while rows "
+                               "are running — scheduler liveness bug")
+        self._step_idx += 1
+        alloc = self.sched.alloc
+        return {
+            "step": self._step_idx,
+            "admitted": [s.rid for s in plan.admitted],
+            "preempted": plan.preempted,
+            "finished": self._step_finished,
+            "active": len(self.sched.running),
+            "waiting": len(self.sched.waiting),
+            "new_tokens": n_tokens,
+            "decoded": decode_lanes > 0,
+            "decode_rows": decode_lanes // W,
+            "page_utilization": alloc.utilization,
+            "cow_splits": len(plan.cow),
+            "cache_hit_tokens": sum(s.cached_tokens for s in plan.admitted),
+            "pages_allocated_total": alloc.pages_allocated,
+            "pages_shared_total": alloc.pages_shared,
+            "spec_proposed": self._spec_proposed,
+            "spec_accepted": self._spec_accepted,
+            "rns_ops": self._rns_ops(0),
+            # phase mix of this packed step + first-token latency
+            "prefill_tokens": prefill_tokens,
+            "decode_tokens": n_tokens,
+            "ttft_ms": (1e3 * float(np.mean(self._step_ttfts))
+                        if self._step_ttfts else 0.0),
+            "step_time_s": time.perf_counter() - t0,
+        }
+
     def step(self) -> dict:
         """One scheduler step: admit/evict, prefill admits, COW-split
         shared pages, then decode (or draft+verify) every running row.
@@ -535,9 +780,16 @@ class ContinuousEngine:
         Returns a stats dict: admitted/preempted/finished rids, tokens
         generated, page utilization, prefix-cache and speculative
         counters, and the structural ``rns_ops``.
+
+        With ``chunked_prefill`` on, this dispatches to the packed
+        mixed-phase step instead (same stats contract, plus chunked
+        admission semantics).
         """
+        if self.chunked:
+            return self._step_mixed()
         t0 = time.perf_counter()
         self._step_finished: list[int] = []
+        self._step_ttfts: list[float] = []
         self._spec_accepted = self._spec_proposed = 0
         plan = self.sched.schedule()
         if plan.admitted or plan.preempted or plan.grew or plan.cow:
@@ -594,6 +846,12 @@ class ContinuousEngine:
             "spec_proposed": self._spec_proposed,
             "spec_accepted": self._spec_accepted,
             "rns_ops": self._rns_ops(len(plan.admitted)),
+            # phase accounting (whole-prompt prefill counts padded work
+            # at admission; decode tokens are this step's emissions)
+            "prefill_tokens": sum(len(s.req.tokens) for s in plan.admitted),
+            "decode_tokens": n_tokens,
+            "ttft_ms": (1e3 * float(np.mean(self._step_ttfts))
+                        if self._step_ttfts else 0.0),
             "step_time_s": time.perf_counter() - t0,
         }
 
@@ -616,6 +874,7 @@ class ContinuousEngine:
         done = rids if rids else list(self.results)
         out = {r: self.results.pop(r) for r in done if r in self.results}
         lat = [self.latencies.pop(r) for r in done if r in self.latencies]
+        ttft = [self.ttfts.pop(r) for r in done if r in self.ttfts]
         total = sum(len(v) for v in out.values())
         decode_rows = sum(s["decode_rows"] for s in steps)
         new_in_decode = sum(s["new_tokens"] for s in steps)
@@ -629,6 +888,8 @@ class ContinuousEngine:
             "tokens_per_s": total / dt if dt > 0 else 0.0,
             "latency_p50_s": float(np.percentile(lat, 50)) if lat else 0.0,
             "latency_p99_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft else 0.0,
+            "ttft_p95_s": float(np.percentile(ttft, 95)) if ttft else 0.0,
             "mean_page_utilization": float(
                 np.mean([s["page_utilization"] for s in steps])) if steps
             else 0.0,

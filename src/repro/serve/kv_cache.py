@@ -49,6 +49,7 @@ __all__ = [
     "gather_pages",
     "write_token",
     "write_token_window",
+    "write_packed_tokens",
     "write_prompt_pages",
     "copy_pages",
 ]
@@ -413,6 +414,28 @@ def write_token_window(pages, block_table, lengths, vals):
     pos = lengths[:, None] + jnp.arange(W)[None]            # [R, W]
     page = jnp.take_along_axis(block_table, pos // bs, axis=1,
                                mode="fill", fill_value=TRASH_PAGE)
+    return pages.at[page, pos % bs].set(vals.astype(pages.dtype))
+
+
+def write_packed_tokens(pages, block_table, seg, pos, vals):
+    """Scatter N packed tokens at explicit (segment, position) coords.
+
+    ``vals`` [N, ...] (a mixed chunked-prefill/decode step): token i goes
+    to logical position ``pos[i]`` of row ``seg[i]`` — physical page
+    ``block_table[seg[i], pos[i] // bs]`` offset ``pos[i] % bs``.  Unlike
+    :func:`write_token`/:func:`write_token_window`, each token carries
+    its own segment and position, so one scatter serves any mix of
+    prefill chunks and decode rows.  Pad lanes carry ``seg = -1`` and
+    are redirected to the trash page, as are positions past a row's
+    table (block index >= nb) — invalid lanes lose their KV harmlessly.
+    """
+    bs = pages.shape[1]
+    R = block_table.shape[0]
+    segc = jnp.clip(seg, 0, R - 1)
+    page = jnp.take_along_axis(block_table[segc], (pos // bs)[:, None],
+                               axis=1, mode="fill",
+                               fill_value=TRASH_PAGE)[:, 0]
+    page = jnp.where(seg >= 0, page, TRASH_PAGE)
     return pages.at[page, pos % bs].set(vals.astype(pages.dtype))
 
 

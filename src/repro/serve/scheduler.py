@@ -59,7 +59,7 @@ from repro.serve.kv_cache import (
     PrefixCache,
 )
 
-__all__ = ["Request", "SeqState", "StepPlan", "Scheduler"]
+__all__ = ["Request", "SeqState", "StepPlan", "PackedSegment", "Scheduler"]
 
 
 @dataclasses.dataclass
@@ -85,10 +85,30 @@ class SeqState:
     admit_seq: int = -1         # admission order (LIFO preemption key)
     cached_tokens: int = 0      # prompt tokens served by the prefix cache
     shared_blocks: set[int] = dataclasses.field(default_factory=set)
+    # chunked prefill: prompt positions still to run through the mixed
+    # step, ascending (None = non-chunked or prefill complete).  Adopted
+    # shared blocks' positions are excluded — their KV is resident — but
+    # the last prompt position always stays in (its logits are the first
+    # generated token; rewriting its KV is a bitwise-identical no-op).
+    todo: collections.deque[int] | None = None
+    admit_step: int = -1        # engine step of admission (TTFT accounting)
 
     @property
     def rid(self) -> int:
         return self.req.rid
+
+    @property
+    def prefilling(self) -> bool:
+        return bool(self.todo)
+
+    @property
+    def resident(self) -> int:
+        """Prompt tokens whose KV is resident (a contiguous prefix:
+        ``todo`` is consumed in order and earlier positions are either
+        consumed or adopted from the prefix cache)."""
+        if self.todo:
+            return self.todo[0]
+        return len(self.req.tokens)
 
 
 @dataclasses.dataclass
@@ -104,10 +124,37 @@ class StepPlan:
         default_factory=list)           # (slot, block, src, dst)
 
 
+@dataclasses.dataclass
+class PackedSegment:
+    """One contiguous run of lanes in a packed mixed step.
+
+    ``kind`` is ``"chunk"`` (prefill-chunk tokens; ``tokens`` filled
+    from the prompt) or ``"decode"`` (a decode row's next-token lane
+    plus ``n - 1`` speculative-draft lanes; the engine fills ``tokens``
+    with last_token + drafts).  ``offset`` is the segment's first lane
+    in the step's fixed [token_budget] arrays, set by the engine when it
+    packs.  ``last`` marks a chunk that completes its prompt — the
+    final lane's logits are the row's first generated token (TTFT).
+    """
+
+    seq: SeqState
+    kind: str
+    positions: np.ndarray       # [n] absolute positions, ascending
+    tokens: np.ndarray | None   # [n] token ids (None for decode segs)
+    last: bool = False
+    offset: int = 0
+
+    @property
+    def n(self) -> int:
+        return len(self.positions)
+
+
 class Scheduler:
     def __init__(self, pcfg: PagedCacheConfig, *, prefix_cache: bool = False,
                  lookahead: int = 1, starvation_limit: int = 8,
-                 preempt_shield: int = 2):
+                 preempt_shield: int = 2, chunked: bool = False,
+                 token_budget: int = 0, chunk_size: int | None = None,
+                 prefill_reserve: int = 0):
         self.pcfg = pcfg
         self.alloc = PageAllocator(pcfg.n_pages)
         self.prefix = (PrefixCache(self.alloc, pcfg.page_size)
@@ -115,6 +162,11 @@ class Scheduler:
         self.lookahead = max(1, lookahead)
         self.starvation_limit = starvation_limit
         self.preempt_shield = preempt_shield
+        self.chunked = chunked
+        self.token_budget = token_budget
+        self.chunk_size = chunk_size
+        self.prefill_reserve = prefill_reserve
+        self._rr = 0                    # decode round-robin rotation
         self.waiting: collections.deque[Request] = collections.deque()
         self.running: dict[int, SeqState] = {}          # slot -> seq
         self._free_slots = list(range(pcfg.max_seqs - 1, -1, -1))
@@ -342,6 +394,13 @@ class Scheduler:
                            admit_seq=self._admit_clock,
                            cached_tokens=n_cached,
                            shared_blocks=set(share_map))
+            if self.chunked:
+                T = len(req.tokens)
+                todo = [p for p in range(T)
+                        if p // bs not in seq.shared_blocks]
+                if not todo or todo[-1] != T - 1:
+                    todo.append(T - 1)      # TTFT logits; identical rewrite
+                seq.todo = collections.deque(todo)
             self._admit_clock += 1
             self.running[slot] = seq
             admitted.append(seq)
@@ -362,6 +421,79 @@ class Scheduler:
                     if self.running.get(s.slot) is s]   # COW may evict
         return StepPlan(admitted=admitted, preempted=preempted, grew=grew,
                         cow=cow)
+
+    def plan_mixed(self, window: int = 1) -> list[PackedSegment]:
+        """Fill one mixed step's token budget: decode rows, then chunks.
+
+        Called after :meth:`schedule` (admission/growth/COW done).  Lane
+        accounting, enforced by construction (hypothesis-tested in
+        tests/test_mixed_sched_props.py):
+
+          * total lanes never exceed ``token_budget``;
+          * every decode-phase row gets ``window`` lanes (its next token
+            plus ``window - 1`` speculative drafts), round-robin across
+            steps when rows outnumber ``token_budget // window`` so no
+            row idles forever;
+          * while any row is prefilling, decode rows are capped so at
+            least ``prefill_reserve`` lanes go to chunks — the bounded-
+            TTFT guarantee: a prompt of T tokens is fully prefilled
+            within ``ceil(T / prefill_reserve)`` steps of admission — but
+            at least one decode row always advances (liveness);
+          * chunks drain FCFS by admission order, each row consuming at
+            most ``chunk_size`` positions per step, ``todo`` front-first
+            (in order — a chunk token's receptive field is always
+            resident before it runs).
+        """
+        budget = self.token_budget
+        W = max(1, window)
+        segs: list[PackedSegment] = []
+        decode_rows = sorted((s for s in self.running.values()
+                              if not s.prefilling and s.emitted),
+                             key=lambda s: s.slot)
+        prefill_rows = sorted((s for s in self.running.values()
+                               if s.prefilling), key=lambda s: s.admit_seq)
+        max_decode = budget // W
+        if prefill_rows:
+            max_decode = min(max_decode,
+                             max(1, (budget - self.prefill_reserve) // W))
+        remaining = budget
+        if decode_rows:
+            rot = self._rr % len(decode_rows)
+            take = (decode_rows[rot:] + decode_rows[:rot])[:max_decode]
+            self._rr = (rot + len(take)) % len(decode_rows)
+            for seq in take:
+                segs.append(PackedSegment(
+                    seq=seq, kind="decode",
+                    positions=seq.length + np.arange(W, dtype=np.int32),
+                    tokens=None))
+                remaining -= W
+        for seq in prefill_rows:
+            if remaining <= 0:
+                break
+            n = min(len(seq.todo), remaining)
+            if self.chunk_size:
+                n = min(n, self.chunk_size)
+            positions = np.array([seq.todo.popleft() for _ in range(n)],
+                                 np.int32)
+            segs.append(PackedSegment(
+                seq=seq, kind="chunk", positions=positions,
+                tokens=np.asarray(seq.req.tokens, np.int32)[positions],
+                last=not seq.todo))
+            remaining -= n
+        return segs
+
+    def register_chunks(self, seq: SeqState) -> None:
+        """Register a chunked row's now-fully-resident full prompt blocks
+        (the incremental analogue of :meth:`register_prefix`: a block
+        becomes discoverable as soon as its last chunk lands; the partial
+        tail still waits for :meth:`_stash_prefix`)."""
+        if self.prefix is None:
+            return
+        bs = self.pcfg.page_size
+        n_full = min(seq.resident, len(seq.req.tokens)) // bs
+        if n_full:
+            self.prefix.insert(seq.req.tokens[: n_full * bs],
+                               seq.pages[:n_full])
 
     def register_prefix(self, seq: SeqState) -> None:
         """Called by the engine right after a prefill blit: the prompt's

@@ -10,7 +10,10 @@ op-count triple, scenario by scenario:
   * ragged prefill + mixed-length batched decode,
   * recompute preemption + readmission under a tiny pool,
   * copy-on-write prefix sharing,
-  * speculative (n-gram) draft + verify windows.
+  * speculative (n-gram) draft + verify windows,
+  * packed mixed-phase steps (chunked prefill interleaved with decode,
+    budget-truncated chunk boundaries splitting a KV page, prefix-cache
+    hits landing mid-prompt, spec windows sharing the packed budget).
 
 ``fused``/``fallbacks`` tallies legitimately differ per backend (they
 count composite launches and visible downgrades); the structural triple
@@ -49,6 +52,34 @@ SCENARIOS = {
     "resident_per_layer": dict(
         lens=(5, 12), kw=dict(max_seqs=2, resident_weights=True,
                               per_layer_profiles=True)),
+    # packed mixed-phase steps: a short prompt finishes its single chunk
+    # and decodes while the long prompt is still streaming chunks in —
+    # both phases share one packed step (asserted via the mixed flag)
+    "chunked_interleave": dict(
+        lens=(5, 18), mixed=True,
+        kw=dict(max_seqs=2, chunked_prefill=True, token_budget=16,
+                chunk_size=8)),
+    # two rows chunk concurrently under a budget that is NOT a multiple
+    # of the chunk size: the second row's chunk is truncated to 4 tokens,
+    # so its chunk boundary lands mid-page (the page's low half is
+    # written one step before its high half)
+    "chunked_page_split": dict(
+        lens=(17, 18), mixed=True,
+        kw=dict(max_seqs=2, chunked_prefill=True, token_budget=12,
+                chunk_size=8)),
+    # prefix-cache adoption under chunking: later rows adopt the shared
+    # leading blocks and their first chunk starts mid-prompt (max_seqs=1
+    # serializes rows so earlier prompts are stashed before later ones
+    # admit — no mixed step here, the point is the mid-prompt hit)
+    "chunked_prefix_hit": dict(
+        lens=(10, 10, 13), same_prefix=True,
+        kw=dict(max_seqs=1, prefix_cache=True, chunked_prefill=True,
+                token_budget=16, chunk_size=8)),
+    # speculative windows and prefill chunks sharing the packed budget
+    "chunked_spec_mix": dict(
+        lens=(5, 18), mixed=True,
+        kw=dict(max_seqs=2, chunked_prefill=True, token_budget=16,
+                chunk_size=8, spec_decode=True, spec_k=3)),
 }
 
 
@@ -96,6 +127,12 @@ def test_backend_matrix_token_identical(rns_model, scenario):
         assert ref_stats["cow_splits"] > 0
     if "spec_decode" in spec["kw"]:
         assert ref_stats["tokens_per_step"] >= 1.0
+    if spec.get("mixed"):
+        # at least one packed step really carried both phases at once
+        assert any(s["prefill_tokens"] > 0 and s["decode_tokens"] > 0
+                   for s in ref_stats["steps"]), "no mixed-phase step fired"
+    if spec["kw"].get("chunked_prefill"):
+        assert ref_stats["ttft_p95_s"] > 0.0
     for backend in BACKENDS[1:]:
         res, ops, _ = _run(cfg, params, spec, backend)
         assert res == ref_res, (scenario, backend)

@@ -1,0 +1,183 @@
+"""Hypothesis properties for the packed mixed-phase scheduler.
+
+The chunked scheduler (``Scheduler(chunked=True)`` + ``plan_mixed``) is
+pure host-side policy, so its invariants are checked here with no jax at
+all — a fake greedy "model" advances sequence state exactly the way the
+engine would:
+
+  * the packed token budget is never exceeded, step by step;
+  * while any row is prefilling, decode rows are capped so chunks get
+    their reserved lanes (bounded TTFT) yet at least one decode row
+    always advances (liveness);
+  * each row's chunk positions stream out strictly in order, front-
+    first, and every admission episode is a prefix of the full
+    position list — so a mid-chunk preemption readmits into a clean
+    restart (the recompute that makes regenerated tokens identical);
+  * the prefix-preference admission never starves the queue head past
+    ``starvation_limit`` waiting steps;
+  * every submitted request finishes (termination under preemption).
+
+Property tests skip cleanly when hypothesis is absent (CI installs it;
+see _hypothesis_stub).
+"""
+
+import numpy as np
+from _hypothesis_stub import given, st
+
+from repro.serve.kv_cache import PagedCacheConfig, PrefixCache  # noqa: F401
+from repro.serve.scheduler import Request, Scheduler
+
+BS = 4            # page size for every property run
+MAX_BLOCKS = 4    # 16 tokens per sequence
+MAX_NEW = 2
+
+
+def _sched(*, max_seqs, n_pages, budget, chunk_size, reserve, window,
+           prefix=False, starvation_limit=8):
+    pcfg = PagedCacheConfig(page_size=BS, n_pages=n_pages,
+                            max_seqs=max_seqs, max_blocks=MAX_BLOCKS)
+    return Scheduler(pcfg, prefix_cache=prefix, lookahead=window,
+                     starvation_limit=starvation_limit, chunked=True,
+                     token_budget=budget, chunk_size=chunk_size,
+                     prefill_reserve=reserve)
+
+
+def _drive(sched, reqs, window=1, max_steps=400):
+    """Run the scheduler loop with a fake greedy model.
+
+    Chunks consume ``todo`` via plan_mixed; a ``last`` chunk emits the
+    first token; decode segments emit one token and advance length (the
+    scheduler only sees counters, never logits).  Returns per-rid lists
+    of admission episodes (each a list of chunk positions, in emission
+    order) and the set of finished rids.
+    """
+    for r in reqs:
+        sched.submit(r)
+    episodes: dict[int, list[list[int]]] = {r.rid: [] for r in reqs}
+    finished: set[int] = set()
+    steps = 0
+    while sched.has_work:
+        steps += 1
+        assert steps <= max_steps, "scheduler loop did not terminate"
+        plan = sched.schedule()
+        for s in plan.admitted:
+            episodes[s.rid].append([])
+        prefilling = any(s.prefilling for s in sched.running.values())
+        segs = sched.plan_mixed(window)
+        assert sum(s.n for s in segs) <= sched.token_budget, \
+            "token budget exceeded"
+        decode_lanes = sum(s.n for s in segs if s.kind == "decode")
+        if prefilling:
+            cap = max(1, (sched.token_budget - sched.prefill_reserve)
+                      // window)
+            assert decode_lanes <= cap * window, \
+                "prefill reserve not honoured"
+        for s in segs:
+            seq = s.seq
+            if s.kind == "chunk":
+                episodes[seq.rid][-1].extend(int(p) for p in s.positions)
+                sched.register_chunks(seq)
+                if s.last:
+                    seq.emitted = [1]
+                    seq.last_token = 1
+            else:
+                seq.emitted.append(1)
+                seq.length += 1
+        for seq in list(sched.running.values()):
+            if seq.emitted and len(seq.emitted) >= seq.req.max_new:
+                finished.add(seq.rid)
+                sched.complete(seq)
+    return episodes, finished
+
+
+def _reqs(lens):
+    rng = np.random.default_rng(7)
+    return [Request(rid=i, tokens=rng.integers(1, 99, (t,)).astype(np.int32),
+                    max_new=MAX_NEW) for i, t in enumerate(lens)]
+
+
+@given(st.lists(st.integers(1, 14), min_size=1, max_size=6),
+       st.integers(1, 3),
+       st.integers(1, 12),
+       st.sampled_from([1, 3]),
+       st.integers(0, 11))
+def test_budget_reserve_order_and_termination(lens, max_seqs, budget_raw,
+                                              window, reserve_raw):
+    budget = max(window, budget_raw)          # a decode row must fit
+    reserve = min(reserve_raw, budget - 1)
+    sched = _sched(max_seqs=max_seqs, n_pages=1 + max_seqs * MAX_BLOCKS,
+                   budget=budget, chunk_size=BS, reserve=reserve,
+                   window=window)
+    episodes, finished = _drive(sched, _reqs(lens), window=window)
+    assert finished == set(range(len(lens)))
+    for rid, t in enumerate(lens):
+        eps = episodes[rid]
+        assert eps, "row never admitted"
+        full = list(range(t))                 # no prefix cache: every pos
+        for ep in eps[:-1]:                   # preempted episodes: clean
+            assert ep == full[: len(ep)]      # front-first prefixes
+        assert eps[-1] == full                # final episode completes
+
+
+@given(st.lists(st.integers(1, 14), min_size=2, max_size=5),
+       st.sampled_from([1, 3]))
+def test_preempt_mid_chunk_readmits_cleanly(lens, window):
+    """A pool too small for all rows forces mid-prefill eviction; every
+    readmission must restart its chunk stream from scratch (the todo
+    deque is rebuilt at admission, never resumed from a stale state) —
+    the precondition for recompute token-identity."""
+    sched = _sched(max_seqs=2, n_pages=1 + MAX_BLOCKS + 1, budget=6,
+                   chunk_size=BS, reserve=3, window=window)
+    episodes, finished = _drive(sched, _reqs(lens), window=window)
+    assert finished == set(range(len(lens)))
+    for rid, t in enumerate(lens):
+        full = list(range(t))
+        for ep in episodes[rid][:-1]:
+            assert ep == full[: len(ep)]
+        assert episodes[rid][-1] == full
+
+
+@given(st.integers(2, 5), st.integers(6, 12))
+def test_head_never_starves_past_limit(n_cached, t_head):
+    """Prefix-preference admission vs the FCFS guard: once the queue
+    head has waited ``starvation_limit`` scheduler steps, the next
+    admission must be the head, no matter how long the cached
+    competitors' prefixes are."""
+    limit = 3
+    sched = _sched(max_seqs=1, n_pages=1 + MAX_BLOCKS, budget=6,
+                   chunk_size=BS, reserve=3, window=1, prefix=True,
+                   starvation_limit=limit)
+    rng = np.random.default_rng(3)
+    donor = rng.integers(1, 99, (8,)).astype(np.int32)
+    # a completed donor seeds the prefix index
+    _drive(sched, [Request(rid=100, tokens=donor, max_new=MAX_NEW)])
+    head = Request(rid=0,
+                   tokens=rng.integers(1, 99, (t_head,)).astype(np.int32),
+                   max_new=MAX_NEW)
+    sched.submit(head)
+    for i in range(n_cached):                  # cached competitors behind
+        sched.submit(Request(rid=1 + i, tokens=donor.copy(),
+                             max_new=MAX_NEW))
+    violations = []
+    for _ in range(200):
+        if not sched.has_work:
+            break
+        head_waiting = any(r.rid == 0 for r in sched.waiting)
+        overdue = head_waiting and head.wait_steps >= limit
+        plan = sched.schedule()
+        if overdue and plan.admitted and plan.admitted[0].rid != 0:
+            violations.append(plan.admitted[0].rid)
+        for s in sched.plan_mixed(1):
+            seq = s.seq
+            if s.kind == "chunk":
+                if s.last:
+                    seq.emitted = [1]
+                    seq.last_token = 1
+            else:
+                seq.emitted.append(1)
+                seq.length += 1
+        for seq in list(sched.running.values()):
+            if seq.emitted and len(seq.emitted) >= seq.req.max_new:
+                sched.complete(seq)
+    assert not violations, f"head starved past limit by {violations}"
+    assert 0 in sched.running or not sched.has_work

@@ -1,0 +1,210 @@
+"""Chunked prefill + packed mixed-phase batching, pinned differentially.
+
+The continuous engine's chunked mode replaces the separate [1, Tpad]
+prefill and [R, 1]/[R, W] decode programs with ONE jitted packed step
+over a fixed token budget.  These tests pin the two contracts that make
+that safe:
+
+  * **token identity** — every request's emitted stream equals the solo
+    bucketed run (same params, same prompt, no batching), for float and
+    RNS datapaths (defer on/off), gqa and MLA attention, prefix cache
+    on/off, speculative decoding on/off, across preemption/readmission,
+    and for prompts longer than any whole-prompt prefill could admit;
+  * **one compile** — the mixed step recompiles zero times across phase
+    mixes (``_mixed._cache_size() == 1`` after arbitrarily varied
+    traffic), because its shapes depend only on the token budget and
+    the page geometry.
+
+Plus the ServeConfig cross-feature validation (named-field errors) and
+the per-step TTFT / phase accounting the scheduler's bounded-TTFT
+guarantee is observed through.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import get_config
+from repro.core.rns_matmul import RnsDotConfig
+from repro.models import model as M
+from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
+
+
+@pytest.fixture(scope="module")
+def gqa_model():
+    cfg = get_config("smollm-135m", smoke=True)
+    return cfg, M.init_model(jax.random.PRNGKey(0), cfg)[0]
+
+
+@pytest.fixture(scope="module")
+def mla_model():
+    cfg = dataclasses.replace(get_config("deepseek-v2-236b", smoke=True),
+                              mlp_types=("dense",) * 4, moe=None)
+    return cfg, M.init_model(jax.random.PRNGKey(1), cfg)[0]
+
+
+def _rns(cfg, defer=False):
+    return dataclasses.replace(
+        cfg, rns=RnsDotConfig(profile="rns9", qx=8, qw=8, defer=defer),
+        rns_targets="mlp")
+
+
+def _prompts(vocab, lens=(13, 21, 5, 9), seed=11):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, vocab, (t,)).astype(np.int32) for t in lens]
+
+
+def _solo(params, cfg, prompts, max_new):
+    eng = Engine(params, cfg, ServeConfig(max_cache=64,
+                                          max_new_tokens=max_new))
+    return {i: eng.generate(p[None])[0].tolist()
+            for i, p in enumerate(prompts)}
+
+
+def _chunked(params, cfg, prompts, max_new=6, **kw):
+    base = dict(max_cache=48, max_seqs=4, page_size=8,
+                max_new_tokens=max_new, chunked_prefill=True,
+                token_budget=16, chunk_size=8)
+    base.update(kw)
+    eng = ContinuousEngine(params, cfg, ServeConfig(**base))
+    out, stats = eng.run(prompts)
+    return eng, {r: v.tolist() for r, v in out.items()}, stats
+
+
+# --------------------------------------------------- identity matrix ---
+GQA_CASES = {
+    "float": (False, None, {}),
+    "float_spec_prefix": (False, None, dict(spec_decode=True, spec_k=3,
+                                            prefix_cache=True)),
+    "rns": (True, False, {}),
+    "rns_defer_spec_prefix": (True, True, dict(spec_decode=True, spec_k=2,
+                                               prefix_cache=True)),
+}
+
+
+@pytest.mark.parametrize("case", sorted(GQA_CASES))
+def test_chunked_token_identical_to_solo_gqa(gqa_model, case):
+    cfg, params = gqa_model
+    use_rns, defer, kw = GQA_CASES[case]
+    if use_rns:
+        cfg = _rns(cfg, defer=defer)
+    prompts = _prompts(cfg.vocab)
+    want = _solo(params, cfg, prompts, 6)
+    eng, got, stats = _chunked(params, cfg, prompts, **kw)
+    assert got == want, case
+    assert eng._mixed._cache_size() == 1
+    # at least one packed step really mixed both phases
+    assert any(s["prefill_tokens"] > 0 and s["decode_tokens"] > 0
+               for s in stats["steps"]), case
+
+
+MLA_CASES = {
+    "float": (False, {}),
+    "rns_spec": (True, dict(spec_decode=True, spec_k=2)),
+}
+
+
+@pytest.mark.parametrize("case", sorted(MLA_CASES))
+def test_chunked_token_identical_to_solo_mla(mla_model, case):
+    cfg, params = mla_model
+    use_rns, kw = MLA_CASES[case]
+    if use_rns:
+        cfg = _rns(cfg)
+    prompts = _prompts(cfg.vocab)
+    want = _solo(params, cfg, prompts, 6)
+    eng, got, _ = _chunked(params, cfg, prompts, **kw)
+    assert got == want, case
+    assert eng._mixed._cache_size() == 1
+
+
+def test_chunked_admits_prompts_beyond_prompt_pad(gqa_model):
+    """Whole-prompt prefill rejects prompts longer than prompt_pad;
+    chunked mode streams them in and still matches the solo run."""
+    cfg, params = gqa_model
+    prompts = _prompts(cfg.vocab, lens=(21,))
+    with pytest.raises(ValueError, match="prompt"):
+        ContinuousEngine(params, cfg, ServeConfig(
+            max_cache=48, prompt_pad=8)).submit(prompts[0])
+    want = _solo(params, cfg, prompts, 6)
+    _, got, _ = _chunked(params, cfg, prompts, prompt_pad=8)
+    assert got == want
+
+
+def test_chunked_preempt_readmit_token_identical(gqa_model):
+    """A pool too small for the full load preempts rows mid-stream
+    (possibly mid-prefill); greedy recompute readmission keeps every
+    stream equal to its uninterrupted solo run."""
+    cfg, params = gqa_model
+    prompts = _prompts(cfg.vocab, lens=(10, 9, 6), seed=17)
+    want = _solo(params, cfg, prompts, 6)
+    _, got, stats = _chunked(params, cfg, prompts, max_seqs=3, n_pages=8,
+                             page_size=4, max_cache=24, token_budget=8,
+                             chunk_size=4)
+    assert stats["n_preemptions"] > 0        # the scenario really fired
+    assert got == want
+
+
+def test_one_mixed_compile_across_phase_mixes(gqa_model):
+    """Zero per-mix recompiles: wildly different traffic shapes reuse
+    the one mixed-step executable."""
+    cfg, params = gqa_model
+    eng = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=48, max_seqs=4, page_size=8, max_new_tokens=4,
+        chunked_prefill=True, token_budget=16, chunk_size=8))
+    for lens in ((13, 21, 5, 9), (3,), (17, 2), (8, 8, 8, 8)):
+        eng.run(_prompts(cfg.vocab, lens=lens))
+    assert eng._mixed._cache_size() == 1
+
+
+def test_ttft_and_phase_stats(gqa_model):
+    cfg, params = gqa_model
+    prompts = _prompts(cfg.vocab)
+    _, _, stats = _chunked(params, cfg, prompts)
+    assert 0.0 < stats["ttft_p50_s"] <= stats["ttft_p95_s"]
+    assert stats["ttft_p95_s"] <= stats["latency_p99_s"]
+    for s in stats["steps"]:
+        assert s["prefill_tokens"] + s["decode_tokens"] >= 0
+        assert s["ttft_ms"] >= 0.0
+    # chunked prefill touches each non-shared prompt token exactly once
+    assert (sum(s["prefill_tokens"] for s in stats["steps"])
+            == sum(len(p) for p in prompts))
+    assert (sum(s["decode_tokens"] for s in stats["steps"])
+            == stats["total_new_tokens"])
+
+
+# ------------------------------------------- cross-feature validation ---
+@pytest.mark.parametrize("kw,field", [
+    (dict(chunked_prefill=True, token_budget=0), "token_budget"),
+    (dict(chunked_prefill=True, spec_decode=True, spec_k=8,
+          token_budget=4), "token_budget"),
+    (dict(chunked_prefill=True, cache_dtype="bfloat16"), "cache_dtype"),
+    (dict(chunk_size=8), "chunk_size"),
+    (dict(chunked_prefill=True, chunk_size=0), "chunk_size"),
+    (dict(chunked_prefill=True, chunk_size=12, page_size=8),
+     "chunk_size"),
+    (dict(chunked_prefill=True, chunk_size=32, token_budget=16),
+     "chunk_size"),
+    (dict(prefill_reserve=4), "prefill_reserve"),
+    (dict(chunked_prefill=True, prefill_reserve=16, token_budget=16),
+     "prefill_reserve"),
+])
+def test_serve_config_cross_feature_errors(kw, field):
+    """Incoherent chunked configs fail fast, naming the bad field."""
+    with pytest.raises(ValueError, match=field):
+        ServeConfig(max_cache=48, **kw)
+
+
+def test_chunked_mla_rns_all_rejected(mla_model):
+    """Packed chunk tokens re-expand gathered latents; with
+    rns_targets='all' the original quantization grids are gone, so the
+    combination is refused up front rather than silently drifting."""
+    cfg, params = mla_model
+    cfg = dataclasses.replace(
+        cfg, rns=RnsDotConfig(profile="rns9", qx=8, qw=8),
+        rns_targets="all")
+    with pytest.raises(NotImplementedError, match="rns_targets"):
+        ContinuousEngine(params, cfg, ServeConfig(
+            max_cache=48, chunked_prefill=True, token_budget=16))
