@@ -12,6 +12,11 @@
 # (benchmarks/bench_kernels.py) and writes BENCH_kernels.json — HBM bytes
 # moved and wall-clock, fused vs unfused chain, plus the recompile and
 # autotune smoke rows; ``--skip-kernels`` suppresses it.
+# ``--audit-json PATH`` runs the static exactness auditor
+# (repro.analysis.ledger_audit) over the smoke serve config and writes
+# the full AuditReport as BENCH_audit.json — the proof, headroom tables,
+# and per-site fallback tallies, tracked per commit by the CI
+# static-analysis job.
 from __future__ import annotations
 
 import argparse
@@ -33,6 +38,10 @@ def main() -> None:
     ap.add_argument("--kernels-json", default=None, metavar="PATH",
                     help="run the fused-kernel benchmark, write its rows "
                          "as JSON (e.g. BENCH_kernels.json)")
+    ap.add_argument("--audit-json", default=None, metavar="PATH",
+                    help="run the static exactness audit on the smoke "
+                         "serve config, write the AuditReport "
+                         "(e.g. BENCH_audit.json)")
     ap.add_argument("--skip-core", action="store_true",
                     help="skip the core benches (serve-only run)")
     ap.add_argument("--skip-kernels", action="store_true",
@@ -75,6 +84,30 @@ def main() -> None:
         bench_kernels.run_all(report)
         sink = rows
 
+    audit_report = None
+    if args.audit_json:
+        import dataclasses
+
+        import jax
+
+        from repro.analysis.ledger_audit import audit_serve
+        from repro.configs.base import get_config
+        from repro.core.rns_matmul import RnsDotConfig
+        from repro.models import model as M
+        from repro.serve.engine import ServeConfig
+
+        cfg = dataclasses.replace(
+            get_config("smollm-135m", smoke=True),
+            rns=RnsDotConfig(profile="rns9", qx=8, qw=8), rns_targets="mlp")
+        params = M.init_model(jax.random.PRNGKey(0), cfg)[0]
+        audit_report = audit_serve(params, cfg, ServeConfig(
+            max_cache=24, page_size=8, max_seqs=2))
+        h = audit_report.min_headroom
+        derived = "PROVED" if audit_report.ok else "FAILED"
+        if h is not None:
+            derived += f" min_headroom={h:+.1f}b"
+        report("exactness_audit", 0.0, derived)
+
     # roofline summary from the newest dry-run artifacts
     for tag, d in (("baseline", "artifacts/dryrun"),
                    ("optimized", "artifacts/dryrun_opt")):
@@ -109,6 +142,10 @@ def main() -> None:
         with open(args.kernels_json, "w") as f:
             json.dump(kernel_rows, f, indent=2)
         print(f"wrote {args.kernels_json}", flush=True)
+    if args.audit_json and audit_report is not None:
+        with open(args.audit_json, "w") as f:
+            f.write(audit_report.to_json())
+        print(f"wrote {args.audit_json}", flush=True)
 
 
 if __name__ == "__main__":

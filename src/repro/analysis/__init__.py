@@ -1,0 +1,49 @@
+"""Static analysis for the RNS datapath.
+
+Two passes, both ahead-of-time (nothing here runs the model):
+
+* :mod:`repro.analysis.ledger_audit` — the exactness auditor.  It traces
+  an entry point under :func:`repro.core.dispatch.record_ops` (the
+  abstract-interpretation shim: ``jax.eval_shape`` runs the python code
+  with zero FLOPs while every convert/matmul/normalize/fused composite
+  reports itself), then propagates worst-case ``log2|X|`` bounds through
+  the recorded dataflow graph and proves — with the SAME formulas the
+  runtime ledger uses (``core.tensor.ledger_limit_bits`` /
+  ``dot_out_bits``) — that no op can exceed its profile's exact range.
+* :mod:`repro.analysis.lint` — an AST linter enforcing the repo
+  invariants the codebase otherwise keeps by convention (kernel calls
+  stay in ``kernels/``, raw digit arithmetic stays in ``core/``, backend
+  selection goes through ``dispatch.resolve_backend``, no host calls on
+  jitted paths).
+
+Surfaces: ``launch/analyze.py --audit``, ``ServeConfig(audit=True)``,
+``python -m repro.analysis.lint``, and the ``static-analysis`` CI job.
+See docs/analysis.md.
+
+Attribute access is lazy (PEP 562) so ``python -m repro.analysis.lint``
+never pays the jax import the auditor needs.
+"""
+
+_EXPORTS = {
+    "GraphRecorder": "repro.analysis.graph",
+    "OpGraph": "repro.analysis.graph",
+    "OpNode": "repro.analysis.graph",
+    "trace_graph": "repro.analysis.graph",
+    "AuditReport": "repro.analysis.ledger_audit",
+    "PhaseAudit": "repro.analysis.ledger_audit",
+    "audit_fn": "repro.analysis.ledger_audit",
+    "audit_engine": "repro.analysis.ledger_audit",
+    "audit_serve": "repro.analysis.ledger_audit",
+    "LintViolation": "repro.analysis.lint",
+    "run_lint": "repro.analysis.lint",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,133 @@
+"""Dataflow-graph capture for the static exactness auditor.
+
+:class:`GraphRecorder` is the object :func:`repro.core.dispatch.record_ops`
+installs: every primitive/composite reports ``(kind, out, ins, **meta)``
+with the *operand objects themselves* — abstract tracers under
+``jax.eval_shape`` — and the recorder links consumers to producers by
+object identity (``id``), keeping strong references so ids stay unique
+for the life of the capture.  Ledger-level call sites additionally
+``annotate`` digit arrays with ground-truth ``mag_bits`` (resident
+weights have no recorded producer; dtype casts break identity chains,
+so they carry a ``base`` alias back to the original digits object).
+
+The result is an :class:`OpGraph`: ordered :class:`OpNode` entries
+(execution order — producers always precede consumers), an annotation
+table, and an alias table.  Bound propagation lives in
+:mod:`repro.analysis.ledger_audit`; this module only captures structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core import dispatch
+
+__all__ = ["OpNode", "OpGraph", "GraphRecorder", "trace_graph"]
+
+#: OpCounts fields a node's ``tallies`` metadata may carry — the graph's
+#: structural-count prediction sums exactly these.
+COUNT_FIELDS = ("converts", "matmuls", "normalizes", "fused", "fallbacks",
+                "weight_converts")
+
+
+@dataclasses.dataclass
+class OpNode:
+    """One recorded op.  ``out_id``/``in_ids`` are object identities of
+    the produced/consumed arrays (None for marker events); bound fields
+    are filled by the auditor's propagation pass."""
+
+    idx: int
+    kind: str
+    site: str
+    profile: str | None
+    meta: dict
+    out_id: int | None
+    in_ids: tuple[int, ...]
+    # --- filled by ledger_audit.propagate_bounds ---
+    in_bits: tuple = ()
+    out_bits: float | None = None    # worst-case log2|X| reached in this op
+    limit: float | None = None       # ledger_limit_bits(profile)
+    headroom: float | None = None    # limit - out_bits
+
+    def describe(self) -> str:
+        extra = ""
+        if self.out_bits is not None:
+            extra = (f" out_bits={self.out_bits:.1f}"
+                     f" headroom={self.headroom:+.1f}")
+        return f"{self.kind}[{self.profile or '-'}] @ {self.site}{extra}"
+
+
+@dataclasses.dataclass
+class OpGraph:
+    """Execution-ordered op nodes + identity-keyed annotations/aliases."""
+
+    nodes: list
+    annotations: dict      # id(arr) -> {mag_bits, profile, frac_exp, role}
+    aliases: dict          # id(cast_arr) -> id(base_arr)
+    traced_counts: dispatch.OpCounts | None = None
+
+    def producers(self) -> dict:
+        """id(out array) -> producing node (unique: ids are kept alive)."""
+        return {n.out_id: n for n in self.nodes if n.out_id is not None}
+
+    def counts(self) -> dict:
+        """Structural op counts predicted from the recorded tallies."""
+        out = dict.fromkeys(COUNT_FIELDS, 0)
+        for n in self.nodes:
+            for k, v in n.meta.get("tallies", {}).items():
+                out[k] += v
+        return out
+
+    def counts_match_traced(self) -> bool:
+        """Graph-derived counts vs the independently tallied OpCounts of
+        the same trace — divergence means the recorder or the counters
+        have a bug."""
+        if self.traced_counts is None:
+            return True
+        c = self.counts()
+        return all(getattr(self.traced_counts, f) == c[f]
+                   for f in COUNT_FIELDS)
+
+
+class GraphRecorder:
+    """Duck-typed recorder for :func:`dispatch.record_ops`."""
+
+    def __init__(self):
+        self._nodes: list[OpNode] = []
+        self._annotations: dict[int, dict] = {}
+        self._aliases: dict[int, int] = {}
+        self._keep: list = []        # pin object identities for the capture
+
+    # --- dispatch-facing protocol -----------------------------------------
+    def record(self, kind, out, ins, *, site, **meta):
+        self._keep.append((out, ins))
+        self._nodes.append(OpNode(
+            idx=len(self._nodes), kind=kind, site=site,
+            profile=meta.pop("profile", None), meta=meta,
+            out_id=None if out is None else id(out),
+            in_ids=tuple(id(x) for x in ins)))
+
+    def annotate(self, arr, *, base=None, **meta):
+        self._keep.append(arr)
+        if base is not None:
+            self._keep.append(base)
+            if base is not arr:
+                self._aliases[id(arr)] = id(base)
+        self._annotations.setdefault(id(arr), {}).update(meta)
+
+    # --- result -----------------------------------------------------------
+    def graph(self, traced_counts=None) -> OpGraph:
+        return OpGraph(nodes=self._nodes, annotations=self._annotations,
+                       aliases=self._aliases, traced_counts=traced_counts)
+
+
+def trace_graph(fn, *args, **kwargs) -> OpGraph:
+    """Capture ``fn``'s residue-op dataflow graph abstractly (no FLOPs),
+    with an independent :class:`~repro.core.dispatch.OpCounts` tally of
+    the SAME trace attached for cross-checking."""
+    rec = GraphRecorder()
+    with dispatch.record_ops(rec), dispatch.count_ops() as c:
+        jax.eval_shape(fn, *args, **kwargs)
+    return rec.graph(traced_counts=c)

@@ -1,0 +1,528 @@
+"""Static RNS exactness auditor — prove the ledger, don't run the model.
+
+The runtime magnitude ledger (``core/tensor.py``) enforces exactness one
+op at a time, while tracing.  This pass proves it for a whole entry
+point ahead of time: capture the residue dataflow graph abstractly
+(:func:`repro.analysis.graph.trace_graph` — ``jax.eval_shape`` under the
+dispatch recorder, zero FLOPs), then propagate worst-case ``log2|X|``
+bounds forward through the graph with the SAME shared formulas the
+runtime uses (:func:`repro.core.tensor.dot_out_bits` against
+:func:`repro.core.tensor.ledger_limit_bits`) and check every
+residue-bearing op.
+
+What comes out (:class:`AuditReport`):
+
+* a proof (or named counterexample) that no op exceeds
+  ``signed_bits - _SAFETY_BITS`` for its profile;
+* the minimum-headroom critical path and a per-site headroom table;
+* propagated-vs-annotated bound cross-checks (the recorder carries the
+  runtime ledger's own numbers as annotations — divergence is a bug in
+  one of them) and graph-vs-``OpCounts`` structural count cross-checks;
+* reference-backend fallbacks by site and reason (no longer a bare
+  counter);
+* *missed deferrals*: with ``defer`` off, the deferred variant of the
+  same engine is audited too — if its bounds prove exact, the normalize
+  ops it saves were provably unnecessary;
+* resident profile validation: the stored amortized ledger bounds and
+  the per-layer profile selections re-checked against column sums
+  recomputed from the master weights.
+
+Entry points: :func:`audit_fn` (any traceable callable),
+:func:`audit_engine` (a built Engine/ContinuousEngine),
+:func:`audit_serve` (params + configs).  Surfaced by
+``launch/analyze.py --audit`` and ``ServeConfig(audit=True)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+
+import jax
+
+from repro.analysis.graph import COUNT_FIELDS, GraphRecorder, OpGraph
+from repro.core import dispatch
+from repro.core.tensor import dot_out_bits, ledger_limit_bits
+
+__all__ = ["PhaseAudit", "AuditReport", "audit_fn", "audit_engine",
+           "audit_serve", "propagate_bounds", "validate_resident"]
+
+_TOL = 1e-9          # float slack on the limit comparison (matches runtime >)
+_AGREE_TOL = 1e-6    # propagated vs annotated bounds must agree to this
+
+
+# ------------------------------------------------------- propagation ----
+def propagate_bounds(g: OpGraph) -> list[dict]:
+    """Forward worst-case bit-bound propagation over a captured graph.
+
+    Mutates each node's ``in_bits/out_bits/limit/headroom`` in place and
+    returns the violations: ``overflow`` (a bound exceeds the profile's
+    ledger limit — the exactness proof fails), ``unresolved`` (an operand
+    bound could not be derived — the proof is incomplete), and
+    ``bound-mismatch`` (propagation disagrees with the runtime ledger's
+    annotation — a bug in one of them).
+    """
+    producers = g.producers()
+    violations: list[dict] = []
+
+    def resolve(oid):
+        """(bits, how) for an operand id: runtime annotation wins, then
+        the producing node's propagated bound, then alias chains."""
+        seen = set()
+        while oid is not None and oid not in seen:
+            seen.add(oid)
+            ann = g.annotations.get(oid, {})
+            node = producers.get(oid)
+            ann_bits = ann.get("mag_bits")
+            node_bits = node.out_bits if node is not None else None
+            if ann_bits is not None and node_bits is not None \
+                    and abs(ann_bits - node_bits) > _AGREE_TOL:
+                return float(ann_bits), "conflict"
+            if ann_bits is not None:
+                return float(ann_bits), "annotation"
+            if node_bits is not None:
+                return node_bits, "node"
+            oid = g.aliases.get(oid)
+        return None, None
+
+    def operand(n, pos):
+        bits, how = resolve(n.in_ids[pos]) if pos < len(n.in_ids) else (None,
+                                                                        None)
+        if how == "conflict":
+            violations.append({
+                "kind": "bound-mismatch", "op": n.kind, "site": n.site,
+                "profile": n.profile,
+                "detail": f"operand {pos}: runtime annotation disagrees "
+                          f"with propagated bound"})
+        if bits is None:
+            violations.append({
+                "kind": "unresolved", "op": n.kind, "site": n.site,
+                "profile": n.profile,
+                "detail": f"operand {pos} has no derivable bit bound"})
+        return bits
+
+    for n in g.nodes:
+        if n.kind in ("fallback", "renormalize"):
+            continue
+        if n.kind == "convert":
+            n.out_bits = float(n.meta["bits"] - 1)
+        elif n.kind == "matmul":
+            a, w = operand(n, 0), operand(n, 1)
+            n.in_bits = (a, w)
+            if a is None or w is None:
+                continue
+            n.out_bits = dot_out_bits(a, w, n.meta["contract_dim"])
+        elif n.kind in ("fused_encode_matmul", "fused_dot"):
+            w = operand(n, 1)
+            n.in_bits = (float(n.meta["bits"] - 1), w)
+            if w is None:
+                continue
+            n.out_bits = dot_out_bits(n.in_bits[0], w,
+                                      n.meta["contract_dim"])
+        elif n.kind == "fused_matmul_normalize":
+            a, w = operand(n, 0), operand(n, 1)
+            n.in_bits = (a, w)
+            if a is None or w is None:
+                continue
+            n.out_bits = dot_out_bits(a, w, n.meta["contract_dim"])
+        elif n.kind == "normalize":
+            a = operand(n, 0)
+            n.in_bits = (a,)
+            if a is None:
+                continue
+            n.out_bits = a       # peak magnitude being MRC-decoded
+        elif n.kind == "pac_mul":
+            a, b = operand(n, 0), operand(n, 1)
+            n.in_bits = (a, b)
+            if a is None or b is None:
+                continue
+            n.out_bits = a + b
+        elif n.kind == "pac_add":
+            a, b = operand(n, 0), operand(n, 1)
+            n.in_bits = (a, b)
+            if a is None or b is None:
+                continue
+            n.out_bits = max(a, b) + 1.0
+        else:                    # unknown kinds: structural only
+            continue
+        if n.profile is not None and n.out_bits is not None:
+            n.limit = ledger_limit_bits(n.profile)
+            n.headroom = n.limit - n.out_bits
+            if n.out_bits > n.limit + _TOL:
+                violations.append({
+                    "kind": "overflow", "op": n.kind, "site": n.site,
+                    "profile": n.profile, "out_bits": n.out_bits,
+                    "limit": n.limit,
+                    "detail": f"worst-case log2|X| = {n.out_bits:.2f} "
+                              f"exceeds ledger limit {n.limit:.2f}"})
+        # cross-check the runtime ledger's own bound for this output
+        if n.out_id is not None and n.out_bits is not None:
+            ann = g.annotations.get(n.out_id, {})
+            if ann.get("mag_bits") is not None \
+                    and abs(ann["mag_bits"] - n.out_bits) > _AGREE_TOL:
+                violations.append({
+                    "kind": "bound-mismatch", "op": n.kind, "site": n.site,
+                    "profile": n.profile,
+                    "detail": f"propagated {n.out_bits:.3f} != runtime "
+                              f"ledger {ann['mag_bits']:.3f}"})
+    return violations
+
+
+def _critical_path(g: OpGraph) -> list:
+    """Producer chain ending at the minimum-headroom node."""
+    bounded = [n for n in g.nodes if n.headroom is not None]
+    if not bounded:
+        return []
+    producers = g.producers()
+    path = [min(bounded, key=lambda n: n.headroom)]
+    seen = {path[0].idx}
+    while True:
+        cur, best = path[-1], None
+        for oid in cur.in_ids:
+            p = producers.get(oid) or producers.get(g.aliases.get(oid))
+            if p is not None and p.idx not in seen \
+                    and p.headroom is not None \
+                    and (best is None or p.headroom < best.headroom):
+                best = p
+        if best is None:
+            return list(reversed(path))
+        seen.add(best.idx)
+        path.append(best)
+
+
+def _headroom_table(g: OpGraph) -> list[dict]:
+    rows: dict[tuple, dict] = {}
+    for n in g.nodes:
+        if n.headroom is None:
+            continue
+        r = rows.setdefault((n.site, n.profile), {
+            "site": n.site, "profile": n.profile, "ops": 0,
+            "max_out_bits": -math.inf, "limit": n.limit,
+            "min_headroom": math.inf})
+        r["ops"] += 1
+        r["max_out_bits"] = max(r["max_out_bits"], n.out_bits)
+        r["min_headroom"] = min(r["min_headroom"], n.headroom)
+    return sorted(rows.values(), key=lambda r: r["min_headroom"])
+
+
+# ------------------------------------------------------ phase audits ----
+@dataclasses.dataclass
+class PhaseAudit:
+    """Audit of one traced entry point (one jitted phase of an engine)."""
+
+    name: str
+    ok: bool
+    n_ops: int = 0
+    counts: dict = dataclasses.field(default_factory=dict)
+    traced_counts: dict = dataclasses.field(default_factory=dict)
+    counts_match: bool = True
+    violations: list = dataclasses.field(default_factory=list)
+    min_headroom: float | None = None
+    critical_path: list = dataclasses.field(default_factory=list)
+    headroom: list = dataclasses.field(default_factory=list)
+    fallbacks: list = dataclasses.field(default_factory=list)
+    renormalizes: int = 0
+    error: str | None = None
+    error_site: dict | None = None
+
+
+_CORE_PREFIXES = ("core/", "kernels/")
+
+
+def _blame(tb) -> dict:
+    """Name the failing layer (deepest model/serve frame) and op (deepest
+    core frame) from a trace-time ledger exception."""
+    layer = op = None
+    while tb is not None:
+        fname = tb.tb_frame.f_code.co_filename.replace("\\", "/")
+        if "/repro/" in fname:
+            rel = fname.rsplit("/repro/", 1)[1]
+            label = f"{rel}:{tb.tb_frame.f_code.co_name}"
+            if rel.startswith(_CORE_PREFIXES):
+                op = label
+            elif not rel.startswith("analysis/"):
+                layer = label
+        tb = tb.tb_next
+    return {"layer": layer, "op": op}
+
+
+def _audit_graph(name: str, g: OpGraph) -> PhaseAudit:
+    violations = propagate_bounds(g)
+    counts = g.counts()
+    traced = {f: getattr(g.traced_counts, f) for f in COUNT_FIELDS} \
+        if g.traced_counts is not None else {}
+    counts_match = g.counts_match_traced()
+    if not counts_match:
+        violations.append({
+            "kind": "count-mismatch", "op": "-", "site": "-", "profile": None,
+            "detail": f"graph-derived counts {counts} != traced {traced}"})
+    fb: dict[tuple, int] = {}
+    for n in g.nodes:
+        if n.kind == "fallback":
+            key = (n.site, n.meta.get("reason", "?"))
+            fb[key] = fb.get(key, 0) + 1
+    headrooms = [n.headroom for n in g.nodes if n.headroom is not None]
+    return PhaseAudit(
+        name=name, ok=not violations, n_ops=len(g.nodes), counts=counts,
+        traced_counts=traced, counts_match=counts_match,
+        violations=violations,
+        min_headroom=min(headrooms) if headrooms else None,
+        critical_path=[n.describe() for n in _critical_path(g)],
+        headroom=_headroom_table(g),
+        fallbacks=[{"site": s, "reason": r, "count": c}
+                   for (s, r), c in sorted(fb.items())],
+        renormalizes=sum(1 for n in g.nodes if n.kind == "renormalize"))
+
+
+def audit_phase(name: str, fn, *args, **kwargs) -> PhaseAudit:
+    """Trace one entry point abstractly and audit its graph.  A ledger
+    error raised *during* the trace (the runtime check caught it first)
+    becomes a failed phase naming the layer and op."""
+    rec = GraphRecorder()
+    try:
+        with dispatch.record_ops(rec), dispatch.count_ops() as c:
+            jax.eval_shape(fn, *args, **kwargs)
+    except ValueError as e:
+        return PhaseAudit(name=name, ok=False, n_ops=len(rec.graph().nodes),
+                          error=str(e), error_site=_blame(e.__traceback__))
+    return _audit_graph(name, rec.graph(traced_counts=c))
+
+
+# ---------------------------------------------------- resident checks ----
+def validate_resident(params, rns) -> list[dict]:
+    """Re-derive every resident weight's ledger entry from first
+    principles and check the stored amortized bound and the selected
+    profile against it — the auditor does not trust the encode-time
+    column-sum heuristic, it re-proves it.
+
+    Per weight: the stored ``mag_bits`` must reconstruct a column-sum
+    bound no smaller than one recomputed from the float master (when the
+    master is still in the tree), and the per-op product summation
+    ``dot_out_bits(qx-1, mag_bits, D_in)`` must fit the selected
+    profile.  Per gated layer: the deferred-chain worst case
+    ``(qx-1)+cb_wi+(qx-1)+cb_wo`` must fit too (the bound
+    ``models/resident._select_profile`` sized the profile for).
+    """
+    from repro.models import resident as R
+
+    if rns is None:
+        return []
+    entries: list[dict] = []
+    qx = float(rns.qx - 1)
+
+    def check_mlp(mlp, path):
+        names = [n for n in R._MLP_WEIGHTS if n in mlp
+                 and isinstance(mlp[n], dict) and "w_res" in mlp[n]]
+        cb: dict[str, float] = {}
+        for name in names:
+            w_res = mlp[name]["w_res"]
+            d_in = int(w_res.digits.shape[-2])
+            lim = ledger_limit_bits(w_res.profile)
+            cb[name] = w_res.mag_bits + math.log2(max(d_in, 1))
+            e = {"path": "/".join(path + (name,)),
+                 "profile": w_res.profile, "d_in": d_in,
+                 "mag_bits": w_res.mag_bits, "limit": lim,
+                 "need": dot_out_bits(qx, w_res.mag_bits, d_in),
+                 "ok": True, "detail": ""}
+            if e["need"] > lim + _TOL:
+                e["ok"] = False
+                e["detail"] = (f"per-op product summation needs "
+                               f"{e['need']:.2f} bits > limit {lim:.2f}")
+            master = mlp[name].get("w")
+            if e["ok"] and master is not None \
+                    and not isinstance(master, jax.core.Tracer):
+                true_cb = R._colsum_bits(master, rns.qw)
+                if true_cb > cb[name] + _AGREE_TOL:
+                    e["ok"] = False
+                    e["detail"] = (
+                        f"stored ledger bound (colsum 2^{cb[name]:.2f}) "
+                        f"under-approximates the master's recomputed "
+                        f"column sum 2^{true_cb:.2f}")
+            entries.append(e)
+        if "wi" in cb and "wo" in cb and "wg" in cb:
+            lim = ledger_limit_bits(mlp["wi"]["w_res"].profile)
+            chain = qx + cb["wi"] + qx + cb["wo"]
+            entries.append({
+                "path": "/".join(path) or "<root>",
+                "profile": mlp["wi"]["w_res"].profile, "d_in": None,
+                "mag_bits": None, "need": chain, "limit": lim,
+                "ok": chain <= lim + _TOL,
+                "detail": "" if chain <= lim + _TOL else
+                          f"deferred gated chain needs {chain:.2f} bits "
+                          f"> limit {lim:.2f}"})
+        return mlp
+
+    R._walk_mlps(params, check_mlp)
+    return entries
+
+
+# ------------------------------------------------------- full reports ----
+@dataclasses.dataclass
+class AuditReport:
+    """Everything the static pass can say about one configuration."""
+
+    ok: bool
+    phases: list
+    resident: list = dataclasses.field(default_factory=list)
+    missed_deferrals: list = dataclasses.field(default_factory=list)
+    config: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def min_headroom(self) -> float | None:
+        hs = [p.min_headroom for p in self.phases
+              if p.min_headroom is not None]
+        return min(hs) if hs else None
+
+    def to_dict(self) -> dict:
+        return {"ok": self.ok, "min_headroom": self.min_headroom,
+                "config": self.config,
+                "phases": [dataclasses.asdict(p) for p in self.phases],
+                "resident": self.resident,
+                "missed_deferrals": self.missed_deferrals}
+
+    def to_json(self, **kw) -> str:
+        return json.dumps(self.to_dict(), indent=kw.pop("indent", 2), **kw)
+
+    def summary(self) -> str:
+        if self.ok:
+            h = self.min_headroom
+            extra = f" (min headroom {h:+.1f} bits)" if h is not None else ""
+            return f"exactness audit: PROVED{extra}"
+        lines = ["exactness audit: FAILED"]
+        for p in self.phases:
+            if p.error:
+                site = p.error_site or {}
+                lines.append(f"  phase {p.name}: ledger error in layer "
+                             f"{site.get('layer')} at op {site.get('op')}: "
+                             f"{p.error}")
+            for v in p.violations:
+                lines.append(f"  phase {p.name}: {v['kind']} at {v['op']} "
+                             f"({v['site']}): {v['detail']}")
+        for r in self.resident:
+            if not r["ok"]:
+                lines.append(f"  resident {r['path']}: {r['detail']}")
+        return "\n".join(lines)
+
+    def table(self) -> str:
+        """Human-readable report (the --audit CLI output)."""
+        out = [self.summary()]
+        if self.config:
+            out.append("config: " + ", ".join(
+                f"{k}={v}" for k, v in self.config.items()))
+        for p in self.phases:
+            if p.error:
+                continue
+            c = ", ".join(f"{k}={v}" for k, v in p.counts.items() if v)
+            out.append(f"\nphase {p.name}: {p.n_ops} recorded ops "
+                       f"[{c or 'no residue ops'}] counts_match="
+                       f"{p.counts_match} renormalizes={p.renormalizes}")
+            if p.headroom:
+                out.append(f"  {'site':<58} {'profile':<8} {'ops':>4} "
+                           f"{'bits':>6} {'limit':>6} {'headroom':>8}")
+                for r in p.headroom:
+                    out.append(f"  {r['site'][:58]:<58} {r['profile']:<8} "
+                               f"{r['ops']:>4} {r['max_out_bits']:>6.1f} "
+                               f"{r['limit']:>6.1f} "
+                               f"{r['min_headroom']:>+8.1f}")
+            if p.critical_path:
+                out.append("  critical path (ends at min headroom):")
+                out.extend(f"    {s}" for s in p.critical_path)
+            for f in p.fallbacks:
+                out.append(f"  fallback x{f['count']}: {f['reason']} "
+                           f"at {f['site']}")
+        if self.resident:
+            n_bad = sum(1 for r in self.resident if not r["ok"])
+            out.append(f"\nresident ledger entries: "
+                       f"{len(self.resident) - n_bad}/{len(self.resident)} "
+                       f"re-proved from masters")
+        for m in self.missed_deferrals:
+            out.append(f"missed deferral [{m['phase']}]: deferring would "
+                       f"save {m['saved']} of {m['normalizes']} normalizes "
+                       f"(bounds prove the deferred chain exact)")
+        return "\n".join(out)
+
+
+def audit_fn(fn, *args, name: str = "trace", **kwargs) -> AuditReport:
+    """Audit any traceable entry point (a layer fn, ``model.prefill``,
+    ``decode_step``, ``mixed_step``, ...) on example/abstract args."""
+    return AuditReport(phases=[ph := audit_phase(name, fn, *args, **kwargs)],
+                       ok=ph.ok)
+
+
+def _missed_deferrals(engine, phases) -> list[dict]:
+    """With deferral off, audit the defer=True variant of the SAME engine
+    traces; normalizes it saves while staying provably exact were
+    unnecessary.  (Config-level by design: between a decode/encode pair
+    the floats may pass through nonlinearities the graph cannot see, so
+    node-level "this normalize was avoidable" claims would be guesses —
+    re-proving the deferred configuration is not.)"""
+    cfg = engine.cfg
+    rns = getattr(cfg, "rns", None)
+    if rns is None or getattr(rns, "defer", False):
+        return []
+    out: list[dict] = []
+    engine.cfg = dataclasses.replace(
+        cfg, rns=dataclasses.replace(rns, defer=True))
+    try:
+        specs = engine._trace_specs()
+        for p in phases:
+            if not p.ok or p.name not in specs:
+                continue
+            fn, args = specs[p.name]
+            dp = audit_phase(p.name, fn, *args)
+            saved = p.counts.get("normalizes", 0) - dp.counts.get(
+                "normalizes", 0)
+            if dp.ok and saved > 0:
+                out.append({"phase": p.name,
+                            "normalizes": p.counts["normalizes"],
+                            "deferred_normalizes": dp.counts["normalizes"],
+                            "saved": saved})
+    finally:
+        engine.cfg = cfg
+    return out
+
+
+def _describe(engine) -> dict:
+    scfg = getattr(engine, "scfg", None)
+    rns = getattr(engine.cfg, "rns", None)
+    d = {"arch": getattr(engine.cfg, "arch_id",
+                         getattr(engine.cfg, "name", "?")),
+         "rns": getattr(rns, "profile", None),
+         "defer": getattr(rns, "defer", None)}
+    if scfg is not None:
+        d.update(backend=scfg.rns_backend,
+                 resident=scfg.resident_weights,
+                 per_layer_profiles=scfg.per_layer_profiles,
+                 chunked=getattr(scfg, "chunked_prefill", False),
+                 spec=getattr(scfg, "spec_decode", False),
+                 prefix=getattr(scfg, "prefix_cache", False))
+    return d
+
+
+def audit_engine(engine) -> AuditReport:
+    """Audit every jitted phase of a built Engine/ContinuousEngine — the
+    exact trace closures ``_rns_ops`` counts (``_trace_specs``), so the
+    audit's structural predictions and the engine's reported counts are
+    claims about the same program."""
+    phases = [audit_phase(n, fn, *args)
+              for n, (fn, args) in engine._trace_specs().items()]
+    resident = validate_resident(engine.params, getattr(engine.cfg, "rns",
+                                                        None))
+    ok = all(p.ok for p in phases) and all(r["ok"] for r in resident)
+    return AuditReport(ok=ok, phases=phases, resident=resident,
+                       missed_deferrals=_missed_deferrals(engine, phases),
+                       config=_describe(engine))
+
+
+def audit_serve(params, model_cfg, scfg=None) -> AuditReport:
+    """Audit a whole ServeConfig: build the continuous engine (weights
+    encode, schedules size themselves) and audit its phases."""
+    from repro.serve.engine import ContinuousEngine, ServeConfig
+
+    if scfg is None:
+        scfg = ServeConfig(max_cache=64)
+    if scfg.audit:
+        # the build-time hook would recurse into this very audit
+        scfg = dataclasses.replace(scfg, audit=False)
+    return audit_engine(ContinuousEngine(params, model_cfg, scfg))

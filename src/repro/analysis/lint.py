@@ -1,0 +1,207 @@
+"""Repo-invariant linter: enforce by AST what the codebase keeps by
+convention.
+
+Rules (ids are the suppression keys):
+
+* ``pallas-call`` — ``pl.pallas_call`` only inside ``kernels/``; every
+  other layer talks to kernels through the ``kernels/*/ops.py`` wrappers
+  via ``core/dispatch.py``.
+* ``raw-digits`` — no arithmetic on raw ``RnsTensor.digits`` outside
+  ``core/`` + ``kernels/``; digit planes are only combined by the
+  residue primitives (layout moves like ``moveaxis``/``device_put`` are
+  fine).
+* ``backend-flag`` — backend selection goes through
+  ``core/dispatch.resolve_backend``: no stray ``interpret=`` kwargs
+  outside ``kernels/`` + ``core/dispatch.py`` and no ``use_pallas=``
+  outside its legacy home ``core/rns_matmul.py``.
+* ``host-in-jit`` — no ``time.*`` / ``np.random.*`` calls in the traced
+  surface (``core/``, ``models/``, ``kernels/``): host calls burn in a
+  constant at trace time and silently stop varying under jit.
+
+Suppression: ``# lint-ok: <rule>[, <rule>...] [reason]`` on the flagged
+line or the line above; ``# lint-ok-file: <rule>`` anywhere in a file
+suppresses the rule for the whole file (e.g. the autotuner, which times
+on the host *by design*).
+
+Run as a pytest (tests/test_analysis.py asserts zero unsuppressed
+violations on ``src/``), as a CI job, or directly::
+
+    PYTHONPATH=src python -m repro.analysis.lint
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+import sys
+
+__all__ = ["LintViolation", "RULES", "lint_source", "run_lint", "main"]
+
+RULES = {
+    "pallas-call": "pl.pallas_call outside kernels/",
+    "raw-digits": "arithmetic on raw RnsTensor.digits outside core/+kernels/",
+    "backend-flag": "backend selection bypassing core/dispatch "
+                    "(stray interpret=/use_pallas=)",
+    "host-in-jit": "time.*/np.random.* call on a jitted code path",
+}
+
+#: directories (relative to src/repro/) whose modules count as the traced
+#: surface for host-in-jit
+_TRACED_DIRS = ("core/", "models/", "kernels/")
+#: where each bypass flag may legitimately appear
+_INTERPRET_OK = ("kernels/", "core/dispatch.py")
+_USE_PALLAS_OK = ("core/rns_matmul.py",)
+#: call names that count as arithmetic for raw-digits (layout moves and
+#: placement don't — resident encode legitimately moveaxis/device_puts)
+_ARITH_CALLS = {"matmul", "einsum", "dot", "tensordot", "remainder", "mod",
+                "add", "subtract", "multiply", "sum", "prod", "cumsum"}
+
+_SUPPRESS_RE = re.compile(r"#\s*lint-ok(?P<file>-file)?:\s*"
+                          r"(?P<rules>[\w-]+(?:\s*,\s*[\w-]+)*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _suppressions(src: str):
+    """(file-wide rule set, line -> rule set).  A line-level pragma covers
+    its own line and the one below it."""
+    file_rules: set[str] = set()
+    line_rules: dict[int, set[str]] = {}
+    for i, text in enumerate(src.splitlines(), start=1):
+        m = _SUPPRESS_RE.search(text)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group("rules").split(",")}
+        if m.group("file"):
+            file_rules |= rules
+        else:
+            line_rules.setdefault(i, set()).update(rules)
+            line_rules.setdefault(i + 1, set()).update(rules)
+    return file_rules, line_rules
+
+
+def _is_digits_attr(node) -> bool:
+    return isinstance(node, ast.Attribute) and node.attr == "digits"
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, rel: str):
+        self.rel = rel
+        self.found: list[tuple[int, str, str]] = []
+
+    def flag(self, node, rule: str, message: str):
+        self.found.append((node.lineno, rule, message))
+
+    # --- pallas-call / backend-flag / host-in-jit (all Call-shaped) ------
+    def visit_Call(self, node: ast.Call):
+        fn = node.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else None)
+        if name == "pallas_call" and not self.rel.startswith("kernels/"):
+            self.flag(node, "pallas-call",
+                      "pallas_call belongs in kernels/ (route through "
+                      "core/dispatch)")
+        for kw in node.keywords:
+            if kw.arg == "interpret" \
+                    and not self.rel.startswith(_INTERPRET_OK):
+                self.flag(node, "backend-flag",
+                          "interpret= outside kernels//dispatch; use "
+                          "dispatch.resolve_backend")
+            if kw.arg == "use_pallas" \
+                    and not self.rel.startswith(_USE_PALLAS_OK):
+                self.flag(node, "backend-flag",
+                          "use_pallas= is a legacy core/rns_matmul alias; "
+                          "pass backend= instead")
+        if self.rel.startswith(_TRACED_DIRS):
+            if isinstance(fn, ast.Attribute):
+                v = fn.value
+                if isinstance(v, ast.Name) and v.id == "time":
+                    self.flag(node, "host-in-jit",
+                              f"time.{fn.attr} on a traced path")
+                if isinstance(v, ast.Attribute) and v.attr == "random" \
+                        and isinstance(v.value, ast.Name) \
+                        and v.value.id in ("np", "numpy"):
+                    self.flag(node, "host-in-jit",
+                              f"np.random.{fn.attr} on a traced path")
+        # raw-digits via arithmetic-shaped calls
+        if name in _ARITH_CALLS and not self.rel.startswith(("core/",
+                                                             "kernels/")):
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if _is_digits_attr(arg):
+                    self.flag(node, "raw-digits",
+                              f".digits operand of {name}() outside core/")
+        self.generic_visit(node)
+
+    # --- raw-digits (operator-shaped) ------------------------------------
+    def _digits_arith(self, node, operands):
+        if self.rel.startswith(("core/", "kernels/")):
+            return
+        if any(_is_digits_attr(o) for o in operands):
+            self.flag(node, "raw-digits",
+                      "arithmetic on raw .digits outside core/ (use the "
+                      "rt_*/dispatch primitives)")
+
+    def visit_BinOp(self, node: ast.BinOp):
+        self._digits_arith(node, (node.left, node.right))
+        self.generic_visit(node)
+
+    def visit_UnaryOp(self, node: ast.UnaryOp):
+        if not isinstance(node.op, ast.Not):
+            self._digits_arith(node, (node.operand,))
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        self._digits_arith(node, (node.target, node.value))
+        self.generic_visit(node)
+
+
+def lint_source(src: str, rel: str, path: str | None = None
+                ) -> list[LintViolation]:
+    """Lint one module's source.  ``rel`` is its path relative to
+    ``src/repro/`` (rule scoping key); ``path`` is for messages."""
+    file_rules, line_rules = _suppressions(src)
+    checker = _Checker(rel)
+    checker.visit(ast.parse(src))
+    out = []
+    for line, rule, message in checker.found:
+        if rule in file_rules or rule in line_rules.get(line, ()):
+            continue
+        out.append(LintViolation(path or rel, line, rule, message))
+    return sorted(out, key=lambda v: (v.path, v.line))
+
+
+def run_lint(root=None) -> list[LintViolation]:
+    """Lint every module under ``src/repro/`` (zero violations is a CI
+    gate; see .github/workflows/ci.yml job ``static-analysis``)."""
+    base = pathlib.Path(root) if root is not None else \
+        pathlib.Path(__file__).resolve().parents[1]
+    out: list[LintViolation] = []
+    for py in sorted(base.rglob("*.py")):
+        rel = py.relative_to(base).as_posix()
+        out.extend(lint_source(py.read_text(), rel, str(py)))
+    return out
+
+
+def main(argv=None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    violations = run_lint(args[0] if args else None)
+    for v in violations:
+        print(v)
+    print(f"repro lint: {len(violations)} violation(s), "
+          f"{len(RULES)} rules")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -49,6 +49,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import sys
 import threading
 
 import jax
@@ -64,6 +65,10 @@ __all__ = [
     "OpCounts",
     "count_ops",
     "trace_op_counts",
+    "record_ops",
+    "recording",
+    "record_op",
+    "annotate_digits",
     "convert",
     "matmul",
     "normalize",
@@ -168,6 +173,13 @@ class OpCounts:
     On the resident-weight path it is zero — weights are encoded once at
     build time — so "resident equals re-encode minus weight converts" is
     a structural assertion: compare ``activation_converts`` across paths.
+
+    ``fallback_sites`` refines the ``fallbacks`` counter into a per-site
+    tally keyed by ``(site, reason)`` — ``site`` is the nearest caller
+    frame outside this module (``"core/tensor.py:rt_decode"``-style) —
+    so the auditor and the backend matrix can assert *which* downgrades
+    happened, not just how many.  The int counter is preserved and always
+    equals ``sum(fallback_sites.values())``.
     """
 
     converts: int = 0
@@ -176,6 +188,7 @@ class OpCounts:
     fused: int = 0
     fallbacks: int = 0
     weight_converts: int = 0
+    fallback_sites: dict = dataclasses.field(default_factory=dict)
 
     @property
     def normalizes_per_matmul(self) -> float:
@@ -184,6 +197,16 @@ class OpCounts:
     @property
     def activation_converts(self) -> int:
         return self.converts - self.weight_converts
+
+    def add(self, other: "OpCounts", times: int = 1) -> "OpCounts":
+        """New OpCounts = self + times * other (per-site tallies merged)."""
+        out = OpCounts(**{f: getattr(self, f) + times * getattr(other, f)
+                          for f in ("converts", "matmuls", "normalizes",
+                                    "fused", "fallbacks", "weight_converts")})
+        out.fallback_sites = dict(self.fallback_sites)
+        for k, n in other.fallback_sites.items():
+            out.fallback_sites[k] = out.fallback_sites.get(k, 0) + times * n
+        return out
 
 
 def _counters() -> list[OpCounts]:
@@ -213,6 +236,122 @@ def trace_op_counts(fn, *args, **kwargs) -> OpCounts:
     with count_ops() as c:
         jax.eval_shape(fn, *args, **kwargs)
     return c
+
+
+# ----------------------------------------------------------- recorders ----
+# The abstract-interpretation shim behind repro.analysis: while a recorder
+# is installed (record_ops), every primitive/composite call reports the
+# operand and output *objects* (tracers under jax.eval_shape) plus static
+# metadata (profile, quantize bits, contraction dim, resolved backend,
+# what it tallied).  Recorders link operands to producers by object
+# identity and keep the objects alive so ids stay unique; ledger-level
+# call sites (core/tensor.py) add tensor annotations — ground-truth
+# mag_bits for digit arrays whose producer the shim cannot see (resident
+# weights, dtype casts).  Recording costs nothing when no recorder is
+# installed and never changes what executes.
+
+def _recorders() -> list:
+    if not hasattr(_state, "recorders"):
+        _state.recorders = []
+    return _state.recorders
+
+
+def recording() -> bool:
+    """Whether an analysis recorder is installed on this thread."""
+    return bool(_recorders())
+
+
+@contextlib.contextmanager
+def record_ops(recorder):
+    """Install ``recorder`` (``.record(...)``/``.annotate(...)`` duck
+    type; see ``repro.analysis.graph.GraphRecorder``) for the dynamic
+    extent, nested like ``count_ops``."""
+    _recorders().append(recorder)
+    try:
+        yield recorder
+    finally:
+        _recorders().remove(recorder)
+
+
+_THIS_FILE = __file__
+
+
+def _call_site() -> str:
+    """Nearest repro frame outside this module, plus the nearest frame
+    outside ``core/`` when that differs — ``"models/layers.py:mlp ->
+    core/tensor.py:rt_decode"``-style, stable across traces."""
+    f = sys._getframe(1)
+    inner = outer = None
+    while f is not None:
+        fname = f.f_code.co_filename.replace("\\", "/")
+        if "/repro/" in fname and fname != _THIS_FILE:
+            rel = fname.rsplit("/repro/", 1)[1]
+            label = f"{rel}:{f.f_code.co_name}"
+            if inner is None:
+                inner = label
+            if not rel.startswith("core/"):
+                outer = label
+                break
+        f = f.f_back
+    if inner is None:
+        return "<external>"
+    if outer is not None and outer != inner:
+        return f"{outer} -> {inner}"
+    return inner
+
+
+def record_op(kind: str, out, ins: tuple = (), **meta):
+    """Report one recorded op to the installed recorders (no-op without
+    one).  Ledger-level call sites use this for ops that do not route
+    through the primitives below (``rns_mul``/``rns_add``, forced
+    renormalizes)."""
+    rs = _recorders()
+    if not rs:
+        return
+    site = meta.pop("site", None) or _call_site()
+    for r in rs:
+        r.record(kind, out, ins, site=site, **meta)
+
+
+def annotate_digits(arr, **meta):
+    """Attach ground-truth ledger facts (``mag_bits``, ``profile``,
+    ``frac_exp``, ``role``, optional ``base`` array whose ledger state
+    ``arr`` aliases) to a digit array object for the installed
+    recorders."""
+    rs = _recorders()
+    if not rs:
+        return
+    for r in rs:
+        r.annotate(arr, **meta)
+
+
+def _tally_fallback(reason: str):
+    """A visible backend downgrade: bump the counters (total + per-site)
+    and report a ``fallback`` event to the recorders."""
+    cs, rs = _counters(), _recorders()
+    if not cs and not rs:
+        return
+    site = _call_site()
+    for c in cs:
+        c.fallbacks += 1
+        key = (site, reason)
+        c.fallback_sites[key] = c.fallback_sites.get(key, 0) + 1
+    for r in rs:
+        r.record("fallback", None, (), site=site, reason=reason,
+                 tallies={"fallbacks": 1})
+
+
+def _prof_name(profile) -> str:
+    return profile if isinstance(profile, str) else profile.name
+
+
+def _emit(kind: str, out, ins: tuple, **meta):
+    rs = _recorders()
+    if not rs:
+        return
+    site = _call_site()
+    for r in rs:
+        r.record(kind, out, ins, site=site, **meta)
 
 
 # ------------------------------------------------- digit-sharded bodies ----
@@ -377,21 +516,26 @@ def convert(profile, x, scale, *, bits: int = 16, backend: str | None = None,
     if p is None:
         p = get_profile(profile) if isinstance(profile, str) else profile
     if ds is not None:
-        return _sharded_convert(p, x, scale, bits, ds)
-    # per-sequence grids (mask-aware absmax, non-scalar scales) run through
-    # the Pallas kernel too since the scale became a streamed operand —
-    # the old silent reference fallback is gone
-    if be == "reference":
+        out = _sharded_convert(p, x, scale, bits, ds)
+    elif be == "reference":
+        # per-sequence grids (mask-aware absmax, non-scalar scales) run
+        # through the Pallas kernel too since the scale became a streamed
+        # operand — the old silent reference fallback is gone
         from repro.core.quantize import quantize_with_scale
         from repro.core.rns import encode_int32
 
         res = encode_int32(p, quantize_with_scale(x, scale, bits))
-        return res.astype(jnp.int8) if p.int8_safe else res
-    from repro.kernels.rns_convert.ops import rns_convert
+        out = res.astype(jnp.int8) if p.int8_safe else res
+    else:
+        from repro.kernels.rns_convert.ops import rns_convert
 
-    out_dtype = jnp.int8 if p.int8_safe else jnp.int32
-    return rns_convert(p.name, x, scale, bits=bits,
-                       interpret=_interpret_for(be), out_dtype=out_dtype)
+        out_dtype = jnp.int8 if p.int8_safe else jnp.int32
+        out = rns_convert(p.name, x, scale, bits=bits,
+                          interpret=_interpret_for(be), out_dtype=out_dtype)
+    _emit("convert", out, (x,), profile=p.name, bits=bits, weight=weight,
+          backend=be, sharded=ds is not None,
+          tallies={"converts": 1, "weight_converts": int(weight)})
+    return out
 
 
 def matmul(profile, a_res, b_res, *, backend: str | None = None):
@@ -401,14 +545,19 @@ def matmul(profile, a_res, b_res, *, backend: str | None = None):
     be = _FUSED_TO_UNFUSED.get(be, be)
     ds, p = _digit_ctx(profile)
     if ds is not None:
-        return _sharded_matmul(p, a_res, b_res, ds)
-    if be == "reference":
+        out = _sharded_matmul(p, a_res, b_res, ds)
+    elif be == "reference":
         from repro.core.rns_matmul import rns_matmul_res
 
-        return rns_matmul_res(profile, a_res, b_res)
-    from repro.kernels.rns_matmul.ops import rns_matmul
+        out = rns_matmul_res(profile, a_res, b_res)
+    else:
+        from repro.kernels.rns_matmul.ops import rns_matmul
 
-    return rns_matmul(profile, a_res, b_res, interpret=_interpret_for(be))
+        out = rns_matmul(profile, a_res, b_res, interpret=_interpret_for(be))
+    _emit("matmul", out, (a_res, b_res), profile=_prof_name(profile),
+          contract_dim=int(jnp.shape(a_res)[-1]), backend=be,
+          sharded=ds is not None, tallies={"matmuls": 1})
+    return out
 
 
 def normalize(profile, res, *, inv_scale: float = 1.0,
@@ -426,24 +575,31 @@ def normalize(profile, res, *, inv_scale: float = 1.0,
     be = _FUSED_TO_UNFUSED.get(be, be)
     ds, p = _digit_ctx(profile)
     if ds is not None:
-        return _sharded_normalize(p, res, inv_scale, dtype, ds)
-    # the Pallas kernel reconstructs unscaled values; scales outside the
-    # float32 range (deep M_f^frac_exp deferral) would under/overflow the
-    # post-multiply, so those decodes take the reference path — visibly
-    # (the fallback counter), not masquerading as a pallas op
-    if be != "reference" and not _inv_scale_in_f32(inv_scale):
-        _tally("fallbacks")
-        be = "reference"
-    if be == "reference":
-        from repro.core import mrc
+        out = _sharded_normalize(p, res, inv_scale, dtype, ds)
+    else:
+        # the Pallas kernel reconstructs unscaled values; scales outside
+        # the float32 range (deep M_f^frac_exp deferral) would under/
+        # overflow the post-multiply, so those decodes take the reference
+        # path — visibly (the fallback counter), not masquerading as a
+        # pallas op
+        if be != "reference" and not _inv_scale_in_f32(inv_scale):
+            _tally_fallback("inv_scale outside float32 range")
+            be = "reference"
+        if be == "reference":
+            from repro.core import mrc
 
-        return mrc.decode_float(profile, res, inv_scale=inv_scale, dtype=dtype)
-    from repro.kernels.rns_normalize.ops import rns_normalize
+            out = mrc.decode_float(profile, res, inv_scale=inv_scale,
+                                   dtype=dtype)
+        else:
+            from repro.kernels.rns_normalize.ops import rns_normalize
 
-    out = rns_normalize(profile, res, interpret=_interpret_for(be))
-    if inv_scale != 1.0:
-        out = out * jnp.asarray(inv_scale, out.dtype)
-    return out.astype(dtype)
+            out = rns_normalize(profile, res, interpret=_interpret_for(be))
+            if inv_scale != 1.0:
+                out = out * jnp.asarray(inv_scale, out.dtype)
+            out = out.astype(dtype)
+    _emit("normalize", out, (res,), profile=_prof_name(profile), backend=be,
+          sharded=ds is not None, tallies={"normalizes": 1})
+    return out
 
 
 # ------------------------------------------------- fused composites ----
@@ -485,7 +641,7 @@ def fused_encode_matmul(profile, x, scale, w_res, *, bits: int = 16,
         p = _get_p(profile)
     fuse = ds is None and be in _FUSED_TO_UNFUSED
     if fuse and not _fused_scale_ok(x, scale):
-        _tally("fallbacks")
+        _tally_fallback("non-row-foldable scale")
         fuse = False
     if not fuse:
         ub = _FUSED_TO_UNFUSED.get(be, be)
@@ -496,8 +652,12 @@ def fused_encode_matmul(profile, x, scale, w_res, *, bits: int = 16,
     _tally("fused")
     from repro.kernels.rns_fused.ops import rns_fused_encode_matmul
 
-    return rns_fused_encode_matmul(p, x, scale, w_res, bits=bits,
-                                   interpret=_interpret_for(be))
+    out = rns_fused_encode_matmul(p, x, scale, w_res, bits=bits,
+                                  interpret=_interpret_for(be))
+    _emit("fused_encode_matmul", out, (x, w_res), profile=p.name, bits=bits,
+          contract_dim=int(jnp.shape(x)[-1]), backend=be,
+          tallies={"converts": 1, "matmuls": 1, "fused": 1})
+    return out
 
 
 def fused_matmul_normalize(profile, a_res, b_res, *, inv_scale: float = 1.0,
@@ -529,7 +689,11 @@ def fused_matmul_normalize(profile, a_res, b_res, *, inv_scale: float = 1.0,
                                      interpret=_interpret_for(be))
     if inv_scale != 1.0:
         out = out * jnp.asarray(inv_scale, out.dtype)
-    return out.astype(dtype)
+    out = out.astype(dtype)
+    _emit("fused_matmul_normalize", out, (a_res, b_res), profile=p.name,
+          contract_dim=int(jnp.shape(a_res)[-1]), backend=be,
+          tallies={"matmuls": 1, "normalizes": 1, "fused": 1})
+    return out
 
 
 def fused_dot(profile, x, scale, w_res, *, bits: int = 16,
@@ -551,7 +715,7 @@ def fused_dot(profile, x, scale, w_res, *, bits: int = 16,
         p = _get_p(profile)
     fuse = ds is None and be in _FUSED_TO_UNFUSED
     if fuse and not _fused_scale_ok(x, scale):
-        _tally("fallbacks")
+        _tally_fallback("non-row-foldable scale")
         fuse = False
     fuse = fuse and _inv_scale_in_f32(inv_scale)   # normalize() tallies
     if not fuse:
@@ -570,4 +734,10 @@ def fused_dot(profile, x, scale, w_res, *, bits: int = 16,
                         interpret=_interpret_for(be))
     if inv_scale != 1.0:
         out = out * jnp.asarray(inv_scale, out.dtype)
-    return out.astype(dtype)
+    out = out.astype(dtype)
+    _emit("fused_dot", out, (x, w_res), profile=p.name, bits=bits,
+          contract_dim=int(jnp.shape(x)[-1]), backend=be,
+          shared_encode=shared_encode,
+          tallies={"converts": 0 if shared_encode else 1, "matmuls": 1,
+                   "normalizes": 1, "fused": 1})
+    return out

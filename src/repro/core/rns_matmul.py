@@ -304,12 +304,13 @@ def rns_resident_dot(x, w_res, cfg: RnsDotConfig, *, bits: int | None = None):
     this in the STE custom_vjps); ``w_res.digits`` are integers, so no
     gradient ever flows through them.
     """
-    from repro.core.tensor import _encode_out_bits
+    from repro.core.tensor import _annotate, _encode_out_bits
 
     cfg = _for_resident(cfg, w_res)
     qa = cfg.qx if bits is None else bits
     p = get_profile(cfg.profile)
     _encode_out_bits(p, qa, w_res, x.shape[-1])     # raises on overflow
+    _annotate(w_res, "weight")
     be = cfg.resolved_backend()
     sx = absmax_scale(x, qa)
     if _fused_path(cfg, be):
@@ -329,7 +330,7 @@ def rns_resident_multi_dot(x, ws_res: tuple, cfg: RnsDotConfig):
     grids and scale algebra, zero weight conversions.  Forward-only, like
     :func:`rns_resident_dot`.
     """
-    from repro.core.tensor import _encode_out_bits
+    from repro.core.tensor import _annotate, _encode_out_bits
 
     cfg = _for_resident(cfg, ws_res[0])
     p = get_profile(cfg.profile)
@@ -338,6 +339,7 @@ def rns_resident_multi_dot(x, ws_res: tuple, cfg: RnsDotConfig):
             raise ValueError("resident fan-out weights must share a profile "
                              "(one shared conversion of x feeds them all)")
         _encode_out_bits(p, cfg.qx, w_res, x.shape[-1])
+        _annotate(w_res, "weight")
     be = cfg.resolved_backend()
     sx = absmax_scale(x, cfg.qx)
     if _fused_path(cfg, be):

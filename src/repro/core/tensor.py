@@ -35,6 +35,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dispatch
 from repro.core.moduli import RnsProfile, get_profile
@@ -57,11 +58,29 @@ __all__ = [
     "rt_dot",
     "matmul_out_bits",
     "needs_renormalize",
+    "ledger_limit_bits",
+    "dot_out_bits",
 ]
 
 #: headroom (bits) kept below the profile's guaranteed signed range when
 #: deciding whether a deferred op still fits exactly.
 _SAFETY_BITS = 1.0
+
+
+def ledger_limit_bits(profile) -> float:
+    """THE overflow threshold: every ledger decision in the repo — runtime
+    (``needs_renormalize``, ``_matmul_ledger``, ``headroom_bits``) and
+    static (``repro.analysis.ledger_audit``) — compares ``log2|X|`` bounds
+    against this one number, ``signed_bits - _SAFETY_BITS``."""
+    p = get_profile(profile) if isinstance(profile, str) else profile
+    return p.signed_bits - _SAFETY_BITS
+
+
+def dot_out_bits(a_bits: float, w_bits: float, contract_dim: int) -> float:
+    """Worst-case ``log2|X|`` of a ``contract_dim``-term product summation
+    of ``a_bits``- and ``w_bits``-bit operands — the ONE growth formula
+    shared by the runtime ledger and the static auditor."""
+    return a_bits + w_bits + math.log2(max(contract_dim, 1))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -108,7 +127,7 @@ class RnsTensor:
 
     def headroom_bits(self) -> float:
         """Exactness margin left before |X| could exceed M/2."""
-        return self.rns_profile.signed_bits - _SAFETY_BITS - self.mag_bits
+        return ledger_limit_bits(self.rns_profile) - self.mag_bits
 
     def astype_digits(self, dtype):
         return dataclasses.replace(self, digits=self.digits.astype(dtype))
@@ -116,6 +135,19 @@ class RnsTensor:
 
 def _digits32(rt: RnsTensor) -> jax.Array:
     return rt.digits.astype(jnp.int32)
+
+
+def _annotate(rt: RnsTensor, role: str, arr=None, base=None):
+    """Report ``rt``'s ledger state to an installed analysis recorder
+    (no-op otherwise).  ``arr`` overrides the annotated array when the
+    digits were cast/viewed on the way into dispatch; ``base`` links the
+    cast back to the original digits object for dataflow chaining."""
+    if not dispatch.recording():
+        return
+    extra = {} if base is None else {"base": base}
+    dispatch.annotate_digits(arr if arr is not None else rt.digits,
+                             profile=rt.profile, mag_bits=rt.mag_bits,
+                             frac_exp=rt.frac_exp, role=role, **extra)
 
 
 # ------------------------------------------------------------ mesh layout --
@@ -189,16 +221,43 @@ def rt_encode(x, profile, *, bits: int = 16, scale=None,
                      float(bits - 1))
 
 
+def _concrete_int_mag_bits(v) -> float | None:
+    """``log2(max|v|)`` when ``v`` is concrete (python int / numpy scalar
+    or array / committed jax array), None when traced."""
+    if isinstance(v, jax.core.Tracer):
+        return None
+    try:
+        m = int(np.max(np.abs(np.asarray(v))))
+    except (TypeError, ValueError, jax.errors.TracerArrayConversionError):
+        return None
+    return math.log2(m) if m > 1 else 0.0
+
+
 def rt_encode_int(v, profile, *, mag_bits: float | None = None) -> RnsTensor:
-    """Encode an int32 tensor exactly (scale 1; oracle-friendly)."""
+    """Encode an int32 tensor exactly (scale 1; oracle-friendly).
+
+    The ledger entry (``mag_bits``) defaults to the *actual* bound
+    ``log2(max|v|)`` when ``v`` is concrete — not a blanket int32 worst
+    case — and raises if that bound escapes the profile's guaranteed
+    signed range (the old default silently encoded unrepresentable
+    values as garbage residues).  Traced ``v`` falls back to the int32
+    payload bound clamped to the profile.
+    """
     from repro.core.rns import encode_int32
 
     p = get_profile(profile) if isinstance(profile, str) else profile
+    if mag_bits is None:
+        mag_bits = _concrete_int_mag_bits(v)
+        if mag_bits is None:
+            mag_bits = min(31.0, float(p.signed_bits))
+        elif mag_bits > p.signed_bits:
+            raise ValueError(
+                f"profile {p.name} cannot represent max|v| = 2^"
+                f"{mag_bits:.1f} exactly (signed range is "
+                f"{p.signed_bits:.1f} bits); use a wider profile")
     digits = encode_int32(p, v)
     if p.int8_safe:
         digits = digits.astype(jnp.int8)
-    if mag_bits is None:
-        mag_bits = 31.0
     return RnsTensor(digits, jnp.float32(1.0), p.name, float(mag_bits))
 
 
@@ -209,7 +268,9 @@ def rt_decode(rt: RnsTensor, *, backend: str | None = None,
     of deferred ops that produced ``rt``."""
     p = rt.rns_profile
     inv = 1.0 / float(p.M_f) ** rt.frac_exp if rt.frac_exp else 1.0
-    y = dispatch.normalize(p.name, _digits32(rt), inv_scale=inv,
+    d32 = _digits32(rt)
+    _annotate(rt, "decode_in", arr=d32, base=rt.digits)
+    y = dispatch.normalize(p.name, d32, inv_scale=inv,
                            backend=backend, dtype=dtype)
     return y / rt.scale.astype(dtype)
 
@@ -217,12 +278,12 @@ def rt_decode(rt: RnsTensor, *, backend: str | None = None,
 # ------------------------------------------------------- deferral ledger --
 def matmul_out_bits(a: RnsTensor, w: RnsTensor, contract_dim: int) -> float:
     """Worst-case log2|X| of a product summation of ``a`` and ``w``."""
-    return a.mag_bits + w.mag_bits + math.log2(max(contract_dim, 1))
+    return dot_out_bits(a.mag_bits, w.mag_bits, contract_dim)
 
 
 def needs_renormalize(a: RnsTensor, extra_bits: float) -> bool:
     """Would growing ``a`` by ``extra_bits`` overflow the exact range?"""
-    return a.mag_bits + extra_bits > a.rns_profile.signed_bits - _SAFETY_BITS
+    return a.mag_bits + extra_bits > ledger_limit_bits(a.rns_profile)
 
 
 def rt_renormalize(rt: RnsTensor, *, bits: int = 16,
@@ -233,6 +294,8 @@ def rt_renormalize(rt: RnsTensor, *, bits: int = 16,
     the magnitude ledger says the next PAC op would overflow — this is the
     "bookkeeping decides when normalization is actually required" point.
     """
+    dispatch.record_op("renormalize", None, (rt.digits,), profile=rt.profile,
+                       in_bits=rt.mag_bits, bits=bits, tallies={})
     y = rt_decode(rt, backend=backend)
     return rt_encode(y, rt.profile, bits=bits, backend=backend)
 
@@ -251,9 +314,13 @@ def rt_matmul(a: RnsTensor, w: RnsTensor, *, backend: str | None = None,
         raise ValueError(f"profile mismatch: {a.profile} vs {w.profile}")
     a = _matmul_ledger(a, w, backend=backend, renorm_bits=renorm_bits)
     D = a.shape[-1]
+    _annotate(a, "activation")
+    _annotate(w, "weight")
     digits = dispatch.matmul(a.profile, a.digits, w.digits, backend=backend)
-    return RnsTensor(digits, a.scale * w.scale, a.profile,
-                     matmul_out_bits(a, w, D), a.frac_exp + w.frac_exp)
+    out = RnsTensor(digits, a.scale * w.scale, a.profile,
+                    matmul_out_bits(a, w, D), a.frac_exp + w.frac_exp)
+    _annotate(out, "out", arr=digits)
+    return out
 
 
 def _matmul_ledger(a: RnsTensor, w: RnsTensor, *, backend, renorm_bits):
@@ -261,7 +328,7 @@ def _matmul_ledger(a: RnsTensor, w: RnsTensor, *, backend, renorm_bits):
     product summation would escape the exact range, raise if even that
     cannot fit."""
     D = a.shape[-1]
-    lim = a.rns_profile.signed_bits - _SAFETY_BITS
+    lim = ledger_limit_bits(a.rns_profile)
     if matmul_out_bits(a, w, D) > lim:
         a = rt_renormalize(a, bits=renorm_bits, backend=backend)
         if matmul_out_bits(a, w, D) > lim:
@@ -277,8 +344,8 @@ def _encode_out_bits(p, bits: int, w: RnsTensor, D: int) -> float:
     """Ledger bound of encode(x, bits) @ w — ONE home for the check the
     fused entry points share (same formula as matmul_out_bits on a fresh
     ``bits``-grid encode).  Raises if the exact range would overflow."""
-    out_bits = float(bits - 1) + w.mag_bits + math.log2(max(D, 1))
-    if out_bits > p.signed_bits - _SAFETY_BITS:
+    out_bits = dot_out_bits(float(bits - 1), w.mag_bits, D)
+    if out_bits > ledger_limit_bits(p):
         raise ValueError(
             f"profile {p.name} cannot hold an exact {D}-term product "
             f"summation of {bits - 1}+{w.mag_bits:.0f}-bit operands; use a "
@@ -299,10 +366,13 @@ def rt_encode_matmul(x, w: RnsTensor, *, bits: int = 16, scale=None,
     if scale is None:
         scale = absmax_scale(x, bits)
     out_bits = _encode_out_bits(p, bits, w, x.shape[-1])
+    _annotate(w, "weight")
     digits = dispatch.fused_encode_matmul(p.name, x, scale, w.digits,
                                           bits=bits, backend=backend)
-    return RnsTensor(digits, jnp.asarray(scale, jnp.float32) * w.scale,
-                     p.name, out_bits, w.frac_exp)
+    out = RnsTensor(digits, jnp.asarray(scale, jnp.float32) * w.scale,
+                    p.name, out_bits, w.frac_exp)
+    _annotate(out, "out", arr=digits)
+    return out
 
 
 def rt_matmul_decode(a: RnsTensor, w: RnsTensor, *, backend: str | None = None,
@@ -316,6 +386,8 @@ def rt_matmul_decode(a: RnsTensor, w: RnsTensor, *, backend: str | None = None,
     if a.profile != w.profile:
         raise ValueError(f"profile mismatch: {a.profile} vs {w.profile}")
     a = _matmul_ledger(a, w, backend=backend, renorm_bits=renorm_bits)
+    _annotate(a, "activation")
+    _annotate(w, "weight")
     p = a.rns_profile
     fe = a.frac_exp + w.frac_exp
     inv = 1.0 / float(p.M_f) ** fe if fe else 1.0
@@ -340,6 +412,7 @@ def rt_dot(x, w: RnsTensor, *, bits: int = 16, scale=None,
     if scale is None:
         scale = absmax_scale(x, bits)
     _encode_out_bits(p, bits, w, x.shape[-1])   # raises on overflow
+    _annotate(w, "weight")
     inv = 1.0 / float(p.M_f) ** w.frac_exp if w.frac_exp else 1.0
     y = dispatch.fused_dot(p.name, x, scale, w.digits, bits=bits,
                            inv_scale=inv, backend=backend, dtype=dtype,
@@ -360,9 +433,16 @@ def rt_mul(a: RnsTensor, b: RnsTensor, *, backend: str | None = None,
             raise ValueError(
                 f"profile {a.profile} cannot hold an exact elementwise "
                 f"product of {a.mag_bits:.0f}+{b.mag_bits:.0f}-bit operands")
-    digits = rns_mul(a.profile, _digits32(a), _digits32(b))
-    return RnsTensor(digits, a.scale * b.scale, a.profile,
-                     a.mag_bits + b.mag_bits, a.frac_exp + b.frac_exp)
+    da, db = _digits32(a), _digits32(b)
+    _annotate(a, "mul_in", arr=da, base=a.digits)
+    _annotate(b, "mul_in", arr=db, base=b.digits)
+    digits = rns_mul(a.profile, da, db)
+    out = RnsTensor(digits, a.scale * b.scale, a.profile,
+                    a.mag_bits + b.mag_bits, a.frac_exp + b.frac_exp)
+    dispatch.record_op("pac_mul", digits, (da, db), profile=a.profile,
+                       tallies={})
+    _annotate(out, "out", arr=digits)
+    return out
 
 
 def rt_add(a: RnsTensor, b: RnsTensor) -> RnsTensor:
@@ -373,6 +453,13 @@ def rt_add(a: RnsTensor, b: RnsTensor) -> RnsTensor:
 
     if a.profile != b.profile or a.frac_exp != b.frac_exp:
         raise ValueError("rt_add operands must share profile and frac_exp")
-    digits = rns_add(a.profile, _digits32(a), _digits32(b))
-    return RnsTensor(digits, a.scale, a.profile,
-                     max(a.mag_bits, b.mag_bits) + 1.0, a.frac_exp)
+    da, db = _digits32(a), _digits32(b)
+    _annotate(a, "add_in", arr=da, base=a.digits)
+    _annotate(b, "add_in", arr=db, base=b.digits)
+    digits = rns_add(a.profile, da, db)
+    out = RnsTensor(digits, a.scale, a.profile,
+                    max(a.mag_bits, b.mag_bits) + 1.0, a.frac_exp)
+    dispatch.record_op("pac_add", digits, (da, db), profile=a.profile,
+                       tallies={})
+    _annotate(out, "out", arr=digits)
+    return out

@@ -23,6 +23,9 @@ Cache file format (versioned)::
                   "us": 123.4}}}
 """
 
+# lint-ok-file: host-in-jit (the autotuner times candidate tiles on the
+# host BY DESIGN; get_blocks keeps measurement off the traced hot path)
+
 from __future__ import annotations
 
 import json

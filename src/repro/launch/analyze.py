@@ -1,0 +1,284 @@
+"""Static analysis CLI: exactness audits and roofline cell analysis.
+
+Two modes behind one entry point (this module absorbed the seed tools
+``launch/analyze_cell.py`` and ``launch/hlo_analysis.py``):
+
+``--audit``
+    Run the static RNS exactness auditor (``repro.analysis``) over a
+    serving configuration WITHOUT running the model: build the engine,
+    trace every jitted phase abstractly, propagate worst-case magnitude
+    bounds, and print the proof (or the named counterexample) plus the
+    per-site headroom table.  ``--json`` writes the machine-readable
+    :class:`repro.analysis.AuditReport`::
+
+        PYTHONPATH=src python -m repro.launch.analyze --audit \
+            --arch smollm-135m --rns rns9 --resident-weights \
+            --chunked-prefill --json artifacts/audit.json
+
+``--cell``
+    Hillclimb harness: lower ONE (arch, shape, mesh) cell with config
+    overrides and print the roofline terms.  Each invocation is one
+    hypothesis->measure iteration (EXPERIMENTS.md §Perf)::
+
+        PYTHONPATH=src python -m repro.launch.analyze --cell \
+            --arch deepseek-v2-236b --shape train_4k \
+            --set moe.dispatch=gather --tag moe_gather
+
+Module level stays stdlib-only: ``--cell`` must install XLA_FLAGS
+(512 placeholder devices) BEFORE the first jax import, so all heavy
+imports happen inside the mode handlers after arg parsing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+
+# ------------------------------------------------- HLO collective stats ---
+# Pure-regex extraction from post-SPMD HLO text (moved here from the seed
+# launch/hlo_analysis.py).  ``compiled.as_text()`` shapes are PER-DEVICE
+# (post-partitioning) — exactly the per-chip wire-traffic basis the
+# roofline needs; cost_analysis does not report collective bytes, so we
+# parse the ops ourselves.  Wire-byte model per op (ring algorithms,
+# n-1/n ~ 1): all-reduce 2x bytes (reduce-scatter + all-gather phases),
+# all-gather / reduce-scatter / all-to-all / collective-permute 1x.
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\w+\[[^\]]*\](?:\{[^}]*\})?))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\("
+)
+
+_MULT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-op-type counts and wire bytes (per device) from HLO text."""
+    out: dict[str, dict] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        raw = _shape_bytes(shape_str)
+        rec = out.setdefault(op, {"count": 0, "bytes": 0, "wire_bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += raw
+        rec["wire_bytes"] += raw * _MULT[op]
+    out["total_wire_bytes"] = sum(
+        v["wire_bytes"] for k, v in out.items() if isinstance(v, dict))
+    return out
+
+
+# ------------------------------------------------------------ --audit ----
+def _run_audit(args) -> int:
+    import dataclasses
+
+    import jax
+
+    from repro.analysis.ledger_audit import audit_serve
+    from repro.configs.base import get_config
+    from repro.core.rns_matmul import RnsDotConfig
+    from repro.models import model as M
+    from repro.serve.engine import ServeConfig
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.rns:
+        cfg = dataclasses.replace(
+            cfg, rns=RnsDotConfig(profile=args.rns, qx=args.qx, qw=args.qw,
+                                  defer=args.defer),
+            rns_targets=args.rns_targets)
+    if cfg.rns is None:
+        print("nothing to audit: config has no RNS datapath "
+              "(pass --rns PROFILE)")
+        return 2
+    params = M.init_model(jax.random.PRNGKey(0), cfg)[0]
+    scfg = ServeConfig(
+        max_cache=args.max_cache, page_size=args.page_size,
+        max_seqs=args.max_seqs, rns_backend=args.rns_backend,
+        resident_weights=args.resident_weights,
+        per_layer_profiles=args.per_layer_profiles,
+        prefix_cache=args.prefix_cache, spec_decode=args.spec_decode,
+        spec_k=args.spec_k, chunked_prefill=args.chunked_prefill,
+        token_budget=args.token_budget, chunk_size=args.chunk_size)
+    report = audit_serve(params, cfg, scfg)
+    print(report.table())
+    if args.json:
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as f:
+            f.write(report.to_json())
+        print(f"\nwrote {args.json}")
+    return 0 if report.ok else 1
+
+
+# ------------------------------------------------------------- --cell ----
+# Single-pod roofline constants (per device): int8 path doubles MXU rate.
+PEAK = 197e12
+PEAK_INT8 = 394e12
+HBM = 819e9
+LINK = 50e9
+
+
+def apply_overrides(cfg, sets):
+    """``a.b=json_value`` dotted dataclass overrides (depth <= 2)."""
+    import dataclasses
+
+    for kv in sets:
+        key, val = kv.split("=", 1)
+        parts = key.split(".")
+        try:
+            val = json.loads(val)
+        except json.JSONDecodeError:
+            pass
+        if len(parts) == 1:
+            cfg = dataclasses.replace(cfg, **{parts[0]: val})
+        else:
+            sub = getattr(cfg, parts[0])
+            sub = dataclasses.replace(sub, **{parts[1]: val})
+            cfg = dataclasses.replace(cfg, **{parts[0]: sub})
+    return cfg
+
+
+def _run_cell(args) -> int:
+    # 512 placeholder devices BEFORE jax loads (this is why --cell parses
+    # args first and imports lazily — see module docstring)
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                               + os.environ.get("XLA_FLAGS", ""))
+    import dataclasses
+    import warnings
+
+    warnings.filterwarnings("ignore")
+
+    from repro.configs.base import SHAPES, get_config
+    from repro.launch import specs as SP
+    from repro.launch.dryrun import analyze, lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    os.makedirs(args.out, exist_ok=True)
+    cfg = SP.with_shape_overrides(get_config(args.arch), rns=bool(args.rns))
+    if args.rns and (args.rns != "rns9" or args.rns_slice_parallel):
+        from repro.core.rns_matmul import RnsDotConfig
+
+        cfg = dataclasses.replace(
+            cfg, rns=RnsDotConfig(profile=args.rns, qx=16, qw=16,
+                                  slice_parallel=args.rns_slice_parallel))
+    cfg = apply_overrides(cfg, args.set)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    lowered, compiled, meta = lower_cell(cfg, shape, mesh)
+    rec = analyze(cfg, shape, args.mesh, compiled, meta)
+    if args.save_hlo:
+        import gzip
+
+        with gzip.open(args.save_hlo, "wt") as f:
+            f.write(compiled.as_text())
+
+    t_c = rec["flops_per_device"] / (PEAK_INT8 if args.rns else PEAK)
+    t_v = rec["vflops_per_device"] / (PEAK / 8)
+    t_m = rec["hbm_write_bytes"] / HBM
+    t_x = rec["collectives"]["total_wire_bytes"] / LINK
+    terms = {"compute": max(t_c, t_v), "memory": t_m, "collective": t_x}
+    dom = max(terms, key=terms.get)
+    print(f"\n=== {args.arch}/{args.shape}/{args.mesh} [{args.tag}] "
+          f"{'RNS' if args.rns else ''} {' '.join(args.set)}")
+    print(f"compute {t_c:10.3f}s  vpu {t_v:8.3f}s  memory {t_m:10.3f}s  "
+          f"collective {t_x:10.3f}s   DOMINANT={dom}")
+    print(f"flops/dev {rec['flops_per_device']:.3e}  "
+          f"hbm_w {rec['hbm_write_bytes']/2**40:.2f} TiB  "
+          f"wire {rec['collectives']['total_wire_bytes']/2**40:.2f} TiB  "
+          f"temp {rec['memory']['temp_bytes']/2**30:.1f} GiB  "
+          f"compile {meta['compile_s']:.0f}s")
+    for k, v in rec["collectives"].items():
+        if isinstance(v, dict):
+            print(f"  {k:20s} n={v['count']:6d} "
+                  f"wire={v['wire_bytes']/2**40:.3f} TiB")
+    tagf = f"{args.arch}__{args.shape}__{args.mesh}__{args.tag}.json"
+    with open(os.path.join(args.out, tagf), "w") as f:
+        json.dump(rec, f, indent=1)
+    return 0
+
+
+# ---------------------------------------------------------------- main ----
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="static analysis: --audit (RNS exactness proof) or "
+                    "--cell (roofline lowering)")
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument("--audit", action="store_true",
+                      help="prove the RNS datapath overflow-free for a "
+                           "serving config (no model execution)")
+    mode.add_argument("--cell", action="store_true",
+                      help="lower one (arch, shape, mesh) cell and print "
+                           "roofline terms")
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--rns", metavar="PROFILE", default=None,
+                    help="RNS moduli profile (e.g. rns9); --cell keeps its "
+                         "legacy qx/qw=16, --audit uses --qx/--qw")
+    # audit-mode flags (a subset of launch/serve.py's ServeConfig surface)
+    ap.add_argument("--smoke", action="store_true", default=True,
+                    help="smoke-size the model config (default)")
+    ap.add_argument("--full", dest="smoke", action="store_false",
+                    help="audit the full-size config")
+    ap.add_argument("--rns-targets", default="mlp")
+    ap.add_argument("--qx", type=int, default=8)
+    ap.add_argument("--qw", type=int, default=8)
+    ap.add_argument("--defer", action="store_true",
+                    help="residue-domain MLP chaining")
+    ap.add_argument("--rns-backend", default=None)
+    ap.add_argument("--max-cache", type=int, default=64)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--max-seqs", type=int, default=2)
+    ap.add_argument("--resident-weights", action="store_true")
+    ap.add_argument("--per-layer-profiles", action="store_true")
+    ap.add_argument("--prefix-cache", action="store_true")
+    ap.add_argument("--spec-decode", action="store_true")
+    ap.add_argument("--spec-k", type=int, default=3)
+    ap.add_argument("--chunked-prefill", action="store_true")
+    ap.add_argument("--token-budget", type=int, default=16)
+    ap.add_argument("--chunk-size", type=int, default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the AuditReport JSON here")
+    # cell-mode flags (the legacy analyze_cell surface)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--rns-slice-parallel", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override, e.g. moe.dispatch=gather")
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--save-hlo", default=None)
+    ap.add_argument("--out", default="artifacts/perf")
+    args = ap.parse_args(argv)
+    return _run_cell(args) if args.cell else _run_audit(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -35,7 +35,7 @@ from repro.configs.base import (  # noqa: E402
     list_archs,
 )
 from repro.launch import specs as SP  # noqa: E402
-from repro.launch.hlo_analysis import collective_stats  # noqa: E402
+from repro.launch.analyze import collective_stats  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import model as M  # noqa: E402
 from repro.optim.adamw import AdamWConfig  # noqa: E402

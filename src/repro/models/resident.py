@@ -53,7 +53,7 @@ import jax.numpy as jnp
 from repro.core import dispatch
 from repro.core.moduli import get_profile, narrowest_profile
 from repro.core.quantize import absmax_scale, quantize_with_scale
-from repro.core.tensor import RnsTensor
+from repro.core.tensor import _SAFETY_BITS, RnsTensor
 
 __all__ = [
     "encode_resident",
@@ -63,9 +63,9 @@ __all__ = [
     "resident_profiles",
 ]
 
-#: must match core/tensor._SAFETY_BITS — the ledger headroom the encode
-#: side has to leave so rt_* never renormalizes on a selected profile.
-_SAFETY_BITS = 1.0
+# _SAFETY_BITS comes from core/tensor — ONE ledger headroom constant, so
+# the encode-side profile selection and the rt_* runtime checks (and the
+# static auditor) can never drift apart.
 
 _MLP_WEIGHTS = ("wi", "wg", "wo")
 

@@ -54,6 +54,7 @@ def init_mamba(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32):
         ks[3], dt_rank, d_in, axes=(None, "mlp"), bias=True, dtype=dtype)
     # init dt bias so softplus(dt) ~ [1e-3, 1e-1]
     p["dt_proj"]["b"] = jnp.asarray(
+        # lint-ok: host-in-jit (seeded eager param init, never under jit)
         np.log(np.expm1(np.exp(np.random.default_rng(0).uniform(
             np.log(1e-3), np.log(1e-1), d_in)))), dtype)
     a = np.tile(np.arange(1, cfg.d_state + 1, dtype=np.float32), (d_in, 1))

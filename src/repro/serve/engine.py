@@ -114,6 +114,12 @@ class ServeConfig:
     token_budget: int = 64           # packed lanes per mixed step
     chunk_size: int | None = None    # max prefill tokens per row per step
     prefill_reserve: int | None = None   # lanes reserved for chunks
+    # exactness audit at engine build: run the static magnitude-ledger
+    # auditor (repro.analysis.ledger_audit) over every jitted phase this
+    # config will serve and REFUSE to construct an engine whose RNS
+    # datapath cannot be proven overflow-free.  The report is kept on
+    # ``engine.audit_report``.  No-op for float configs (cfg.rns None).
+    audit: bool = False
 
     def __post_init__(self):
         if self.eos_id < -1:
@@ -226,6 +232,26 @@ def _maybe_resident(params, cfg, scfg: ServeConfig):
                            mesh=scfg.mesh, digit_axis=scfg.digit_axis)
 
 
+def _maybe_audit(engine):
+    """Build-time exactness audit (``ServeConfig(audit=True)``).
+
+    Runs the static auditor over the engine's own ``_trace_specs`` and
+    refuses to hand back an engine whose RNS datapath it cannot prove
+    overflow-free — the failed :class:`repro.analysis.AuditReport`
+    summary (naming the phase, layer, and op) IS the exception text.
+    Float configs have nothing to prove and skip the trace entirely.
+    """
+    if not engine.scfg.audit or engine.cfg.rns is None:
+        return None
+    from repro.analysis.ledger_audit import audit_engine
+
+    report = audit_engine(engine)
+    if not report.ok:
+        raise ValueError("ServeConfig(audit=True): exactness audit "
+                         "failed\n" + report.summary())
+    return report
+
+
 class Engine:
     """Bucketed batching: equal-length prompts, batch runs to completion."""
 
@@ -240,6 +266,7 @@ class Engine:
         self._decode = _with_digit_ctx(jax.jit(
             lambda params, tok, cache: M.decode_step(
                 params, self.cfg, tok, cache)), scfg)
+        self.audit_report = _maybe_audit(self)
 
     def rns_op_counts(self, B: int = 1, T: int = 8) -> dispatch.OpCounts:
         """Structural RNS primitive counts for one [B, T] prefill trace."""
@@ -247,6 +274,20 @@ class Engine:
         return dispatch.trace_op_counts(
             lambda p, b: M.prefill(p, self.cfg, b, S_max=self.scfg.max_cache),
             self.params, batch)
+
+    def _trace_specs(self) -> dict:
+        """``{phase: (fn, args)}`` for the static exactness auditor
+        (repro.analysis.ledger_audit).  The bucketed engine serves one
+        compound program — prefill then decode on the returned cache —
+        so one combined phase covers both jits."""
+        def prefill_decode(p, t):
+            logits, cache = M.prefill(p, self.cfg, {"tokens": t},
+                                      S_max=self.scfg.max_cache)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            return M.decode_step(p, self.cfg, tok, cache)
+
+        return {"prefill+decode": (
+            prefill_decode, (self.params, jnp.zeros((1, 8), jnp.int32)))}
 
     def generate(self, prompts: np.ndarray, frontend: np.ndarray | None = None,
                  max_new: int | None = None):
@@ -366,6 +407,7 @@ class ContinuousEngine:
         self.latencies: dict[int, float] = {}    # submit -> finish, seconds
         self.ttfts: dict[int, float] = {}        # submit -> first token
         self._op_cache: dict[str, dispatch.OpCounts] = {}
+        self.audit_report = _maybe_audit(self)
 
     # ----------------------------------------------------------- ingest ---
     def _ingest_fn(self, cache, ys, block_row):
@@ -527,53 +569,57 @@ class ContinuousEngine:
         self.sched.complete(seq)
         self._tables_dirty = True
 
+    def _trace_specs(self) -> dict:
+        """``{phase: (fn, args)}`` — every jitted shape this config serves.
+
+        ONE source of truth shared by the per-step op counters (traced
+        through ``dispatch.trace_op_counts``) and the static exactness
+        auditor (``repro.analysis.ledger_audit.audit_engine``): whatever
+        the engine would actually jit is exactly what gets audited.  The
+        closures read ``self.cfg`` dynamically, so the auditor can probe
+        policy variants (e.g. defer=True) by swapping it.
+        """
+        bt, lengths, active, last = self.sched.tables()
+        cache = kv.set_tables(self.cache, bt, lengths)
+        if self.chunked:
+            # the mixed step's structure is phase-mix invariant: fixed
+            # [token_budget] lanes, one trace serves every step
+            zi = jnp.zeros((self.scfg.token_budget,), jnp.int32)
+            zb = jnp.zeros((self.scfg.token_budget,), bool)
+            return {"mixed": (
+                lambda p, t: M.mixed_step(p, self.cfg, t, zi, zi, zb,
+                                          zb, cache),
+                (self.params, zi))}
+        R = self.pcfg.max_seqs
+        if self.scfg.spec_decode:
+            # spec mode replaces the decode step with the verify step
+            decode = (
+                lambda p, t: self._verify_fn(
+                    p, t, cache, jnp.asarray(active),
+                    jnp.zeros((R,), jnp.int32)),
+                (self.params, jnp.zeros((R, self.spec_window), jnp.int32)))
+        else:
+            decode = (
+                lambda p, t: M.decode_step(p, self.cfg, t, cache,
+                                           active=jnp.asarray(active)),
+                (self.params, jnp.zeros((R, 1), jnp.int32)))
+        prefill = (
+            lambda p, t: M.prefill_ragged(
+                p, self.cfg, {"tokens": t}, jnp.ones((1,), jnp.int32)),
+            (self.params, jnp.zeros((1, self.prompt_pad), jnp.int32)))
+        return {"decode": decode, "prefill": prefill}
+
     def _rns_ops(self, n_prefills: int) -> dispatch.OpCounts:
         """Structural convert/matmul/normalize counts for this step."""
         if self.cfg.rns is None:
             return dispatch.OpCounts()
+        if not self._op_cache:
+            for name, (fn, args) in self._trace_specs().items():
+                self._op_cache[name] = dispatch.trace_op_counts(fn, *args)
         if self.chunked:
-            # the mixed step's structure is phase-mix invariant: fixed
-            # [token_budget] lanes, one trace serves every step
-            if "mixed" not in self._op_cache:
-                bt, lengths, active, last = self.sched.tables()
-                cache = kv.set_tables(self.cache, bt, lengths)
-                zi = jnp.zeros((self.scfg.token_budget,), jnp.int32)
-                zb = jnp.zeros((self.scfg.token_budget,), bool)
-                self._op_cache["mixed"] = dispatch.trace_op_counts(
-                    lambda p, t: M.mixed_step(p, self.cfg, t, zi, zi, zb,
-                                              zb, cache),
-                    self.params, zi)
             return self._op_cache["mixed"]
-        if "decode" not in self._op_cache:
-            bt, lengths, active, last = self.sched.tables()
-            cache = kv.set_tables(self.cache, bt, lengths)
-            R = self.pcfg.max_seqs
-            if self.scfg.spec_decode:
-                # spec mode replaces the decode step with the verify step
-                self._op_cache["decode"] = dispatch.trace_op_counts(
-                    lambda p, t: self._verify_fn(
-                        p, t, cache, jnp.asarray(active),
-                        jnp.zeros((R,), jnp.int32)),
-                    self.params, jnp.zeros((R, self.spec_window), jnp.int32))
-            else:
-                self._op_cache["decode"] = dispatch.trace_op_counts(
-                    lambda p, t: M.decode_step(p, self.cfg, t, cache,
-                                               active=jnp.asarray(active)),
-                    self.params, jnp.zeros((R, 1), jnp.int32))
-            self._op_cache["prefill"] = dispatch.trace_op_counts(
-                lambda p, t: M.prefill_ragged(
-                    p, self.cfg, {"tokens": t},
-                    jnp.ones((1,), jnp.int32)),
-                self.params, jnp.zeros((1, self.prompt_pad), jnp.int32))
-        d, pf = self._op_cache["decode"], self._op_cache["prefill"]
-        return dispatch.OpCounts(
-            converts=d.converts + n_prefills * pf.converts,
-            matmuls=d.matmuls + n_prefills * pf.matmuls,
-            normalizes=d.normalizes + n_prefills * pf.normalizes,
-            fused=d.fused + n_prefills * pf.fused,
-            fallbacks=d.fallbacks + n_prefills * pf.fallbacks,
-            weight_converts=(d.weight_converts
-                             + n_prefills * pf.weight_converts))
+        return self._op_cache["decode"].add(self._op_cache["prefill"],
+                                            times=n_prefills)
 
     def _decode_vanilla(self, last):
         """One [R, 1] decode for every running row; returns #new tokens."""

@@ -159,3 +159,29 @@ def test_resident_vs_reencode_token_identical(rns_model, defer):
         assert ((ops.activation_converts, ops.matmuls, ops.normalizes)
                 == (base_ops.activation_converts, base_ops.matmuls,
                     base_ops.normalizes)), extra
+
+
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_audit_predicts_runtime_counts(rns_model, scenario):
+    """The static auditor's structural predictions and the engine's traced
+    OpCounts are claims about the same program (``_trace_specs``): for
+    every serve scenario the graph-derived counts must match the traced
+    tallies, and the audited phases must be exactly the phases the step
+    counter caches."""
+    from repro.analysis.graph import COUNT_FIELDS
+    from repro.analysis.ledger_audit import audit_engine
+
+    cfg, params = rns_model
+    kw = dict(SCENARIOS[scenario]["kw"])
+    kw.setdefault("page_size", 8)
+    kw.setdefault("max_new_tokens", 3)
+    eng = ContinuousEngine(params, cfg, ServeConfig(
+        max_cache=24, rns_backend="reference", **kw))
+    report = audit_engine(eng)
+    assert report.ok, report.summary()
+    eng._rns_ops(1)                              # populate the step cache
+    assert {p.name for p in report.phases} == set(eng._op_cache)
+    for p in report.phases:
+        assert p.counts_match, (scenario, p.name)
+        traced = {f: getattr(eng._op_cache[p.name], f) for f in COUNT_FIELDS}
+        assert p.counts == traced, (scenario, p.name)

@@ -44,6 +44,21 @@ def test_architecture_doctests():
     assert results.failed == 0
 
 
+def test_analysis_doctests():
+    """The static auditor and linter are taught as runnable examples
+    (audit_fn proofs, headroom reading, lint suppression)."""
+    results = doctest.testfile(
+        str(DOCS / "analysis.md"), module_relative=False, verbose=False)
+    assert results.attempted >= 15, "analysis.md lost its examples"
+    assert results.failed == 0
+
+
+def test_analysis_cross_linked():
+    """The ledger pages point at the static pass that re-proves them."""
+    for page in ("numerics.md", "architecture.md"):
+        assert "analysis.md" in (DOCS / page).read_text(), page
+
+
 def test_architecture_references_real_resident_symbols():
     from repro.models.resident import (  # noqa: F401
         attach_resident,
