@@ -12,10 +12,13 @@
 # (benchmarks/bench_kernels.py) and writes BENCH_kernels.json — HBM bytes
 # moved and wall-clock, fused vs unfused chain, plus the recompile and
 # autotune smoke rows; ``--skip-kernels`` suppresses it.
-# ``--audit-json PATH`` runs the static exactness auditor
-# (repro.analysis.ledger_audit) over the smoke serve config and writes
-# the full AuditReport as BENCH_audit.json — the proof, headroom tables,
-# and per-site fallback tallies, tracked per commit by the CI
+# ``--audit-json PATH`` runs ALL the static auditors over the smoke
+# serve config and writes the combined reports as BENCH_audit.json —
+# the exactness proof (repro.analysis.ledger_audit: headroom tables,
+# per-site fallback tallies), the kernel legality/VMEM sweep
+# (repro.analysis.kernel_audit: every family x autotune config, plus
+# the engine's own traced launches), and the jit compile-churn proof
+# (repro.analysis.trace_audit) — tracked per commit by the CI
 # static-analysis job.
 from __future__ import annotations
 
@@ -39,8 +42,9 @@ def main() -> None:
                     help="run the fused-kernel benchmark, write its rows "
                          "as JSON (e.g. BENCH_kernels.json)")
     ap.add_argument("--audit-json", default=None, metavar="PATH",
-                    help="run the static exactness audit on the smoke "
-                         "serve config, write the AuditReport "
+                    help="run the static auditors (exactness + kernel "
+                         "legality/VMEM + trace churn) on the smoke serve "
+                         "config, write the combined reports "
                          "(e.g. BENCH_audit.json)")
     ap.add_argument("--skip-core", action="store_true",
                     help="skip the core benches (serve-only run)")
@@ -84,29 +88,56 @@ def main() -> None:
         bench_kernels.run_all(report)
         sink = rows
 
-    audit_report = None
+    audit_blob = None
     if args.audit_json:
         import dataclasses
 
         import jax
 
+        from repro.analysis.kernel_audit import (audit_all,
+                                                 audit_engine_kernels)
         from repro.analysis.ledger_audit import audit_serve
+        from repro.analysis.trace_audit import audit_traces
         from repro.configs.base import get_config
         from repro.core.rns_matmul import RnsDotConfig
         from repro.models import model as M
-        from repro.serve.engine import ServeConfig
+        from repro.serve.engine import ContinuousEngine, ServeConfig
 
         cfg = dataclasses.replace(
             get_config("smollm-135m", smoke=True),
             rns=RnsDotConfig(profile="rns9", qx=8, qw=8), rns_targets="mlp")
         params = M.init_model(jax.random.PRNGKey(0), cfg)[0]
-        audit_report = audit_serve(params, cfg, ServeConfig(
-            max_cache=24, page_size=8, max_seqs=2))
+        scfg = ServeConfig(max_cache=24, page_size=8, max_seqs=2)
+        audit_report = audit_serve(params, cfg, scfg)
         h = audit_report.min_headroom
         derived = "PROVED" if audit_report.ok else "FAILED"
         if h is not None:
             derived += f" min_headroom={h:+.1f}b"
         report("exactness_audit", 0.0, derived)
+
+        # kernel legality sweep: every family x autotune config, plus
+        # the launches a built smoke engine actually traces
+        kernel_report = audit_all(profiles=(cfg.rns.profile,))
+        eng = ContinuousEngine(params, cfg, scfg)
+        engine_kernels = audit_engine_kernels(eng)
+        k_ok = kernel_report.ok and engine_kernels.ok
+        report("kernel_audit", 0.0,
+               ("PROVED" if k_ok else "FAILED")
+               + f" configs={len(kernel_report.entries)}"
+               + f" engine_phases={len(engine_kernels.entries)}")
+
+        # jit compile-churn proof over the generated traffic family
+        trace_report = audit_traces(eng)
+        report("trace_audit", 0.0,
+               ("PROVED" if trace_report.ok else "FAILED")
+               + f" phases={len(trace_report.phases)}"
+               + f" variants={trace_report.n_variants}")
+        audit_blob = {
+            "exactness": json.loads(audit_report.to_json()),
+            "kernels": kernel_report.to_dict(),
+            "engine_kernels": engine_kernels.to_dict(),
+            "trace": trace_report.to_dict(),
+        }
 
     # roofline summary from the newest dry-run artifacts
     for tag, d in (("baseline", "artifacts/dryrun"),
@@ -142,9 +173,9 @@ def main() -> None:
         with open(args.kernels_json, "w") as f:
             json.dump(kernel_rows, f, indent=2)
         print(f"wrote {args.kernels_json}", flush=True)
-    if args.audit_json and audit_report is not None:
+    if args.audit_json and audit_blob is not None:
         with open(args.audit_json, "w") as f:
-            f.write(audit_report.to_json())
+            json.dump(audit_blob, f, indent=2)
         print(f"wrote {args.audit_json}", flush=True)
 
 

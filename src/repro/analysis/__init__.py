@@ -1,6 +1,6 @@
 """Static analysis for the RNS datapath.
 
-Two passes, both ahead-of-time (nothing here runs the model):
+Four passes, all ahead-of-time (nothing here runs the model):
 
 * :mod:`repro.analysis.ledger_audit` — the exactness auditor.  It traces
   an entry point under :func:`repro.core.dispatch.record_ops` (the
@@ -10,18 +10,29 @@ Two passes, both ahead-of-time (nothing here runs the model):
   the recorded dataflow graph and proves — with the SAME formulas the
   runtime ledger uses (``core.tensor.ledger_limit_bits`` /
   ``dot_out_bits``) — that no op can exceed its profile's exact range.
+* :mod:`repro.analysis.kernel_audit` — the Pallas kernel legality and
+  VMEM auditor.  It captures every ``pallas_call`` a wrapper (or a whole
+  engine phase) lowers to under ``jax.eval_shape`` and proves Mosaic
+  tiling legality, grid x index_map coverage, the double-buffered VMEM
+  working set against the per-core budget, and the fused kernels'
+  digit-axis scratch residency — for the autotune DEFAULTS, every
+  CANDIDATE, and any persisted cache row.
+* :mod:`repro.analysis.trace_audit` — the jit compile-churn prover.  It
+  rebuilds each engine's ``_trace_specs(traffic=...)`` closures over a
+  generated traffic family and proves the jit cache keys (treedef +
+  per-leaf shape/dtype/weak_type) are traffic-invariant.
 * :mod:`repro.analysis.lint` — an AST linter enforcing the repo
   invariants the codebase otherwise keeps by convention (kernel calls
   stay in ``kernels/``, raw digit arithmetic stays in ``core/``, backend
   selection goes through ``dispatch.resolve_backend``, no host calls on
-  jitted paths).
+  jitted paths, no whole-array VMEM BlockSpecs outside the wrappers).
 
-Surfaces: ``launch/analyze.py --audit``, ``ServeConfig(audit=True)``,
-``python -m repro.analysis.lint``, and the ``static-analysis`` CI job.
-See docs/analysis.md.
+Surfaces: ``launch/analyze.py --audit``/``--kernels``,
+``ServeConfig(audit=True)``, ``python -m repro.analysis.lint``, and the
+``static-analysis`` CI job.  See docs/analysis.md.
 
 Attribute access is lazy (PEP 562) so ``python -m repro.analysis.lint``
-never pays the jax import the auditor needs.
+never pays the jax import the auditors need.
 """
 
 _EXPORTS = {
@@ -34,6 +45,22 @@ _EXPORTS = {
     "audit_fn": "repro.analysis.ledger_audit",
     "audit_engine": "repro.analysis.ledger_audit",
     "audit_serve": "repro.analysis.ledger_audit",
+    "BlockConfigError": "repro.analysis.kernel_audit",
+    "KernelAuditReport": "repro.analysis.kernel_audit",
+    "KernelLaunch": "repro.analysis.kernel_audit",
+    "audit_all": "repro.analysis.kernel_audit",
+    "audit_config": "repro.analysis.kernel_audit",
+    "audit_engine_kernels": "repro.analysis.kernel_audit",
+    "capture_launches": "repro.analysis.kernel_audit",
+    "check_launch": "repro.analysis.kernel_audit",
+    "check_wrapper_blocks": "repro.analysis.kernel_audit",
+    "validate_blocks": "repro.analysis.kernel_audit",
+    "vmem_bytes": "repro.analysis.kernel_audit",
+    "PhaseTraceAudit": "repro.analysis.trace_audit",
+    "TraceAuditReport": "repro.analysis.trace_audit",
+    "arg_signature": "repro.analysis.trace_audit",
+    "audit_traces": "repro.analysis.trace_audit",
+    "traffic_family": "repro.analysis.trace_audit",
     "LintViolation": "repro.analysis.lint",
     "run_lint": "repro.analysis.lint",
 }

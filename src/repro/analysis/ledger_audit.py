@@ -279,10 +279,14 @@ def audit_phase(name: str, fn, *args, **kwargs) -> PhaseAudit:
     """Trace one entry point abstractly and audit its graph.  A ledger
     error raised *during* the trace (the runtime check caught it first)
     becomes a failed phase naming the layer and op."""
+    from repro.analysis.kernel_audit import BlockConfigError
+
     rec = GraphRecorder()
     try:
         with dispatch.record_ops(rec), dispatch.count_ops() as c:
             jax.eval_shape(fn, *args, **kwargs)
+    except BlockConfigError:
+        raise          # a tile-legality refusal: the kernel auditor's case
     except ValueError as e:
         return PhaseAudit(name=name, ok=False, n_ops=len(rec.graph().nodes),
                           error=str(e), error_site=_blame(e.__traceback__))

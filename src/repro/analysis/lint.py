@@ -17,6 +17,11 @@ Rules (ids are the suppression keys):
 * ``host-in-jit`` — no ``time.*`` / ``np.random.*`` calls in the traced
   surface (``core/``, ``models/``, ``kernels/``): host calls burn in a
   constant at trace time and silently stop varying under jit.
+* ``whole-array-vmem`` — every ``BlockSpec`` names an explicit block
+  shape.  A shapeless/None BlockSpec maps the WHOLE operand into VMEM:
+  fine for toy shapes, an unbounded-VMEM landmine at serving sizes (see
+  analysis/kernel_audit.py for the budget it would blow).  Approved
+  wrapper files are listed in ``_WHOLE_ARRAY_OK`` (currently none).
 
 Suppression: ``# lint-ok: <rule>[, <rule>...] [reason]`` on the flagged
 line or the line above; ``# lint-ok-file: <rule>`` anywhere in a file
@@ -45,6 +50,8 @@ RULES = {
     "backend-flag": "backend selection bypassing core/dispatch "
                     "(stray interpret=/use_pallas=)",
     "host-in-jit": "time.*/np.random.* call on a jitted code path",
+    "whole-array-vmem": "BlockSpec without an explicit block shape "
+                        "(whole-array VMEM residency)",
 }
 
 #: directories (relative to src/repro/) whose modules count as the traced
@@ -53,6 +60,10 @@ _TRACED_DIRS = ("core/", "models/", "kernels/")
 #: where each bypass flag may legitimately appear
 _INTERPRET_OK = ("kernels/", "core/dispatch.py")
 _USE_PALLAS_OK = ("core/rns_matmul.py",)
+#: wrapper files allowed to build whole-array VMEM BlockSpecs.  Empty on
+#: purpose: every shipped kernel streams bounded blocks; add a file here
+#: only with a VMEM argument in review.
+_WHOLE_ARRAY_OK: tuple[str, ...] = ()
 #: call names that count as arithmetic for raw-digits (layout moves and
 #: placement don't — resident encode legitimately moveaxis/device_puts)
 _ARITH_CALLS = {"matmul", "einsum", "dot", "tensordot", "remainder", "mod",
@@ -112,6 +123,22 @@ class _Checker(ast.NodeVisitor):
             self.flag(node, "pallas-call",
                       "pallas_call belongs in kernels/ (route through "
                       "core/dispatch)")
+        if name == "BlockSpec" and not (
+                _WHOLE_ARRAY_OK and self.rel.startswith(_WHOLE_ARRAY_OK)):
+            # an explicit block shape is any non-None first positional
+            # arg or non-None block_shape= kwarg; bare/None BlockSpecs
+            # map the whole operand into VMEM
+            def _none(a):
+                return isinstance(a, ast.Constant) and a.value is None
+            shaped = bool(node.args) and not _none(node.args[0])
+            shaped = shaped or any(
+                kw.arg == "block_shape" and not _none(kw.value)
+                for kw in node.keywords)
+            if not shaped:
+                self.flag(node, "whole-array-vmem",
+                          "BlockSpec without an explicit block shape pins "
+                          "the whole operand in VMEM; pass a bounded "
+                          "block (or list the file in _WHOLE_ARRAY_OK)")
         for kw in node.keywords:
             if kw.arg == "interpret" \
                     and not self.rel.startswith(_INTERPRET_OK):
@@ -182,14 +209,25 @@ def lint_source(src: str, rel: str, path: str | None = None
 
 
 def run_lint(root=None) -> list[LintViolation]:
-    """Lint every module under ``src/repro/`` (zero violations is a CI
-    gate; see .github/workflows/ci.yml job ``static-analysis``)."""
-    base = pathlib.Path(root) if root is not None else \
-        pathlib.Path(__file__).resolve().parents[1]
+    """Lint every module under ``src/repro/`` plus the repo-root
+    ``benchmarks/`` tree (zero violations is a CI gate; see
+    .github/workflows/ci.yml job ``static-analysis``).  ``launch/`` lives
+    under ``src/repro/`` and is covered by the main walk; benchmark
+    modules get a ``benchmarks/`` rule-scoping prefix (outside
+    ``kernels/``, so kernel calls and backend flags are flagged there
+    like any other layer)."""
+    if root is not None:
+        bases = [(pathlib.Path(root), "")]
+    else:
+        base = pathlib.Path(__file__).resolve().parents[1]
+        bases = [(base, ""), (base.parents[1] / "benchmarks", "benchmarks/")]
     out: list[LintViolation] = []
-    for py in sorted(base.rglob("*.py")):
-        rel = py.relative_to(base).as_posix()
-        out.extend(lint_source(py.read_text(), rel, str(py)))
+    for base, prefix in bases:
+        if not base.is_dir():
+            continue
+        for py in sorted(base.rglob("*.py")):
+            rel = prefix + py.relative_to(base).as_posix()
+            out.extend(lint_source(py.read_text(), rel, str(py)))
     return out
 
 

@@ -1,0 +1,180 @@
+"""Static jit compile-churn prover for the serving engines.
+
+An engine's steady-state throughput rests on a claim the tests can only
+check *after the fact* (``_cache_size() == 1`` pins): that the jitted
+step functions are traced once and replayed forever, no matter what
+traffic arrives.  A single leaf whose dtype, ``weak_type``, or shape
+varies with traffic re-keys the jit cache and silently recompiles every
+step.  This module proves the claim ahead of time:
+
+* :func:`arg_signature` computes exactly what the jit cache keys on for
+  a concrete argument pytree — the treedef plus every leaf's
+  ``(shape, dtype, weak_type)`` aval (via
+  ``jax.api_util.shaped_abstractify``, so python scalars show their
+  weak types the same way they would at a real call site);
+* :func:`traffic_family` generates a family of traffic variants (fill
+  values, prompt lengths) spanning what the engine will see;
+* :func:`audit_traces` rebuilds every ``engine._trace_specs(traffic=t)``
+  step closure per variant and proves each phase's argument signature
+  is INVARIANT across the family.  Any drift is named down to the leaf
+  (``leaf 3: 2x8:int32 -> 2x9:int32``) at audit time, instead of
+  surfacing as a mystery recompile in production.
+
+The contract this enforces (see ``docs/analysis.md``): a phase's jit
+cache key is a pure function of the engine *config*, never of the
+traffic.  The bucketed ``Engine`` recompiles per (B, T) bucket BY
+DESIGN; its spec pins invariance within a bucket, which is what its
+``_trace_specs`` models.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+__all__ = [
+    "PhaseTraceAudit",
+    "TraceAuditReport",
+    "arg_signature",
+    "audit_traces",
+    "describe_signature",
+    "traffic_family",
+]
+
+
+def arg_signature(args):
+    """The jit cache key of an argument tuple: ``(treedef, leaf avals)``.
+
+    Leaf avals are ``(shape, dtype, weak_type)`` triples — the three
+    degrees of freedom that re-key a jit trace.  Two calls with equal
+    signatures hit the same compiled executable."""
+    import jax
+
+    flat, treedef = jax.tree_util.tree_flatten(args)
+    leaves = []
+    for leaf in flat:
+        aval = jax.api_util.shaped_abstractify(leaf)
+        leaves.append((tuple(aval.shape), str(aval.dtype),
+                       bool(getattr(aval, "weak_type", False))))
+    return (str(treedef), tuple(leaves))
+
+
+def describe_signature(sig) -> str:
+    """Human-readable leaf list: ``2x8:int32``, ``scalar:float32~``
+    (``~`` marks a weak type, the silent re-trace trigger)."""
+    _, leaves = sig
+    out = []
+    for shape, dtype, weak in leaves:
+        dims = "x".join(str(d) for d in shape) if shape else "scalar"
+        out.append(f"{dims}:{dtype}" + ("~" if weak else ""))
+    return f"{len(leaves)} leaves: " + ", ".join(out)
+
+
+def traffic_family(engine) -> list[dict]:
+    """Traffic variants spanning what this engine's phases will see:
+    prompt lengths from 1 to the prompt pad, with varying token fill."""
+    pad = int(getattr(engine, "prompt_pad", 8))
+    lengths = sorted({1, 2, max(1, pad // 2), max(1, pad - 1), pad})
+    fills = (0, 1, 7)
+    return [{"fill": fills[i % len(fills)], "length": L}
+            for i, L in enumerate(lengths)]
+
+
+def _leaf_drift(a, b) -> list[str]:
+    """Leaf-wise description of how signature ``b`` diverges from ``a``."""
+    out = []
+    if a[0] != b[0]:
+        out.append("argument tree structure differs between variants")
+    la, lb = a[1], b[1]
+    if len(la) != len(lb):
+        out.append(f"{len(la)} leaves vs {len(lb)} leaves")
+        return out
+    for i, (x, y) in enumerate(zip(la, lb)):
+        if x == y:
+            continue
+        def fmt(t):
+            dims = "x".join(str(d) for d in t[0]) if t[0] else "scalar"
+            return f"{dims}:{t[1]}" + ("~" if t[2] else "")
+        out.append(f"leaf {i}: {fmt(x)} -> {fmt(y)}")
+    return out
+
+
+@dataclasses.dataclass
+class PhaseTraceAudit:
+    """One phase's invariance proof (or the drift that broke it)."""
+
+    phase: str
+    ok: bool
+    n_variants: int
+    signature: str          # the (single, when ok) argument signature
+    drift: list
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class TraceAuditReport:
+    """Result of :func:`audit_traces` over one engine."""
+
+    ok: bool
+    phases: list
+    n_variants: int
+
+    @property
+    def failed(self) -> list:
+        return [p for p in self.phases if not p.ok]
+
+    def summary(self) -> str:
+        if self.ok:
+            return (f"trace audit: PROVED ({len(self.phases)} phases x "
+                    f"{self.n_variants} traffic variants, one jit "
+                    "signature each)")
+        bad = self.failed[0]
+        return (f"trace audit: FAILED (phase {bad.phase!r} re-keys the "
+                f"jit cache across traffic: {'; '.join(bad.drift[:3])})")
+
+    def table(self) -> str:
+        rows = ["phase | variants | ok | signature"]
+        for p in self.phases:
+            state = "ok" if p.ok else "DRIFT: " + "; ".join(p.drift[:2])
+            rows.append(f"{p.phase} | {p.n_variants} | {state} | "
+                        f"{p.signature}")
+        return "\n".join(rows)
+
+    def to_dict(self) -> dict:
+        return {"ok": self.ok, "n_variants": self.n_variants,
+                "summary": self.summary(),
+                "phases": [p.to_dict() for p in self.phases]}
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2)
+
+
+def audit_traces(engine, family=None) -> TraceAuditReport:
+    """Prove every engine phase's jit signature is traffic-invariant.
+
+    Rebuilds ``engine._trace_specs(traffic=t)`` for each variant in the
+    family and compares each phase's :func:`arg_signature` — the exact
+    cache key jit sees.  Zero FLOPs, zero traces: only the argument
+    avals are inspected.  A phase that would retrace on real traffic is
+    reported with the drifting leaf named."""
+    fam = list(family) if family is not None else traffic_family(engine)
+    per_phase: dict[str, list] = {}
+    for t in fam:
+        for phase, (_fn, args) in engine._trace_specs(traffic=t).items():
+            per_phase.setdefault(phase, []).append(arg_signature(args))
+    phases = []
+    for phase, sigs in per_phase.items():
+        uniq = list(dict.fromkeys(sigs))
+        drift = []
+        if len(sigs) != len(fam):
+            drift.append(f"phase present in only {len(sigs)}/{len(fam)} "
+                         "traffic variants")
+        for other in uniq[1:]:
+            drift.extend(_leaf_drift(uniq[0], other))
+        phases.append(PhaseTraceAudit(
+            phase=phase, ok=not drift, n_variants=len(sigs),
+            signature=describe_signature(uniq[0]), drift=drift))
+    return TraceAuditReport(ok=all(p.ok for p in phases), phases=phases,
+                            n_variants=len(fam))

@@ -29,11 +29,14 @@ Cache file format (versioned)::
 from __future__ import annotations
 
 import json
+import logging
 import os
 import threading
 import time
 
 import jax
+
+_log = logging.getLogger(__name__)
 
 __all__ = ["get_blocks", "tune", "shape_bucket", "pow2_at_least",
            "cache_path", "clear_cache", "DEFAULTS", "CANDIDATES"]
@@ -49,6 +52,7 @@ DEFAULTS: dict[str, dict[str, int]] = {
     "rns_fused_dot": _MATMUL_DEFAULTS,
     "rns_convert": _TILE_DEFAULTS,
     "rns_normalize": _TILE_DEFAULTS,
+    "flash_attention": {"bq": 128, "bk": 128},
 }
 
 #: the search space :func:`tune` sweeps.  bm/bn stay MXU-aligned
@@ -61,6 +65,9 @@ CANDIDATES: dict[str, list[dict[str, int]]] = {
     ],
     "rns_convert": [{"bt": t} for t in (512, 1024, 2048)],
     "rns_normalize": [{"bt": t} for t in (256, 512, 1024)],
+    "flash_attention": [
+        {"bq": q, "bk": k} for q in (64, 128) for k in (128, 256)
+    ],
 }
 for _kind in ("rns_fused_encode_matmul", "rns_fused_matmul_normalize",
               "rns_fused_dot"):
@@ -118,6 +125,28 @@ def _valid_entry(entry) -> bool:
         for k, v in entry["blocks"].items())
 
 
+def _row_violations(key: str, entry: dict) -> list[str]:
+    """Mosaic/VMEM legality of a structurally-valid cache row.
+
+    The audit kind and profile are parsed back out of the cache key, so
+    the sublane rule sees the right residue width (int8 profiles need
+    32-row tiles).  Unparseable metadata degrades to the conservative
+    f32/int32 model rather than crashing the load path."""
+    from repro.analysis.kernel_audit import _profile_meta, validate_blocks
+
+    parts = key.split("|")
+    kind = parts[0]
+    if kind not in DEFAULTS:
+        return [f"unknown kernel kind {kind!r}"]
+    try:
+        n_digits, res_bytes = _profile_meta(
+            kind, parts[1] if len(parts) > 1 else None)
+    except Exception:
+        n_digits, res_bytes = 1, 4
+    return validate_blocks(kind, dict(DEFAULTS[kind], **entry["blocks"]),
+                           n_digits=n_digits, res_bytes=res_bytes)
+
+
 def _load() -> dict[str, dict]:
     global _cache
     with _lock:
@@ -138,6 +167,18 @@ def _load() -> dict[str, dict]:
                                   if isinstance(k, str) and _valid_entry(v)}
             except (OSError, ValueError, TypeError):
                 pass
+            # Legality self-heal: a structurally-fine row whose blocks
+            # are Mosaic-illegal or VMEM-over-budget (hand-edited file,
+            # tuned on a machine with different limits) is dropped with
+            # a logged reason — the wrappers fall back to DEFAULTS.
+            for k in list(_cache):
+                bad = _row_violations(k, _cache[k])
+                if bad:
+                    _log.warning(
+                        "autotune: dropping illegal cache row %s "
+                        "(blocks %s): %s — self-healing to DEFAULTS",
+                        k, _cache[k].get("blocks"), bad[0])
+                    del _cache[k]
         return _cache
 
 
@@ -179,10 +220,30 @@ def tune(kind: str, profile, shape, backend: str | None = None, *,
     exercise the full measure→persist path even though interpreter wall
     times are only a proxy for real-TPU tile quality).
     """
+    from repro.analysis.kernel_audit import _profile_meta, validate_blocks
+
+    try:
+        n_digits, res_bytes = _profile_meta(
+            kind, getattr(profile, "name", profile))
+    except Exception:
+        n_digits, res_bytes = 1, 4
+    legal = []
+    for cand in CANDIDATES[kind]:
+        bad = validate_blocks(kind, dict(DEFAULTS[kind], **cand),
+                              n_digits=n_digits, res_bytes=res_bytes)
+        if bad:
+            _log.warning("autotune: skipping illegal candidate %s for "
+                         "%s: %s", cand, kind, bad[0])
+        else:
+            legal.append(cand)
+    if not legal:
+        _log.warning("autotune: no legal candidates for %s — keeping "
+                     "DEFAULTS untuned", kind)
+        return dict(DEFAULTS[kind])
     if bench_fn is None:
         bench_fn = _default_bench(kind, profile, shape, backend)
     best, best_t = None, None
-    for cand in CANDIDATES[kind]:
+    for cand in legal:
         t = min(bench_fn(dict(cand)) for _ in range(repeats))
         if best_t is None or t < best_t:
             best, best_t = dict(cand), t
@@ -198,11 +259,33 @@ def _default_bench(kind: str, profile, shape, backend: str | None):
     """Wall-clock micro-bench of the real wrapper on random operands."""
     import numpy as np
 
+    rng = np.random.default_rng(0)
+
+    if kind == "flash_attention":
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        # ``profile`` is the dtype tag here — flash has no RNS profile.
+        Tq, Tk, Dh = shape
+        q = jax.numpy.asarray(
+            rng.standard_normal((1, Tq, 4, Dh)).astype(np.float32))
+        kv = jax.numpy.asarray(
+            rng.standard_normal((1, Tk, 4, Dh)).astype(np.float32))
+
+        def run(blocks):
+            return flash_attention(q, kv, kv, **blocks)
+
+        def bench(blocks) -> float:
+            jax.block_until_ready(run(blocks))   # compile off the clock
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(blocks))
+            return time.perf_counter() - t0
+
+        return bench
+
     from repro.core.moduli import get_profile
     from repro.core.rns import encode_int32
 
     p = get_profile(profile) if isinstance(profile, str) else profile
-    rng = np.random.default_rng(0)
 
     if kind in ("rns_convert", "rns_normalize"):
         (T,) = shape

@@ -8,13 +8,26 @@ from repro.core import dispatch
 from repro.kernels.flash_attention.kernel import flash_attention_bhtd
 
 
-def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
-                    bk: int = 128, interpret: bool | None = None):
-    """q [B,Tq,H,D], k/v [B,Tk,Hk,D(v)] (GQA) -> [B,Tq,H,Dv]."""
+def flash_attention(q, k, v, *, causal: bool = True, bq: int | None = None,
+                    bk: int | None = None, interpret: bool | None = None):
+    """q [B,Tq,H,D], k/v [B,Tk,Hk,D(v)] (GQA) -> [B,Tq,H,Dv].
+
+    ``None`` block sizes resolve through kernels/autotune.py (kind
+    ``flash_attention``, keyed on the dtype tag instead of an RNS
+    profile); the resolved config is gated by the static legality
+    checker before lowering (see analysis/kernel_audit.py).
+    """
     if interpret is None:
         interpret = dispatch.default_interpret()
     B, Tq, H, D = q.shape
     _, Tk, Hk, Dv = v.shape
+    if bq is None or bk is None:
+        from repro.kernels import autotune
+
+        blk = autotune.get_blocks("flash_attention", str(q.dtype),
+                                  (Tq, Tk, D))
+        bq = bq if bq is not None else blk["bq"]
+        bk = bk if bk is not None else blk["bk"]
     G = H // Hk
     # expand KV heads to match q heads (GQA)
     k = jnp.repeat(k, G, axis=2)
@@ -31,6 +44,11 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int = 128,
     if pk:
         kb = jnp.pad(kb, ((0, 0), (0, pk), (0, 0)))
         vb = jnp.pad(vb, ((0, 0), (0, pk), (0, 0)))
+    from repro.analysis.kernel_audit import check_wrapper_blocks
+
+    check_wrapper_blocks(
+        "flash_attention", {"bq": bq_eff, "bk": bk_eff},
+        dims={"Tq": Tq + pq, "Tk": Tk + pk, "D": D, "Dv": Dv})
     out = flash_attention_bhtd(qb, kb, vb, causal=causal, tk_valid=Tk,
                                bq=bq_eff, bk=bk_eff, interpret=interpret)
     out = out[:, :Tq].reshape(B, H, Tq, Dv).transpose(0, 2, 1, 3)

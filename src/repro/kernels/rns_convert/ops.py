@@ -41,6 +41,13 @@ def rns_convert(
         flat = jnp.pad(flat, (0, pad))
         if scale.ndim:
             scale = jnp.pad(scale, (0, pad))
+    from repro.analysis.kernel_audit import check_wrapper_blocks
+    from repro.core.moduli import get_profile
+
+    p = get_profile(profile) if isinstance(profile, str) else profile
+    check_wrapper_blocks(
+        "rns_convert", {"bt": bt}, dims={"T": T + pad},
+        n_digits=p.n_digits, res_bytes=jnp.dtype(out_dtype).itemsize)
     out = rns_convert_tiles(
         flat, scale, profile=profile, bits=bits,
         bt=bt, interpret=interpret, out_dtype=out_dtype,

@@ -41,6 +41,14 @@ def _blocks(kind, t, shape, bm, bn, bk):
     return bm, bn, bk
 
 
+def _check_blocks(kind, bm_eff, bn, bk, dims, n_digits, res_bytes):
+    """Fail fast (kernel + blocks + VMEM bytes named) before lowering."""
+    from repro.analysis.kernel_audit import check_wrapper_blocks
+
+    check_wrapper_blocks(kind, {"bm": bm_eff, "bn": bn, "bk": bk},
+                         dims=dims, n_digits=n_digits, res_bytes=res_bytes)
+
+
 def _prep_activation(x, scale, bm_eff, bk):
     """Flatten x to padded [Mp, Dp] and scale to padded [Mp, 1] rows."""
     lead = x.shape[:-1]
@@ -77,6 +85,9 @@ def rns_fused_encode_matmul(
     bm_eff = min(bm, _pow2_at_least(x.reshape(-1, D).shape[0]))
     x2, s2, M, lead = _prep_activation(x, scale, bm_eff, bk)
     b2 = _pad_to(_pad_to(b_res, 1, bk), 2, bn)
+    _check_blocks("rns_fused_encode_matmul", bm_eff, bn, bk,
+                  {"M": x2.shape[0], "D": x2.shape[1], "N": b2.shape[2]},
+                  b_res.shape[0], b2.dtype.itemsize)
     out = rns_fused_encode_matmul_tiles(
         moduli, x2, s2, b2, bits=bits, bm=bm_eff, bn=bn, bk=bk,
         interpret=interpret)
@@ -106,6 +117,9 @@ def rns_fused_matmul_normalize(
     bm_eff = min(bm, _pow2_at_least(M))
     a2 = _pad_to(_pad_to(a2, 1, bm_eff), 2, bk)
     b2 = _pad_to(_pad_to(b_res, 1, bk), 2, bn)
+    _check_blocks("rns_fused_matmul_normalize", bm_eff, bn, bk,
+                  {"M": a2.shape[1], "D": a2.shape[2], "N": b2.shape[2]},
+                  K, a2.dtype.itemsize)
     out = rns_fused_matmul_normalize_tiles(
         a2, b2, profile=t.profile.name, bm=bm_eff, bn=bn, bk=bk,
         interpret=interpret)
@@ -131,6 +145,9 @@ def rns_fused_dot(
     bm_eff = min(bm, _pow2_at_least(x.reshape(-1, D).shape[0]))
     x2, s2, M, lead = _prep_activation(x, scale, bm_eff, bk)
     b2 = _pad_to(_pad_to(b_res, 1, bk), 2, bn)
+    _check_blocks("rns_fused_dot", bm_eff, bn, bk,
+                  {"M": x2.shape[0], "D": x2.shape[1], "N": b2.shape[2]},
+                  b_res.shape[0], b2.dtype.itemsize)
     out = rns_fused_dot_tiles(
         x2, s2, b2, profile=t.profile.name, bits=bits, bm=bm_eff, bn=bn,
         bk=bk, interpret=interpret)

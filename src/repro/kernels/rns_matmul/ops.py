@@ -59,6 +59,12 @@ def rns_matmul(
     bm_eff = min(bm, _pow2_at_least(M))
     a2 = _pad_to(_pad_to(a2, 1, bm_eff), 2, bk)
     b2 = _pad_to(_pad_to(b_res, 1, bk), 2, bn)
+    from repro.analysis.kernel_audit import check_wrapper_blocks
+
+    check_wrapper_blocks(
+        "rns_matmul", {"bm": bm_eff, "bn": bn, "bk": bk},
+        dims={"M": a2.shape[1], "D": a2.shape[2], "N": b2.shape[2]},
+        n_digits=S, res_bytes=a2.dtype.itemsize)
     out = rns_matmul_tiles(
         moduli, a2, b2, bm=bm_eff, bn=bn, bk=bk, interpret=interpret
     )

@@ -34,5 +34,9 @@ def rns_normalize(profile, res, *, bt: int | None = None,
     pad = (-T) % bt
     if pad:
         flat = jnp.pad(flat, ((0, 0), (0, pad)))
+    from repro.analysis.kernel_audit import check_wrapper_blocks
+
+    check_wrapper_blocks("rns_normalize", {"bt": bt}, dims={"T": T + pad},
+                         n_digits=K)
     out = rns_normalize_tiles(flat, profile=profile, bt=bt, interpret=interpret)
     return out[:T].reshape(shape)

@@ -1,6 +1,6 @@
-"""Static analysis CLI: exactness audits and roofline cell analysis.
+"""Static analysis CLI: exactness/kernel audits and roofline analysis.
 
-Two modes behind one entry point (this module absorbed the seed tools
+Three modes behind one entry point (this module absorbed the seed tools
 ``launch/analyze_cell.py`` and ``launch/hlo_analysis.py``):
 
 ``--audit``
@@ -14,6 +14,17 @@ Two modes behind one entry point (this module absorbed the seed tools
         PYTHONPATH=src python -m repro.launch.analyze --audit \
             --arch smollm-135m --rns rns9 --resident-weights \
             --chunked-prefill --json artifacts/audit.json
+
+``--kernels``
+    Run the static Pallas kernel auditor
+    (``repro.analysis.kernel_audit``) over every kernel family x shape
+    bucket x block config — the autotune DEFAULTS, every CANDIDATE, and
+    any persisted cache row — proving Mosaic tiling legality, grid
+    coverage, VMEM working set, and fused digit-axis residency, again
+    without running anything.  Exit 1 if any config is illegal::
+
+        PYTHONPATH=src python -m repro.launch.analyze --kernels \
+            --json artifacts/kernel_audit.json
 
 ``--cell``
     Hillclimb harness: lower ONE (arch, shape, mesh) cell with config
@@ -140,6 +151,25 @@ def _run_audit(args) -> int:
     return 0 if report.ok else 1
 
 
+# ---------------------------------------------------------- --kernels ----
+def _run_kernels(args) -> int:
+    from repro.analysis.kernel_audit import audit_all
+
+    profiles = (args.rns,) if args.rns else ("rns6", "rns9")
+    report = audit_all(profiles=profiles)
+    print(report.table())
+    print()
+    print(report.summary())
+    if args.json:
+        d = os.path.dirname(args.json)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(args.json, "w") as f:
+            f.write(report.to_json())
+        print(f"\nwrote {args.json}")
+    return 0 if report.ok else 1
+
+
 # ------------------------------------------------------------- --cell ----
 # Single-pod roofline constants (per device): int8 path doubles MXU rate.
 PEAK = 197e12
@@ -230,12 +260,16 @@ def _run_cell(args) -> int:
 # ---------------------------------------------------------------- main ----
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
-        description="static analysis: --audit (RNS exactness proof) or "
+        description="static analysis: --audit (RNS exactness proof), "
+                    "--kernels (Pallas legality/VMEM proof), or "
                     "--cell (roofline lowering)")
     mode = ap.add_mutually_exclusive_group(required=True)
     mode.add_argument("--audit", action="store_true",
                       help="prove the RNS datapath overflow-free for a "
                            "serving config (no model execution)")
+    mode.add_argument("--kernels", action="store_true",
+                      help="prove every kernel family x autotune config "
+                           "Mosaic-legal and within the VMEM budget")
     mode.add_argument("--cell", action="store_true",
                       help="lower one (arch, shape, mesh) cell and print "
                            "roofline terms")
@@ -277,7 +311,11 @@ def main(argv=None) -> int:
     ap.add_argument("--save-hlo", default=None)
     ap.add_argument("--out", default="artifacts/perf")
     args = ap.parse_args(argv)
-    return _run_cell(args) if args.cell else _run_audit(args)
+    if args.cell:
+        return _run_cell(args)
+    if args.kernels:
+        return _run_kernels(args)
+    return _run_audit(args)
 
 
 if __name__ == "__main__":

@@ -233,22 +233,58 @@ def _maybe_resident(params, cfg, scfg: ServeConfig):
 
 
 def _maybe_audit(engine):
-    """Build-time exactness audit (``ServeConfig(audit=True)``).
+    """Build-time static audits (``ServeConfig(audit=True)``).
 
-    Runs the static auditor over the engine's own ``_trace_specs`` and
-    refuses to hand back an engine whose RNS datapath it cannot prove
-    overflow-free — the failed :class:`repro.analysis.AuditReport`
-    summary (naming the phase, layer, and op) IS the exception text.
-    Float configs have nothing to prove and skip the trace entirely.
+    Three ahead-of-time proofs, in order, each refusing to hand back the
+    engine with the failed report's summary as the exception text:
+
+    1. **exactness audit** (``repro.analysis.ledger_audit``) — the RNS
+       datapath is provably overflow-free; kept on (and returned as)
+       ``engine.audit_report``.  Float configs have nothing to prove
+       ledger-wise and keep ``audit_report is None``.  This runs FIRST
+       so a numerically unprovable config is named by the exactness
+       pass — its ledger error would otherwise abort the kernel
+       capture below and be misblamed as a launch failure;
+    2. **trace audit** (``repro.analysis.trace_audit``) — every jitted
+       phase's cache key is traffic-invariant (no steady-state
+       recompiles); kept on ``engine.trace_audit_report``;
+    3. **kernel audit** (``repro.analysis.kernel_audit``) — every Pallas
+       launch the phases lower to is Mosaic-legal and within the VMEM
+       budget (an illegal tuned block config refuses to build here);
+       kept on ``engine.kernel_audit_report``.
     """
-    if not engine.scfg.audit or engine.cfg.rns is None:
+    engine.trace_audit_report = None
+    engine.kernel_audit_report = None
+    if not engine.scfg.audit:
         return None
-    from repro.analysis.ledger_audit import audit_engine
+    from repro.analysis.kernel_audit import audit_engine_kernels
+    from repro.analysis.trace_audit import audit_traces
 
-    report = audit_engine(engine)
-    if not report.ok:
-        raise ValueError("ServeConfig(audit=True): exactness audit "
-                         "failed\n" + report.summary())
+    report = None
+    if engine.cfg.rns is not None:
+        from repro.analysis.kernel_audit import BlockConfigError
+        from repro.analysis.ledger_audit import audit_engine
+
+        try:
+            report = audit_engine(engine)
+        except BlockConfigError:
+            # an illegal tile aborts the exactness trace; fall through —
+            # the kernel audit below reproduces and names it properly
+            report = None
+        else:
+            if not report.ok:
+                raise ValueError("ServeConfig(audit=True): exactness "
+                                 "audit failed\n" + report.summary())
+    trace_report = audit_traces(engine)
+    engine.trace_audit_report = trace_report
+    if not trace_report.ok:
+        raise ValueError("ServeConfig(audit=True): trace audit failed\n"
+                         + trace_report.summary())
+    kernel_report = audit_engine_kernels(engine)
+    engine.kernel_audit_report = kernel_report
+    if not kernel_report.ok:
+        raise ValueError("ServeConfig(audit=True): kernel audit failed\n"
+                         + kernel_report.summary())
     return report
 
 
@@ -275,11 +311,16 @@ class Engine:
             lambda p, b: M.prefill(p, self.cfg, b, S_max=self.scfg.max_cache),
             self.params, batch)
 
-    def _trace_specs(self) -> dict:
-        """``{phase: (fn, args)}`` for the static exactness auditor
-        (repro.analysis.ledger_audit).  The bucketed engine serves one
-        compound program — prefill then decode on the returned cache —
-        so one combined phase covers both jits."""
+    def _trace_specs(self, traffic: dict | None = None) -> dict:
+        """``{phase: (fn, args)}`` for the static auditors
+        (repro.analysis.ledger_audit / kernel_audit / trace_audit).  The
+        bucketed engine serves one compound program — prefill then
+        decode on the returned cache — so one combined phase covers both
+        jits.  ``traffic`` varies the token *values* only: this engine
+        recompiles per (B, T) bucket BY DESIGN, so its invariance claim
+        (and the trace audit's proof) is scoped to one bucket."""
+        fill = int((traffic or {}).get("fill", 0))
+
         def prefill_decode(p, t):
             logits, cache = M.prefill(p, self.cfg, {"tokens": t},
                                       S_max=self.scfg.max_cache)
@@ -287,7 +328,7 @@ class Engine:
             return M.decode_step(p, self.cfg, tok, cache)
 
         return {"prefill+decode": (
-            prefill_decode, (self.params, jnp.zeros((1, 8), jnp.int32)))}
+            prefill_decode, (self.params, jnp.full((1, 8), fill, jnp.int32)))}
 
     def generate(self, prompts: np.ndarray, frontend: np.ndarray | None = None,
                  max_new: int | None = None):
@@ -569,22 +610,28 @@ class ContinuousEngine:
         self.sched.complete(seq)
         self._tables_dirty = True
 
-    def _trace_specs(self) -> dict:
+    def _trace_specs(self, traffic: dict | None = None) -> dict:
         """``{phase: (fn, args)}`` — every jitted shape this config serves.
 
         ONE source of truth shared by the per-step op counters (traced
-        through ``dispatch.trace_op_counts``) and the static exactness
-        auditor (``repro.analysis.ledger_audit.audit_engine``): whatever
-        the engine would actually jit is exactly what gets audited.  The
-        closures read ``self.cfg`` dynamically, so the auditor can probe
-        policy variants (e.g. defer=True) by swapping it.
+        through ``dispatch.trace_op_counts``) and the static auditors
+        (``repro.analysis``' ledger_audit / kernel_audit / trace_audit):
+        whatever the engine would actually jit is exactly what gets
+        audited.  The closures read ``self.cfg`` dynamically, so the
+        auditor can probe policy variants (e.g. defer=True) by swapping
+        it.  ``traffic`` (``{"fill": tok, "length": L}``) varies the
+        argument *contents* the way real requests would — the trace
+        auditor proves the resulting jit signatures don't.
         """
+        tr = traffic or {}
+        fill = int(tr.get("fill", 0))
+        L = max(1, min(int(tr.get("length", 1)), self.prompt_pad))
         bt, lengths, active, last = self.sched.tables()
         cache = kv.set_tables(self.cache, bt, lengths)
         if self.chunked:
             # the mixed step's structure is phase-mix invariant: fixed
             # [token_budget] lanes, one trace serves every step
-            zi = jnp.zeros((self.scfg.token_budget,), jnp.int32)
+            zi = jnp.full((self.scfg.token_budget,), fill, jnp.int32)
             zb = jnp.zeros((self.scfg.token_budget,), bool)
             return {"mixed": (
                 lambda p, t: M.mixed_step(p, self.cfg, t, zi, zi, zb,
@@ -597,16 +644,24 @@ class ContinuousEngine:
                 lambda p, t: self._verify_fn(
                     p, t, cache, jnp.asarray(active),
                     jnp.zeros((R,), jnp.int32)),
-                (self.params, jnp.zeros((R, self.spec_window), jnp.int32)))
+                (self.params,
+                 jnp.full((R, self.spec_window), fill, jnp.int32)))
         else:
             decode = (
                 lambda p, t: M.decode_step(p, self.cfg, t, cache,
                                            active=jnp.asarray(active)),
-                (self.params, jnp.zeros((R, 1), jnp.int32)))
+                (self.params, jnp.full((R, 1), fill, jnp.int32)))
+        # prompt tokens/lengths are jit ARGUMENTS (mirroring the runtime
+        # ``self._prefill(params, tokens, [T])`` call), so ragged lengths
+        # exercise the same compiled program — which is the claim the
+        # trace auditor proves over the traffic family.
+        tokens = np.zeros((1, self.prompt_pad), np.int32)
+        tokens[0, :L] = fill
         prefill = (
-            lambda p, t: M.prefill_ragged(
-                p, self.cfg, {"tokens": t}, jnp.ones((1,), jnp.int32)),
-            (self.params, jnp.zeros((1, self.prompt_pad), jnp.int32)))
+            lambda p, t, n: M.prefill_ragged(
+                p, self.cfg, {"tokens": t}, n),
+            (self.params, jnp.asarray(tokens),
+             jnp.asarray([L], jnp.int32)))
         return {"decode": decode, "prefill": prefill}
 
     def _rns_ops(self, n_prefills: int) -> dispatch.OpCounts:
