@@ -143,6 +143,39 @@ def bench_preemption(report, arch="smollm-135m"):
            f"page_util={c['mean_page_utilization']:.2f}")
 
 
+def bench_window_longstream(report, arch="smollm-135m", max_new=96):
+    """Long decode streams in a page pool far smaller than the stream:
+    the windowed engine recycles pages behind the sliding window and
+    sails through with zero preemptions, where the unwindowed engine in
+    the same pool thrashes on recompute preemption (or, single-row,
+    cannot even be configured).  Reports tokens/sec, mean page-pool
+    occupancy, and cumulative pages recycled by window eviction."""
+    cfg = get_config(arch, smoke=True)
+    params, _ = M.init_model(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, cfg.vocab, (10,)).astype(np.int32)
+               for _ in range(2)]
+    max_cache = 10 + max_new + 8
+    # 15 usable pages: exactly ONE full 106-token row fits unwindowed, so
+    # the two rows can only proceed serially via recompute preemption;
+    # windowed rows each stay under ~6 resident pages and run together
+    pool = dict(page_size=8, max_seqs=2, n_pages=16)
+    win = _serve_continuous(params, cfg, prompts, max_new, max_cache,
+                            window_tokens=32, **pool)
+    full = _serve_continuous(params, cfg, prompts, max_new, max_cache,
+                             **pool)
+    report("serve_window_longstream", win["wall_s"] * 1e6,
+           f"tok_s={win['tokens_per_s']:.1f} "
+           f"page_util={win['mean_page_utilization']:.2f} "
+           f"pages_window_evicted={win['pages_window_evicted']} "
+           f"preemptions={win['n_preemptions']}")
+    report("serve_window_off_longstream", full["wall_s"] * 1e6,
+           f"tok_s={full['tokens_per_s']:.1f} "
+           f"page_util={full['mean_page_utilization']:.2f} "
+           f"preemptions={full['n_preemptions']}")
+    return win, full
+
+
 def bench_rns_serving(report, arch="smollm-135m"):
     """The serving-side slow-op budget: per-step structural RNS counts
     through the continuous engine (deferred-MLP policy on)."""
@@ -325,6 +358,7 @@ def run_all(report):
     bench_traffic(report)
     bench_traffic_warm(report)
     bench_preemption(report)
+    bench_window_longstream(report)
     bench_rns_serving(report)
     bench_resident_serving(report)
     bench_prefix_cache(report)

@@ -64,6 +64,11 @@ class ModelConfig:
     attn_dense_max: int = 1024             # dense/one-shot path below this Tq
     attn_q_chunk: int = 512
     attn_kv_chunk: int = 1024
+    # sliding-window attention: query at position q attends keys in
+    # [q - attn_window + 1, q] (None = full causal).  Positions stay
+    # absolute; older keys are masked with exact zeros, so serving can
+    # evict their KV pages without moving the retained window's math.
+    attn_window: int | None = None
     # sharding hints
     attn_shard_heads: bool = True          # heads -> model axis (GSPMD pads)
     attn_batch_shard: bool = False         # attention DP over the full mesh

@@ -19,6 +19,12 @@ Chunked prefill (packed mixed-phase steps, no prefill/decode barrier):
 
     PYTHONPATH=src python -m repro.launch.serve --continuous \
         --chunked-prefill --token-budget 64 --requests 8 --new 8
+
+Sliding-window attention with cyclic KV page reuse (long streams in a
+page pool far smaller than the stream):
+
+    PYTHONPATH=src python -m repro.launch.serve --continuous \
+        --window-tokens 32 --requests 2 --prompt-lens 10 --new 96
 """
 
 from __future__ import annotations
@@ -84,7 +90,8 @@ def _continuous(args, cfg, params):
         resident_weights=args.resident_weights,
         per_layer_profiles=args.per_layer_profiles,
         chunked_prefill=args.chunked_prefill,
-        token_budget=args.token_budget, chunk_size=args.chunk_size))
+        token_budget=args.token_budget, chunk_size=args.chunk_size,
+        window_tokens=args.window_tokens))
     if args.resident_weights:
         from repro.models.resident import resident_profiles
 
@@ -111,6 +118,9 @@ def _continuous(args, cfg, params):
               f"pages_shared={stats['pages_shared']} "
               f"pages_allocated={stats['pages_allocated']} "
               f"cow_splits={stats['cow_splits']}")
+    if args.window_tokens:
+        print(f"sliding window: {args.window_tokens} tokens retained per "
+              f"row, pages_window_evicted={stats['pages_window_evicted']}")
     if args.chunked_prefill:
         mixed = sum(1 for s in stats["steps"]
                     if s["prefill_tokens"] > 0 and s["decode_tokens"] > 0)
@@ -162,6 +172,12 @@ def main():
     ap.add_argument("--chunk-size", type=int, default=None,
                     help="max prefill tokens per row per mixed step; must "
                          "be a multiple of --page-size")
+    ap.add_argument("--window-tokens", type=int, default=None,
+                    help="sliding-window attention: each row attends at "
+                         "most this many trailing tokens and the scheduler "
+                         "recycles KV pages behind the window (continuous "
+                         "engine only; bounded page-pool occupancy for "
+                         "arbitrarily long streams)")
     ap.add_argument("--rns", metavar="PROFILE", default=None,
                     help="run the MLP datapath in residues on PROFILE "
                          "(e.g. rns9); required for --rns-backend/"

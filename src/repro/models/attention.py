@@ -67,13 +67,19 @@ def _gqa_out(probs, v):
     return out.reshape(B, Tq, Hk * G, v.shape[-1])
 
 
-def dense_attention(q, k, v, *, causal: bool, kv_mask=None, q_offset=0):
-    """Training-mode attention.  kv_mask [B, Tk] optional padding mask."""
+def dense_attention(q, k, v, *, causal: bool, kv_mask=None, q_offset=0,
+                    window=None):
+    """Training-mode attention.  kv_mask [B, Tk] optional padding mask.
+    ``window``: sliding-window width — query q attends keys in
+    [q - window + 1, q] (causal only; masked with exact zeros)."""
     scores = _gqa_scores(q.astype(jnp.float32), k.astype(jnp.float32))
     Tq, Tk = scores.shape[-2], scores.shape[-1]
     if causal:
         qpos = jnp.arange(Tq) + q_offset
-        mask = qpos[:, None] >= jnp.arange(Tk)[None, :]
+        kpos = jnp.arange(Tk)
+        mask = qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
         scores = jnp.where(mask[None, None, None], scores, NEG_INF)
     if kv_mask is not None:
         scores = jnp.where(kv_mask[:, None, None, None, :], scores, NEG_INF)
@@ -82,8 +88,15 @@ def dense_attention(q, k, v, *, causal: bool, kv_mask=None, q_offset=0):
 
 
 def chunked_attention(q, k, v, *, causal: bool, chunk: int = 1024,
-                      kv_mask=None, q_offset=0):
-    """Online-softmax scan over KV chunks (inference prefill; no O(T^2) buf)."""
+                      kv_mask=None, q_offset=0, window=None):
+    """Online-softmax scan over KV chunks (inference prefill; no O(T^2) buf).
+
+    ``window``: sliding-window width (causal only).  A fully-masked chunk
+    contributes exactly nothing: its ``p = exp(NEG_INF - NEG_INF) = 1``
+    garbage is cancelled by ``corr = exp(NEG_INF - m_finite) = 0`` at the
+    first chunk with a valid key, the same exact-zero mechanism the
+    all-padded leading chunks already rely on.
+    """
     B, Tq, H, D = q.shape
     Tk = k.shape[1]
     Hk = k.shape[2]
@@ -117,7 +130,10 @@ def chunked_attention(q, k, v, *, causal: bool, chunk: int = 1024,
         kpos = c * chunk + jnp.arange(chunk)
         valid = mb[:, None, None, None, :]
         if causal:
-            valid = valid & (qpos[:, None] >= kpos[None, :])[None, None, None]
+            keep = qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                keep &= qpos[:, None] - kpos[None, :] < window
+            valid = valid & keep[None, None, None]
         s = jnp.where(valid, s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[..., None])
@@ -140,7 +156,7 @@ def chunked_attention(q, k, v, *, causal: bool, chunk: int = 1024,
 
 
 def flash_attention(q, k, v, *, causal: bool, kv_mask=None,
-                    q_chunk: int = 512, kv_chunk: int = 1024):
+                    q_chunk: int = 512, kv_chunk: int = 1024, window=None):
     """2-level tiled attention: scan over q tiles, online-softmax over KV
     tiles with a rematerialized inner body — O(T) live memory forward AND
     backward (the inner scores/probs are recomputed in the bwd pass), at
@@ -156,7 +172,7 @@ def flash_attention(q, k, v, *, causal: bool, kv_mask=None,
         qi, i = inp
         out = chunked_attention(
             qi, k, v, causal=causal, kv_mask=kv_mask, chunk=kv_chunk,
-            q_offset=i * q_chunk)
+            q_offset=i * q_chunk, window=window)
         return None, out
 
     _, outs = jax.lax.scan(qbody, None, (qc, jnp.arange(nq)))
@@ -164,22 +180,33 @@ def flash_attention(q, k, v, *, causal: bool, kv_mask=None,
     return out[:, :Tq]
 
 
-def decode_attention(q, k_cache, v_cache, lengths):
+def decode_attention(q, k_cache, v_cache, lengths, window=None):
     """q [B,Tq,H,D] against cache [B,S,Hk,D]; ``lengths`` [B] valid prefix
     sizes shared by every query, or [B, Tq] per-query valid counts (the
     speculative-verify window: query ``i`` sees ``lengths[b, i]`` keys —
     its own window predecessors included, later/rejected KV excluded).
+
+    ``window``: sliding-window width — a query with ``n`` valid keys (its
+    position is ``n - 1``) additionally masks keys below ``n - window``
+    with exact zeros, so evicted cache slots (trash-page garbage included)
+    contribute exactly nothing.
 
     Returns (out [B,Tq,H,D], lse [B,Hk,G,Tq]) — the LSE makes partial
     results combinable across a sequence-sharded cache (flash-decoding).
     """
     B, S = k_cache.shape[:2]
     if lengths.ndim == 2:       # per-query valid counts (verify window)
-        mask = (jnp.arange(S)[None, None, :] <
-                lengths[:, :, None])[:, None, None, :, :]
+        kpos = jnp.arange(S)[None, None, :]
+        mask = kpos < lengths[:, :, None]
+        if window is not None:
+            mask &= kpos >= lengths[:, :, None] - window
+        mask = mask[:, None, None, :, :]
     else:
-        mask = (jnp.arange(S)[None, :] <
-                lengths[:, None])[:, None, None, None, :]
+        kpos = jnp.arange(S)[None, :]
+        mask = kpos < lengths[:, None]
+        if window is not None:
+            mask &= kpos >= lengths[:, None] - window
+        mask = mask[:, None, None, None, :]
     s = _gqa_scores(q.astype(jnp.float32), k_cache.astype(jnp.float32))
     s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1)
@@ -254,14 +281,16 @@ def gqa_attend(p, x, cfg, *, mode: str, positions=None, kv_mask=None,
         k = k.reshape(B, Tk, Hk, D)
         v = v.reshape(B, Tk, Hk, D)
         causal = False
+    window = cfg.attn_window if causal else None
     if mode == "dense":
-        out = dense_attention(q, k, v, causal=causal, kv_mask=kv_mask)
+        out = dense_attention(q, k, v, causal=causal, kv_mask=kv_mask,
+                              window=window)
     elif mode == "chunked":
         out = chunked_attention(q, k, v, causal=causal, kv_mask=kv_mask,
-                                chunk=chunk)
+                                chunk=chunk, window=window)
     elif mode == "flash":
         out = flash_attention(q, k, v, causal=causal, kv_mask=kv_mask,
-                              kv_chunk=chunk)
+                              kv_chunk=chunk, window=window)
     else:
         raise ValueError(mode)
     return linear(p["wo"], out.reshape(B, T, -1), rns), (k, v)
@@ -281,7 +310,8 @@ def gqa_decode(p, x, cfg, cache, *, rns=None, use_rope=True):
         k[:, 0].astype(cache["k"].dtype))
     v_cache = cache["v"].at[idx, cache["lengths"]].set(
         v[:, 0].astype(cache["v"].dtype))
-    out, _lse = decode_attention(q, k_cache, v_cache, cache["lengths"] + 1)
+    out, _lse = decode_attention(q, k_cache, v_cache, cache["lengths"] + 1,
+                                 window=cfg.attn_window)
     y = linear(p["wo"], out.reshape(B, 1, -1), rns)
     return y, k_cache, v_cache
 
@@ -309,7 +339,8 @@ def gqa_decode_paged(p, x, cfg, cache, *, rns=None, use_rope=True):
                           cache["lengths"], v[:, 0])
     kd = gather_pages(k_pages, cache["block_table"])
     vd = gather_pages(v_pages, cache["block_table"])
-    out, _lse = decode_attention(q, kd, vd, cache["lengths"] + 1)
+    out, _lse = decode_attention(q, kd, vd, cache["lengths"] + 1,
+                                 window=cfg.attn_window)
     y = linear(p["wo"], out.reshape(B, 1, -1), rns)
     return y, k_pages, v_pages
 
@@ -339,7 +370,7 @@ def gqa_decode_paged_window(p, x, cfg, cache, *, rns=None, use_rope=True):
     kd = gather_pages(k_pages, cache["block_table"])
     vd = gather_pages(v_pages, cache["block_table"])
     qlen = cache["lengths"][:, None] + 1 + jnp.arange(W)[None]   # [R, W]
-    out, _lse = decode_attention(q, kd, vd, qlen)
+    out, _lse = decode_attention(q, kd, vd, qlen, window=cfg.attn_window)
     y = linear(p["wo"], out.reshape(B, W, -1), rns)
     return y, k_pages, v_pages
 
@@ -378,7 +409,8 @@ def gqa_decode_packed(p, x, cfg, cache, seg, pos, *, rns=None, use_rope=True):
     segc = jnp.clip(seg, 0, R - 1)
     kd = gather_pages(k_pages, cache["block_table"])[segc]   # [N, S, Hk, D]
     vd = gather_pages(v_pages, cache["block_table"])[segc]
-    out, _lse = decode_attention(q[0][:, None], kd, vd, pos + 1)
+    out, _lse = decode_attention(q[0][:, None], kd, vd, pos + 1,
+                                 window=cfg.attn_window)
     y = linear(p["wo"], out.reshape(1, N, -1), rns)
     return y, k_pages, v_pages
 
@@ -473,14 +505,16 @@ def mla_attend(p, x, cfg, *, mode: str, positions=None, kv_mask=None,
     if positions is None:
         positions = jnp.broadcast_to(jnp.arange(T)[None], (B, T))
     q, k, v, latent = mla_qkv(p, x, cfg, positions, rns)
+    window = cfg.attn_window if cfg.causal else None
     if mode == "dense":
-        out = dense_attention(q, k, v, causal=cfg.causal, kv_mask=kv_mask)
+        out = dense_attention(q, k, v, causal=cfg.causal, kv_mask=kv_mask,
+                              window=window)
     elif mode == "chunked":
         out = chunked_attention(q, k, v, causal=cfg.causal, kv_mask=kv_mask,
-                                chunk=chunk)
+                                chunk=chunk, window=window)
     elif mode == "flash":
         out = flash_attention(q, k, v, causal=cfg.causal, kv_mask=kv_mask,
-                              kv_chunk=chunk)
+                              kv_chunk=chunk, window=window)
     else:
         raise ValueError(mode)
     return linear(p["wo"], out.reshape(B, T, -1), rns), latent
@@ -522,14 +556,17 @@ def _mla_decode_proj(p, x, cfg, lengths, rns):
     return _mla_proj_at(p, x, cfg, positions, rns)
 
 
-def _mla_absorbed_ctx(p, cfg, q_nope, q_rope, c_kv, k_rope, lengths):
+def _mla_absorbed_ctx(p, cfg, q_nope, q_rope, c_kv, k_rope, lengths,
+                      window=None):
     """Absorbed-matrix latent attention core (everything before ``wo``).
 
     W_uk is absorbed into the query and W_uv into the output so attention
     runs directly in the latent space (MQA-shaped, Hk=1).  ``lengths``:
     [B] valid key counts shared by every query (one-token decode), or
     [B, T] per-query counts (speculative-verify window, query ``i`` sees
-    ``lengths[b, i]`` keys).  Returns (out [B,T,H,v_dim] float32,
+    ``lengths[b, i]`` keys).  ``window``: sliding-window width — keys
+    below ``lengths - window`` are masked with exact zeros (see
+    :func:`decode_attention`).  Returns (out [B,T,H,v_dim] float32,
     lse [B,1,H,T]) — the packed mixed step selects between this and the
     expanded (prefill-math) context per token before the shared ``wo``.
     """
@@ -546,10 +583,17 @@ def _mla_absorbed_ctx(p, cfg, q_nope, q_rope, c_kv, k_rope, lengths):
     ) * scale                                                        # [B,H,T,S]
     S = c_kv.shape[1]
     if lengths.ndim == 2:       # per-query valid counts (verify window)
-        mask = (jnp.arange(S)[None, None, :] <
-                lengths[:, :, None])[:, None, :, :]
+        kpos = jnp.arange(S)[None, None, :]
+        mask = kpos < lengths[:, :, None]
+        if window is not None:
+            mask &= kpos >= lengths[:, :, None] - window
+        mask = mask[:, None, :, :]
     else:
-        mask = (jnp.arange(S)[None, :] < lengths[:, None])[:, None, None, :]
+        kpos = jnp.arange(S)[None, :]
+        mask = kpos < lengths[:, None]
+        if window is not None:
+            mask &= kpos >= lengths[:, None] - window
+        mask = mask[:, None, None, :]
     s = jnp.where(mask, s, NEG_INF)
     mx = jnp.max(s, axis=-1)
     pr = jnp.exp(s - mx[..., None])
@@ -568,7 +612,7 @@ def _mla_absorbed_attend(p, x, cfg, q_nope, q_rope, c_kv, k_rope, lengths,
     (y [B,T,d], lse [B,1,H,T])."""
     B = x.shape[0]
     out, lse = _mla_absorbed_ctx(p, cfg, q_nope, q_rope, c_kv, k_rope,
-                                 lengths)
+                                 lengths, window=cfg.attn_window)
     T = out.shape[1]
     y = linear(p["wo"], out.reshape(B, T, -1).astype(x.dtype), rns)
     return y, lse
@@ -687,7 +731,8 @@ def mla_decode_packed(p, x, cfg, cache, seg, pos, dec, *, rns=None):
     qn = q_nope[0][:, None]                                     # [N,1,H,dn]
     qr = q_rope[0][:, None]
     # absorbed context: bitwise the solo decode math per row
-    abs_out, _ = _mla_absorbed_ctx(p, cfg, qn, qr, c_kv, k_rope, pos + 1)
+    abs_out, _ = _mla_absorbed_ctx(p, cfg, qn, qr, c_kv, k_rope, pos + 1,
+                                   window=cfg.attn_window)
     # expanded context: bitwise the solo prefill math per chunk token
     S = c_kv.shape[1]
     k_nope, v = _multi_proj(c_kv, (p["wuk"], p["wuv"]), rns)
@@ -697,7 +742,8 @@ def mla_decode_packed(p, x, cfg, cache, seg, pos, dec, *, rns=None):
         [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
                                   (N, S, H, m.qk_rope_dim))], axis=-1)
     q = jnp.concatenate([qn, qr], axis=-1)
-    exp_out, _lse = decode_attention(q, k, v, pos + 1)          # [N,1,H,vd]
+    exp_out, _lse = decode_attention(q, k, v, pos + 1,
+                                     window=cfg.attn_window)    # [N,1,H,vd]
     out = jnp.where(dec[:, None, None, None], abs_out,
                     exp_out.astype(jnp.float32))
     y = linear(p["wo"], out.reshape(1, N, -1).astype(x.dtype), rns)

@@ -295,6 +295,12 @@ def prefill_ragged(params, cfg, batch, lengths):
     installs the same per-token grid, so both prefill paths agree
     bit-for-bit.  The float path never consults the mask.
 
+    Sliding windows (``cfg.attn_window``) narrow the in-prompt receptive
+    field here exactly as they do at decode: the window mask rides the
+    causal mask inside models/attention.py, so a windowed prefill +
+    windowed paged decode agree with a windowed solo run even after the
+    serving scheduler has recycled the evicted positions' pages.
+
     Decoder-only, causal, no frontend (the continuous engine validates).
     """
     from repro.core.quantize import token_mask

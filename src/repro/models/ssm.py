@@ -52,11 +52,11 @@ def init_mamba(key, d_model: int, cfg: SSMConfig, dtype=jnp.float32):
         ks[2], d_in, dt_rank + 2 * cfg.d_state, axes=("mlp", None), dtype=dtype)
     p["dt_proj"], s["dt_proj"] = init_linear(
         ks[3], dt_rank, d_in, axes=(None, "mlp"), bias=True, dtype=dtype)
-    # init dt bias so softplus(dt) ~ [1e-3, 1e-1]
-    p["dt_proj"]["b"] = jnp.asarray(
-        # lint-ok: host-in-jit (seeded eager param init, never under jit)
-        np.log(np.expm1(np.exp(np.random.default_rng(0).uniform(
-            np.log(1e-3), np.log(1e-1), d_in)))), dtype)
+    # init dt bias so softplus(dt) ~ [1e-3, 1e-1]: draw log-uniform dt,
+    # invert the softplus (bias = log(expm1(dt)))
+    u = jax.random.uniform(ks[5], (d_in,), minval=np.log(1e-3),
+                           maxval=np.log(1e-1))
+    p["dt_proj"]["b"] = jnp.log(jnp.expm1(jnp.exp(u))).astype(dtype)
     a = np.tile(np.arange(1, cfg.d_state + 1, dtype=np.float32), (d_in, 1))
     p["A_log"] = jnp.asarray(np.log(a), dtype)
     s["A_log"] = ("mlp", None)

@@ -11,6 +11,14 @@ Modes:
   decode  -> one token through per-layer caches (attn KV / MLA latent /
              mamba state / rwkv state)
 
+``cfg.attn_window`` tightens every causal mode to a sliding window
+(query q attends keys [q - window + 1, q], exact-zero masking outside)
+without touching this file's control flow — the gqa/mla wrappers in
+models/attention.py read it and thread ``window=`` through all three
+attention modes and every decode/paged/packed variant, so train,
+prefill, decode and the serving engines all see the same receptive
+field (docs/serving.md).
+
 RNS execution: ``cfg.rns`` selects the digit-sliced datapath per target
 (attn/mlp/all).  Inside a block the projections share forward conversions
 (models/attention.py) and, with ``cfg.rns.defer``, the MLP's

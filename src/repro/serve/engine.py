@@ -114,6 +114,16 @@ class ServeConfig:
     token_budget: int = 64           # packed lanes per mixed step
     chunk_size: int | None = None    # max prefill tokens per row per step
     prefill_reserve: int | None = None   # lanes reserved for chunks
+    # sliding-window attention + cyclic KV page reuse: each row retains
+    # at most ``window_tokens`` of context (query q attends keys
+    # [q - window + 1, q], exact-zero masking below that) and the
+    # scheduler recycles the oldest full pages as rows outgrow the
+    # window — physical occupancy stays bounded by the window no matter
+    # how long the stream runs.  Positions stay absolute, so the stream
+    # is token-identical to a solo run with the same window.  Windowed
+    # rows never register prefix-cache blocks (every block is eventually
+    # evicted; the index only holds immutable live pages).
+    window_tokens: int | None = None
     # exactness audit at engine build: run the static magnitude-ledger
     # auditor (repro.analysis.ledger_audit) over every jitted phase this
     # config will serve and REFUSE to construct an engine whose RNS
@@ -184,6 +194,11 @@ class ServeConfig:
                     f"prefill_reserve={self.prefill_reserve}: must be in "
                     f"[0, token_budget={self.token_budget}) so decode "
                     "rows keep making progress")
+        if self.window_tokens is not None and self.window_tokens < 1:
+            raise ValueError(
+                f"window_tokens={self.window_tokens}: a sliding window "
+                "must retain at least the current token (use None for "
+                "full attention)")
 
 
 def _with_digit_ctx(fn, scfg: ServeConfig):
@@ -210,6 +225,14 @@ def _with_digit_ctx(fn, scfg: ServeConfig):
 
 
 def _apply_rns_policy(model_cfg, scfg: ServeConfig):
+    """Fold the serve-side execution overrides into the model config:
+    RNS backend/defer policy, and the sliding-window width (which both
+    engines thread to attention as ``cfg.attn_window`` — the solo
+    bucketed engine with the same ``window_tokens`` is the reference the
+    continuous stream is token-identical to)."""
+    if scfg.window_tokens is not None:
+        model_cfg = dataclasses.replace(model_cfg,
+                                        attn_window=scfg.window_tokens)
     if model_cfg.rns is None or (
             scfg.rns_backend is None and scfg.rns_defer is None):
         return model_cfg
@@ -381,16 +404,20 @@ class ContinuousEngine:
         bs = scfg.page_size
         max_blocks = -(-scfg.max_cache // bs)
         n_pages = scfg.n_pages or 1 + scfg.max_seqs * max_blocks
+        self.spec_window = scfg.spec_k + 1 if scfg.spec_decode else 1
+        resident = None
+        if scfg.window_tokens is not None:
+            # window + lookahead tokens straddle at most this many pages
+            resident = -(-(scfg.window_tokens + self.spec_window) // bs) + 1
         self.pcfg = kv.PagedCacheConfig(
             page_size=bs, n_pages=n_pages, max_seqs=scfg.max_seqs,
-            max_blocks=max_blocks)
+            max_blocks=max_blocks, resident_blocks=resident)
         self.prompt_pad = _round_up(
             scfg.prompt_pad or self.pcfg.tokens_per_seq, bs)
         if self.prompt_pad > self.pcfg.tokens_per_seq:
             raise ValueError(
                 f"prompt_pad {self.prompt_pad} exceeds per-seq cache "
                 f"capacity {self.pcfg.tokens_per_seq}")
-        self.spec_window = scfg.spec_k + 1 if scfg.spec_decode else 1
         self.chunked = scfg.chunked_prefill
         if self.chunked and cfg.rns is not None and cfg.rns_targets == "all" \
                 and "mla" in cfg.layer_types:
@@ -407,7 +434,8 @@ class ContinuousEngine:
                                chunked=self.chunked,
                                token_budget=scfg.token_budget,
                                chunk_size=scfg.chunk_size,
-                               prefill_reserve=reserve if self.chunked else 0)
+                               prefill_reserve=reserve if self.chunked else 0,
+                               window_tokens=scfg.window_tokens)
         self.cache = kv.make_paged_cache(
             cfg, self.pcfg, dtype=jnp.dtype(scfg.cache_dtype))
 
@@ -863,6 +891,7 @@ class ContinuousEngine:
             "cache_hit_tokens": sum(s.cached_tokens for s in plan.admitted),
             "pages_allocated_total": alloc.pages_allocated,
             "pages_shared_total": alloc.pages_shared,
+            "pages_window_evicted": self.sched.window_evictions,
             "spec_proposed": self._spec_proposed,
             "spec_accepted": self._spec_accepted,
             "rns_ops": self._rns_ops(0),
@@ -943,6 +972,7 @@ class ContinuousEngine:
             "cache_hit_tokens": sum(s.cached_tokens for s in plan.admitted),
             "pages_allocated_total": alloc.pages_allocated,
             "pages_shared_total": alloc.pages_shared,
+            "pages_window_evicted": self.sched.window_evictions,
             # speculative accounting (this step)
             "spec_proposed": self._spec_proposed,
             "spec_accepted": self._spec_accepted,
@@ -1006,6 +1036,8 @@ class ContinuousEngine:
             "cow_splits": sum(s["cow_splits"] for s in steps),
             "pages_allocated": self.sched.alloc.pages_allocated,
             "pages_shared": self.sched.alloc.pages_shared,
+            # sliding window: cumulative pages recycled by eviction
+            "pages_window_evicted": self.sched.window_evictions,
             "steps": steps,
         }
         return out, stats

@@ -68,20 +68,30 @@ class PagedCacheConfig:
     *total* tokens resident across all sequences — the knob that trades
     memory for concurrency.  Page 0 is reserved (trash), so the usable
     pool is ``n_pages - 1`` pages.
+
+    ``resident_blocks`` (optional) caps how many of a sequence's blocks
+    are ever physically resident at once: sliding-window serving evicts
+    pages behind the window, so a pool far smaller than ``max_blocks``
+    can still serve arbitrarily long rows.  It only relaxes the
+    feasibility check here — block tables keep ``max_blocks`` columns
+    (positions stay absolute; evicted entries point at trash).
     """
 
     page_size: int = 16
     n_pages: int = 129          # 128 usable + trash
     max_seqs: int = 8           # decode slots (R)
     max_blocks: int = 8         # logical blocks per sequence
+    resident_blocks: int | None = None   # physical bound (None = max_blocks)
 
     def __post_init__(self):
         if self.page_size < 1 or self.n_pages < 2:
             raise ValueError("need page_size >= 1 and n_pages >= 2")
-        if self.n_pages - 1 < self.max_blocks:
+        need = self.max_blocks if self.resident_blocks is None \
+            else min(self.max_blocks, self.resident_blocks)
+        if self.n_pages - 1 < need:
             raise ValueError(
                 f"pool of {self.n_pages - 1} usable pages cannot hold even "
-                f"one full sequence ({self.max_blocks} blocks)")
+                f"one resident sequence ({need} blocks)")
 
     @property
     def tokens_per_seq(self) -> int:
@@ -185,6 +195,17 @@ class PrefixCache:
     entries expose ``valid`` tokens; an adopting sequence reads only
     positions < ``valid`` (masked by its lengths) and COW-splits the page
     on its first write into it (see serve/scheduler.py).
+
+    **Liveness guard.**  Every hit is re-validated against the allocator
+    before it is returned: an entry whose page shows refcount 0 is STALE
+    — some holder over-released and the page went back to the pool (from
+    where it may be handed to an unrelated row and rewritten) while the
+    index still pointed at it.  Returning it to a byte-identical resubmit
+    would silently serve foreign KV.  Stale entries are dropped on sight
+    (:meth:`lookup`/:meth:`_get`, :meth:`evict`), skipped by
+    :meth:`peek_cached_tokens`, and refused by :meth:`insert` (a trash or
+    unallocated page is never indexed); ``stale_drops`` counts the
+    self-heals so tests can assert the guard fired.
     """
 
     def __init__(self, alloc: PageAllocator, page_size: int):
@@ -196,6 +217,7 @@ class PrefixCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.stale_drops = 0    # entries dropped by the liveness guard
         #: bumped whenever the entry set changes — peek results are only
         #: valid within one generation (the scheduler memoizes on it)
         self.generation = 0
@@ -209,8 +231,18 @@ class PrefixCache:
 
     def _get(self, key: bytes):
         e = self._entries.get(key)
-        if e is not None:
-            self._entries.move_to_end(key)      # LRU touch
+        if e is None:
+            return None
+        if self.alloc.refcount(e[0]) < 1:
+            # stale: the page was over-released back to the pool while
+            # the index held it — drop the entry so a byte-identical
+            # resubmit misses cleanly instead of adopting a page that
+            # may since have been reallocated and rewritten
+            del self._entries[key]
+            self.stale_drops += 1
+            self.generation += 1
+            return None
+        self._entries.move_to_end(key)      # LRU touch
         return e
 
     def lookup(self, tokens: np.ndarray):
@@ -251,10 +283,15 @@ class PrefixCache:
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         T = len(tokens)
         n = 0
+
+        def live(key):      # liveness-checked, mutation-free probe
+            e = self._entries.get(key)
+            return e is not None and self.alloc.refcount(e[0]) >= 1
+
         for i in range(T // self.bs):
-            if self._bytes(tokens, (i + 1) * self.bs) in self._entries:
+            if live(self._bytes(tokens, (i + 1) * self.bs)):
                 n += self.bs
-        if T % self.bs and self._bytes(tokens, T) in self._entries:
+        if T % self.bs and live(self._bytes(tokens, T)):
             n += T % self.bs
         return n
 
@@ -276,6 +313,8 @@ class PrefixCache:
             key = self._bytes(tokens, end)
             if key in self._entries or i >= len(pages):
                 continue
+            if pages[i] == TRASH_PAGE or self.alloc.refcount(pages[i]) < 1:
+                continue    # evicted/placeholder block: never index it
             self.alloc.incref([pages[i]])
             self._entries[key] = (pages[i], end)
             self._entries.move_to_end(key)
@@ -290,17 +329,24 @@ class PrefixCache:
         entries still shared by running sequences are kept (hot).
         Returns the number of pages freed."""
         freed = 0
+        dropped = 0
         for key in list(self._entries):
             if freed >= n_pages:
                 break
             page, _ = self._entries[key]
-            if self.alloc.refcount(page) != 1:
+            rc = self.alloc.refcount(page)
+            if rc == 0:                 # stale (over-released): self-heal
+                del self._entries[key]
+                self.stale_drops += 1
+                dropped += 1
+                continue
+            if rc != 1:
                 continue
             del self._entries[key]
             self.alloc.free([page])
             self.evictions += 1
             freed += 1
-        if freed:
+        if freed or dropped:
             self.generation += 1
         return freed
 

@@ -24,6 +24,15 @@ in-flight-batching decisions each engine step:
     ``preempt_shield`` times becomes immune: victim selection skips it
     while any unshielded candidate exists, which bounds how often
     page-growth priority can bounce the same request (starvation guard).
+  * **window eviction** — with ``window_tokens`` set, every step begins
+    by recycling each row's blocks that no future query can attend
+    (sliding-window attention: query ``q`` sees keys ``[q - W + 1, q]``).
+    Evicted block-table entries become the trash page — absolute
+    positions and block indices are preserved, the attention mask zeroes
+    the evicted positions exactly, and the freed pages serve the same
+    step's growth/admissions.  Windowed rows never register prefix-cache
+    blocks (every one is eventually evicted; the index only holds
+    immutable live pages).
   * **admission** — while a slot is free and the pool can hold the
     prompt plus one decode token.  With the prefix cache on, the waiting
     request with the longest cached prefix is admitted first (its shared
@@ -154,7 +163,7 @@ class Scheduler:
                  lookahead: int = 1, starvation_limit: int = 8,
                  preempt_shield: int = 2, chunked: bool = False,
                  token_budget: int = 0, chunk_size: int | None = None,
-                 prefill_reserve: int = 0):
+                 prefill_reserve: int = 0, window_tokens: int | None = None):
         self.pcfg = pcfg
         self.alloc = PageAllocator(pcfg.n_pages)
         self.prefix = (PrefixCache(self.alloc, pcfg.page_size)
@@ -166,6 +175,8 @@ class Scheduler:
         self.token_budget = token_budget
         self.chunk_size = chunk_size
         self.prefill_reserve = prefill_reserve
+        self.window = window_tokens     # sliding-window width (None = full)
+        self.window_evictions = 0       # pages recycled by _evict_window
         self._rr = 0                    # decode round-robin rotation
         self.waiting: collections.deque[Request] = collections.deque()
         self.running: dict[int, SeqState] = {}          # slot -> seq
@@ -185,9 +196,18 @@ class Scheduler:
                 f"request {req.rid}: prompt {T} + max_new {req.max_new} "
                 f"needs {need} blocks > per-seq capacity "
                 f"{self.pcfg.max_blocks} ({self.pcfg.tokens_per_seq} tokens)")
-        if need > self.alloc.n_pages - 1:
+        # pool feasibility: windowed rows recycle their oldest pages as
+        # they go, so their PHYSICAL footprint is bounded by the window
+        # (plus the write lookahead and block-alignment slack) no matter
+        # how long the stream runs — only the per-seq block-table bound
+        # above stays length-proportional
+        need_pool = need
+        if self.window is not None:
+            need_pool = min(need,
+                            -(-(self.window + self.lookahead) // bs) + 1)
+        if need_pool > self.alloc.n_pages - 1:
             raise ValueError(
-                f"request {req.rid} can never fit: needs {need} pages, "
+                f"request {req.rid} can never fit: needs {need_pool} pages, "
                 f"pool has {self.alloc.n_pages - 1}")
         self.waiting.append(req)
 
@@ -215,9 +235,31 @@ class Scheduler:
         the same schedule() call) has nothing to stash: its pages were
         never blitted, and registering them would poison the index with
         never-written KV that a readmission would then silently adopt.
+
+        Sliding-window rows never register anything: under a window EVERY
+        block eventually becomes evictable, and the prefix index's whole
+        contract is that entries point at live, immutable pages.
         """
-        if self.prefix is not None and seq.pages and seq.emitted:
+        if (self.prefix is not None and self.window is None
+                and seq.pages and seq.emitted):
             self.prefix.insert(seq.req.tokens, seq.pages)
+
+    def _release(self, seq: SeqState) -> None:
+        """Free a departing row's REAL pages and clear its state.
+
+        Window eviction leaves ``TRASH_PAGE`` placeholders in
+        ``seq.pages`` to preserve absolute block indexing; freeing those
+        through the allocator would raise (the trash page is never
+        allocated), and before this helper existed a row that was both
+        window-evicted and preempted/completed in the same step did
+        exactly that.  ``todo`` is dropped so a stale reference held by
+        the engine can never look prefilling again (readmission rebuilds
+        it from the original prompt).
+        """
+        self.alloc.free([pg for pg in seq.pages if pg != TRASH_PAGE])
+        seq.pages = []
+        seq.shared_blocks = set()
+        seq.todo = None
 
     def _preempt_youngest(self) -> int | None:
         """Evict the most recently admitted unshielded running seq.
@@ -235,17 +277,48 @@ class Scheduler:
                      key=lambda s: s.admit_seq)
         victim.req.n_preempts += 1
         self._stash_prefix(victim)
-        self.alloc.free(victim.pages)
-        # clear the stale SeqState's pages: the engine may still hold a
-        # reference (e.g. it preempts a sequence the same step it
-        # finishes) and must not re-free them through complete()
-        victim.pages = []
-        victim.shared_blocks = set()
+        # _release clears the stale SeqState's pages: the engine may
+        # still hold a reference (e.g. it preempts a sequence the same
+        # step it finishes) and must not re-free them through complete()
+        self._release(victim)
         self._free_slots.append(victim.slot)
         del self.running[victim.slot]
         # back to the FRONT: it has the oldest arrival among waiting peers
         self.waiting.appendleft(victim.req)
         return victim.rid
+
+    def _evict_window(self) -> None:
+        """Sliding window: recycle every block no future query can attend.
+
+        A query at absolute position ``q`` attends keys ``[q - window +
+        1, q]``.  The earliest query a row will ever run again sits at
+        ``qmin`` — the front of its chunked-prefill ``todo`` deque while
+        prefilling, else its current ``length`` — and later queries only
+        move the bound right, so block ``b`` (positions ``[b*bs, (b+1)*bs
+        - 1]``) is dead as soon as ``(b+1)*bs <= qmin - window + 1``.
+        Dead blocks' pages go back to the pool and the block-table entry
+        becomes the trash page: absolute block indexing is preserved
+        (``len(seq.pages)`` still marks the write frontier) and the
+        attention-side window mask already zeroes those positions
+        exactly, so whatever the recycled page holds next never
+        contributes.  Runs FIRST in :meth:`schedule` so recycled pages
+        serve this same step's growth and admissions.
+        """
+        if self.window is None:
+            return
+        bs = self.pcfg.page_size
+        for seq in self.running.values():
+            qmin = seq.todo[0] if seq.todo else seq.length
+            keep_from = qmin - self.window + 1
+            n_dead = min(max(keep_from, 0) // bs, len(seq.pages))
+            for b in range(n_dead):
+                pg = seq.pages[b]
+                if pg == TRASH_PAGE:
+                    continue                        # already recycled
+                self.alloc.free([pg])
+                seq.pages[b] = TRASH_PAGE
+                seq.shared_blocks.discard(b)
+                self.window_evictions += 1
 
     def _grow(self, preempted: list[int]) -> bool:
         """Give every running row page(s) for the tokens it writes next.
@@ -306,7 +379,7 @@ class Scheduler:
                 if self.running.get(seq.slot) is not seq:
                     break                           # evicted mid-split
                 src = seq.pages[b]
-                if self.alloc.refcount(src) <= 1:
+                if src == TRASH_PAGE or self.alloc.refcount(src) <= 1:
                     continue
                 fresh = self._alloc(1)
                 while fresh is None:
@@ -367,7 +440,22 @@ class Scheduler:
             n_blocks = -(-(len(req.tokens) + 1) // bs)
             shared: list[int | None] = [None] * n_blocks
             n_cached = 0
-            if self.prefix is not None:
+            # sliding-window rows never adopt (nothing registers under a
+            # window, so the lookup could only miss) — and blocks already
+            # outside the window at admission get the trash page instead
+            # of a real allocation: a whole-prompt prefill computes its
+            # in-prompt attention from the token stream, not the paged
+            # cache, so KV the first decode query can't see need never
+            # land on a real page (chunked prefill reads the cache, but
+            # its ``todo`` starts at position 0 so nothing is dead yet —
+            # _evict_window recycles as the chunks drain)
+            dead: set[int] = set()
+            if self.window is not None:
+                if not self.chunked:
+                    keep_from = len(req.tokens) - self.window + 1
+                    dead = {b for b in range(n_blocks)
+                            if (b + 1) * bs <= keep_from}
+            elif self.prefix is not None:
                 hit, n_cached = self.prefix.lookup(req.tokens)
                 shared[: len(hit)] = hit
             share_map = {b: pg for b, pg in enumerate(shared)
@@ -378,12 +466,13 @@ class Scheduler:
             # reference it could be freed and handed straight back as one
             # of the "fresh" pages below (one physical page, two blocks)
             self.alloc.incref(list(share_map.values()))
-            fresh = self._alloc(n_blocks - len(share_map))
+            fresh = self._alloc(n_blocks - len(share_map) - len(dead))
             if fresh is None:
                 self.alloc.free(list(share_map.values()))   # undo adoption
                 break                               # head-of-line blocks
             fi = iter(fresh)
-            pages = [share_map[b] if b in share_map else next(fi)
+            pages = [share_map[b] if b in share_map
+                     else TRASH_PAGE if b in dead else next(fi)
                      for b in range(n_blocks)]
             del self.waiting[idx]
             self._peek_memo.pop(req.rid, None)
@@ -408,9 +497,11 @@ class Scheduler:
         return admitted
 
     def schedule(self) -> StepPlan:
-        """Growth (with LIFO preemption), admission, then COW splits."""
+        """Window eviction, growth (with LIFO preemption), admission,
+        then COW splits."""
         for req in self.waiting:
             req.wait_steps += 1
+        self._evict_window()
         preempted: list[int] = []
         grew = self._grow(preempted)
         admitted = self._admit()
@@ -487,7 +578,7 @@ class Scheduler:
         (the incremental analogue of :meth:`register_prefix`: a block
         becomes discoverable as soon as its last chunk lands; the partial
         tail still waits for :meth:`_stash_prefix`)."""
-        if self.prefix is None:
+        if self.prefix is None or self.window is not None:
             return
         bs = self.pcfg.page_size
         n_full = min(seq.resident, len(seq.req.tokens)) // bs
@@ -499,8 +590,10 @@ class Scheduler:
         """Called by the engine right after a prefill blit: the prompt's
         FULL blocks now hold final KV and become discoverable.  The
         partial tail stays private until the row departs
-        (:meth:`_stash_prefix`) — the producer keeps writing into it."""
-        if self.prefix is None:
+        (:meth:`_stash_prefix`) — the producer keeps writing into it.
+        Sliding-window rows register nothing (see :meth:`_stash_prefix`:
+        every windowed block is eventually evicted)."""
+        if self.prefix is None or self.window is not None:
             return
         T = len(seq.req.tokens)
         n_full = T // self.pcfg.page_size
@@ -519,9 +612,7 @@ class Scheduler:
         if self.running.get(seq.slot) is not seq:
             return
         self._stash_prefix(seq)
-        self.alloc.free(seq.pages)
-        seq.pages = []
-        seq.shared_blocks = set()
+        self._release(seq)
         self._free_slots.append(seq.slot)
         del self.running[seq.slot]
 

@@ -30,7 +30,7 @@ import jax
 from repro.configs.base import get_config
 from repro.core.rns_matmul import RnsDotConfig
 from repro.models import model as M
-from repro.serve.engine import ContinuousEngine, ServeConfig
+from repro.serve.engine import ContinuousEngine, Engine, ServeConfig
 
 BACKENDS = ("reference", "pallas_interpret", "pallas_fused_interpret")
 
@@ -80,6 +80,20 @@ SCENARIOS = {
         lens=(5, 18), mixed=True,
         kw=dict(max_seqs=2, chunked_prefill=True, token_budget=16,
                 chunk_size=8, spec_decode=True, spec_k=3)),
+    # sliding-window attention with cyclic KV page reuse: rows outgrow
+    # the 8-token window mid-decode, the scheduler frees the dead pages
+    # (block-table entries point at trash), and attention masks the
+    # evicted positions with exact zeros — the stream must stay
+    # bit-identical across backends while pages are being recycled
+    "window_decode": dict(
+        lens=(5, 12), evicts=True,
+        kw=dict(max_seqs=2, window_tokens=8, max_new_tokens=6)),
+    # window eviction racing chunked prefill: the long prompt's early
+    # chunks write pages that die before its decode begins
+    "window_chunked": dict(
+        lens=(5, 18), mixed=True, evicts=True,
+        kw=dict(max_seqs=2, chunked_prefill=True, token_budget=16,
+                chunk_size=8, window_tokens=8)),
 }
 
 
@@ -122,6 +136,8 @@ def test_backend_matrix_token_identical(rns_model, scenario):
     ref_res, ref_ops, ref_stats = _run(cfg, params, spec, "reference")
     if spec.get("preempts"):
         assert ref_stats["n_preemptions"] > 0    # scenario really fired
+    if spec.get("evicts"):
+        assert ref_stats["pages_window_evicted"] > 0
     if spec.get("same_prefix"):
         assert ref_stats["cache_hit_tokens"] > 0
         assert ref_stats["cow_splits"] > 0
@@ -137,6 +153,58 @@ def test_backend_matrix_token_identical(rns_model, scenario):
         res, ops, _ = _run(cfg, params, spec, backend)
         assert res == ref_res, (scenario, backend)
         assert ops == ref_ops, (scenario, backend)
+
+
+@pytest.mark.parametrize("chunked", [False, True])
+@pytest.mark.parametrize("family", ["float_gqa", "rns_gqa", "float_mla"])
+def test_windowed_token_identity(rns_model, family, chunked):
+    """Windowed continuous serving vs a windowed SOLO run: bit-identical.
+
+    The solo bucketed engine keeps every position resident in its dense
+    cache and masks outside the window; the continuous engine has
+    physically recycled the evicted pages (block-table entries point at
+    the trash page, whose contents are arbitrary).  Identity between the
+    two proves the exact-zero masking — any leakage of an evicted
+    position would read trash and move tokens.  float/rns x gqa/mla x
+    chunked on/off; the rns family runs all three backends.
+    """
+    W, max_new = 8, 6
+    if family == "rns_gqa":
+        cfg, params = rns_model
+        backends = BACKENDS
+    elif family == "float_gqa":
+        cfg = get_config("smollm-135m", smoke=True)
+        params = M.init_model(jax.random.PRNGKey(0), cfg)[0]
+        backends = BACKENDS[:1]
+    else:
+        cfg = dataclasses.replace(get_config("deepseek-v2-236b", smoke=True),
+                                  mlp_types=("dense",) * 4, moe=None)
+        params = M.init_model(jax.random.PRNGKey(1), cfg)[0]
+        backends = BACKENDS[:1]
+    rng = np.random.default_rng(23)
+    prompts = [rng.integers(1, cfg.vocab, (L,)).astype(np.int32)
+               for L in (5, 12)]
+    kw = dict(max_seqs=2, page_size=8, max_new_tokens=max_new,
+              window_tokens=W)
+    if chunked:
+        kw.update(chunked_prefill=True, token_budget=16, chunk_size=8)
+    ref = None
+    for backend in backends:
+        eng = ContinuousEngine(params, cfg, ServeConfig(
+            max_cache=24, rns_backend=backend, **kw))
+        res, stats = eng.run(prompts)
+        assert stats["pages_window_evicted"] > 0   # pages really recycled
+        toks = {i: v.tolist() for i, v in res.items()}
+        if ref is None:
+            solo = Engine(params, cfg, ServeConfig(
+                max_cache=24, max_new_tokens=max_new, window_tokens=W,
+                rns_backend=backend))
+            for i, p in enumerate(prompts):
+                assert toks[i] == solo.generate(p[None])[0].tolist(), (
+                    family, chunked, i)
+            ref = toks
+        else:
+            assert toks == ref, (family, chunked, backend)
 
 
 @pytest.mark.parametrize("defer", [False, True])

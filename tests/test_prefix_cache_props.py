@@ -159,6 +159,105 @@ def test_prefix_lookup_never_aliases_distinct_prefixes(seed, la, lb):
         for b, pg in enumerate(shared) if pg is not None)
 
 
+# ------------------------------------------------------------ liveness ----
+def test_stale_entries_self_heal_and_resubmit_misses():
+    """Regression (staleness under eviction): lookup results must be
+    backed by live, refcounted pages.  Adversarial trace — register a
+    prompt, yank the index's own references out from under it (the
+    over-free bug class the scheduler's ``_release`` discipline now
+    prevents at the source), then resubmit: the recycled pages must
+    never be served as cached KV; the dead entries self-heal instead."""
+    bs = 4
+    alloc = PageAllocator(8)
+    cache = PrefixCache(alloc, bs)
+    tok = np.arange(1, 9, dtype=np.int32)        # exactly 2 full blocks
+    pages = alloc.alloc(2)
+    cache.insert(tok, pages)                     # index: one ref per block
+    alloc.free(pages)                            # the producer departs
+    assert [alloc.refcount(p) for p in pages] == [1, 1]
+    live, n = cache.lookup(tok)
+    assert live == pages and n == 8              # healthy: still served
+    alloc.free(pages)                            # adversarial over-free
+    assert alloc.n_free == 7                     # pages back in the pool
+    gen = cache.generation
+    assert cache.peek_cached_tokens(tok) == 0    # probe sees them dead...
+    assert cache.generation == gen               # ...without mutating
+    shared, n = cache.lookup(tok)
+    assert shared == [None, None] and n == 0     # stale: dropped, not served
+    assert cache.stale_drops == 2
+    assert cache.generation > gen                # peek memos invalidated
+    # resubmission re-registers cleanly: served again, live refs
+    # (producer's + the index's)
+    cache.insert(tok, alloc.alloc(2))
+    shared, n = cache.lookup(tok)
+    assert n == 8 and all(alloc.refcount(p) == 2 for p in shared)
+
+
+# ---------------------------------------------- scheduler-level sharing ---
+@given(st.lists(st.integers(1, 14), min_size=2, max_size=5),
+       st.sampled_from([None, 5, 8]),
+       st.booleans())
+def test_refcounts_never_negative_under_evict_cow_preempt(lens, window,
+                                                          same_prefix):
+    """Interleaved window evictions, COW splits and LIFO preemptions (a
+    pool of 5 pages for up to 5 rows forces all three) against the
+    allocator invariants: no refcount ever dips negative, every page a
+    running row's block table points at stays live, and free pages +
+    referenced pages partition the pool after every scheduler call.
+    ``window=None`` runs the prefix-sharing/COW side; a set window runs
+    the eviction side (where registration is disabled by design)."""
+    from repro.serve.kv_cache import PagedCacheConfig
+    from repro.serve.scheduler import Request, Scheduler
+
+    bs, max_blocks = 4, 4
+    pcfg = PagedCacheConfig(page_size=bs, n_pages=1 + max_blocks + 1,
+                            max_seqs=2, max_blocks=max_blocks,
+                            resident_blocks=None if window is None else 3)
+    sched = Scheduler(pcfg, prefix_cache=window is None, chunked=True,
+                      token_budget=6, chunk_size=bs, prefill_reserve=3,
+                      window_tokens=window)
+    rng = np.random.default_rng(11)
+    base = rng.integers(1, 9, (14,)).astype(np.int32)
+    for i, L in enumerate(lens):
+        tok = (base[:L].copy() if same_prefix
+               else rng.integers(1, 99, (L,)).astype(np.int32))
+        sched.submit(Request(rid=i, tokens=tok, max_new=2))
+
+    def check():
+        for s in sched.running.values():
+            for pg in s.pages:
+                if pg != TRASH_PAGE:
+                    assert sched.alloc.refcount(pg) >= 1, pg
+        n_ref = 0
+        for pg in range(1, pcfg.n_pages):
+            rc = sched.alloc.refcount(pg)
+            assert rc >= 0, pg
+            n_ref += rc > 0
+        assert sched.alloc.n_free + n_ref == pcfg.n_pages - 1
+
+    steps = 0
+    while sched.has_work:
+        steps += 1
+        assert steps <= 400, "scheduler loop did not terminate"
+        sched.schedule()
+        check()
+        for s in sched.plan_mixed(1):
+            seq = s.seq
+            if s.kind == "chunk":
+                sched.register_chunks(seq)
+                if s.last:
+                    seq.emitted = [1]
+                    seq.last_token = 1
+            else:
+                seq.emitted.append(1)
+                seq.length += 1
+        for seq in list(sched.running.values()):
+            if seq.emitted and len(seq.emitted) >= seq.req.max_new:
+                sched.complete(seq)
+                check()
+    check()
+
+
 @given(st.integers(min_value=0, max_value=2**31 - 1))
 def test_prefix_partial_tail_requires_exact_whole_prompt(seed):
     """The partial-tail entry hits only on an exact whole-prompt match:

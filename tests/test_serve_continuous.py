@@ -191,6 +191,62 @@ def test_preempt_same_step_as_finish_no_double_free():
     assert len(sched._free_slots) + len(sched.running) == pcfg.max_seqs
 
 
+def test_window_evict_and_preempt_same_step_readmits_cleanly():
+    """Regression: a row window-evicted AND LIFO-preempted in one step.
+
+    Window eviction leaves TRASH_PAGE placeholders in ``seq.pages``;
+    the preemption path (and a later stale ``complete``) must release
+    only the real pages — freeing the trash page raises, and a double
+    free of a cycled page would hand it to two rows.  The victim must
+    readmit cleanly (fresh pages, no dangling prefill state) and the
+    free list must balance page-for-page throughout.
+    """
+    from repro.serve.kv_cache import TRASH_PAGE, PagedCacheConfig
+    from repro.serve.scheduler import Request, Scheduler
+
+    pcfg = PagedCacheConfig(page_size=4, n_pages=6, max_seqs=2,
+                            max_blocks=6, resident_blocks=3)
+    sched = Scheduler(pcfg, window_tokens=6)
+    sched.submit(Request(rid=0, tokens=np.ones(4, np.int32), max_new=20))
+    sched.submit(Request(rid=1, tokens=np.ones(4, np.int32), max_new=20))
+    plan = sched.schedule()
+    assert len(plan.admitted) == 2
+    old, young = plan.admitted
+    # both rows decode to length 12: the 6-token window makes block 0 of
+    # each row dead (keep_from = 7), and growth then wants 2 more pages
+    # per row -- more than eviction freed, so the youngest is preempted
+    # WHILE its page list still carries a trash placeholder
+    for s in (old, young):
+        s.length = 12
+        s.emitted = [1] * 8
+    plan2 = sched.schedule()
+    assert sched.window_evictions == 2
+    assert old.pages[0] == TRASH_PAGE       # eviction really cycled pages
+    assert plan2.preempted == [young.rid]   # ...and did not raise on free
+    assert young.pages == [] and young.todo is None
+    # admission ran after the preemption in the SAME step: the victim is
+    # already back, as a FRESH state on real pages
+    assert [s.rid for s in plan2.admitted] == [young.rid]
+    fresh = plan2.admitted[0]
+    assert fresh is not young
+    assert fresh.pages and all(pg != TRASH_PAGE for pg in fresh.pages)
+    # page-for-page conservation across evict + preempt + readmit
+    live = sum(1 for s in sched.running.values()
+               for pg in s.pages if pg != TRASH_PAGE)
+    assert sched.alloc.n_free + live == pcfg.n_pages - 1
+    # the engine may still hold the stale victim: complete() is a no-op
+    # (the slot's registered occupant is the fresh state, not it)
+    n_free = sched.alloc.n_free
+    sched.complete(young)
+    assert sched.alloc.n_free == n_free
+    assert sched.running[fresh.slot] is fresh
+    # drain: both rows release every page exactly once
+    sched.complete(old)
+    sched.complete(fresh)
+    assert sched.alloc.n_free == pcfg.n_pages - 1
+    assert len(sched._free_slots) == pcfg.max_seqs
+
+
 def test_rns_policy_and_per_step_op_counts():
     from repro.core.rns_matmul import RnsDotConfig
 
